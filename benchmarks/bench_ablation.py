@@ -1,0 +1,85 @@
+"""Ablation: the paper's §3 open questions, answered empirically.
+
+  * How does convergence degrade with SSP staleness s?         (bounded delay)
+  * …with downpour push interval?                                (unbounded-ish)
+  * …with gossip mixing frequency?                    (partial communication)
+  * Does staleness-aware LR scaling ([40]) help at high staleness?
+  * Does DGC momentum correction ([54]) beat plain error feedback at 1%?
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import strategies as ST
+from repro.core.comm import LocalComm
+from repro.core.compression import get_compressor
+from repro.data.pipeline import DataConfig, worker_batches
+from repro.models import transformer as T
+from repro.optim import adam
+from repro.train.loop import (init_train_state, make_loss_fn,
+                              make_replica_train_step)
+
+W, STEPS = 4, 100
+
+
+def _cfg():
+    import dataclasses
+    return dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(), num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=128, vocab_size=64)
+
+
+def _final_loss(strategy):
+    cfg = _cfg()
+    comm = LocalComm(W)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                      batch_per_worker=4, seed=0)
+    lf = make_loss_fn(cfg, remat=False)
+    opt = adam(3e-3)
+    params = comm.replicate(T.init_model(jax.random.PRNGKey(0), cfg))
+    state = init_train_state(params, opt, strategy, comm)
+    step = make_replica_train_step(
+        lambda p, t_: lf(p, {"tokens": t_, "labels": t_}), opt, strategy, comm)
+    losses = []
+    for t in range(STEPS):
+        state, m = step(state, worker_batches(dcfg, W, t))
+        losses.append(float(m["loss"]))
+    return float(np.mean(losses[-10:])), float(m["replica_divergence"])
+
+
+def run():
+    base, _ = _final_loss(ST.sync())
+    emit("ablation/sync_reference", 0.0, f"final_loss={base:.4f}")
+    for s in (1, 4, 8, 16):
+        fl, div = _final_loss(ST.ssp(staleness=s))
+        emit(f"ablation/ssp_s{s}", 0.0,
+             f"final_loss={fl:.4f};delta_vs_sync={fl-base:+.4f};div={div:.2e}")
+    fl_plain, _ = _final_loss(ST.ssp(staleness=16))
+    fl_aware, _ = _final_loss(ST.ssp(staleness=16, staleness_aware_lr=True))
+    emit("ablation/staleness_aware_lr_s16", 0.0,
+         f"plain={fl_plain:.4f};aware={fl_aware:.4f};"
+         f"aware_helps={fl_aware < fl_plain}")
+    for pe in (2, 8, 16):
+        fl, div = _final_loss(ST.downpour(push_every=pe))
+        emit(f"ablation/downpour_p{pe}", 0.0,
+             f"final_loss={fl:.4f};delta_vs_sync={fl-base:+.4f};div={div:.2e}")
+    for me in (1, 4, 16):
+        fl, div = _final_loss(ST.gossip(mix_every=me))
+        emit(f"ablation/gossip_m{me}", 0.0,
+             f"final_loss={fl:.4f};delta_vs_sync={fl-base:+.4f};div={div:.2e}")
+    fl, _ = _final_loss(ST.easgd(alpha=0.2, sync_every=4))
+    emit("ablation/easgd", 0.0, f"final_loss={fl:.4f};delta_vs_sync={fl-base:+.4f}")
+    topk = get_compressor("topk", ratio=0.01)
+    fl_ef, _ = _final_loss(ST.sync(compressor=topk))
+    fl_dgc, _ = _final_loss(ST.sync_dgc(topk))
+    emit("ablation/topk1pct_ef_vs_dgc", 0.0,
+         f"plain_ef={fl_ef:.4f};dgc_momentum={fl_dgc:.4f};"
+         f"dgc_helps={fl_dgc < fl_ef}")
+
+
+if __name__ == "__main__":
+    run()

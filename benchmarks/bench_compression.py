@@ -1,0 +1,85 @@
+"""Benchmark: gradient compression (paper §2.2.4) — wire bytes vs final
+loss, with error feedback.  Validates the ~32× (1-bit) and ~50–100× (top-k)
+reductions at bounded accuracy cost, and times the compression ops."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import strategies as ST
+from repro.core.comm import LocalComm
+from repro.core.compression import get_compressor, wire_bytes
+from repro.data.pipeline import DataConfig, worker_batches
+from repro.models import transformer as T
+from repro.optim import adam
+from repro.train.loop import (init_train_state, make_loss_fn,
+                              make_replica_train_step)
+from repro.configs import get_config
+
+W, STEPS = 4, 120
+
+
+def _cfg():
+    import dataclasses
+    return dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(), num_layers=2, d_model=64,
+        num_heads=2, num_kv_heads=1, head_dim=32, d_ff=128, vocab_size=64)
+
+
+def run():
+    cfg = _cfg()
+    comm = LocalComm(W)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                      batch_per_worker=4, seed=0)
+    lf = make_loss_fn(cfg, remat=False)
+
+    def loss_fn(p, toks):
+        return lf(p, {"tokens": toks, "labels": toks})
+
+    base_bytes = None
+    base_loss = None
+    for name, comp in [
+        ("none", None),
+        ("int8", get_compressor("int8")),
+        ("onebit", get_compressor("onebit")),
+        ("topk_1pct", get_compressor("topk", ratio=0.01)),
+    ]:
+        opt = adam(3e-3)
+        strat = ST.sync(compressor=comp)
+        params = comm.replicate(T.init_model(jax.random.PRNGKey(0), cfg))
+        state = init_train_state(params, opt, strat, comm)
+        step = make_replica_train_step(loss_fn, opt, strat, comm)
+        t0, losses, wire = time.perf_counter(), [], 0.0
+        for t in range(STEPS):
+            state, m = step(state, worker_batches(dcfg, W, t))
+            losses.append(float(m["loss"]))
+            wire += float(m["wire_bytes"])
+        dt = time.perf_counter() - t0
+        final = float(np.mean(losses[-10:]))
+        per_step = wire / STEPS
+        if name == "none":
+            base_bytes, base_loss = per_step, final
+        emit(f"compression/{name}", dt / STEPS * 1e6,
+             f"final_loss={final:.4f};wireB_per_step={per_step:.0f};"
+             f"reduction_x={base_bytes/per_step:.1f};"
+             f"loss_delta={final-base_loss:+.4f}")
+
+    # raw op timing (pure-jnp reference path, which is what executes on CPU)
+    from repro.kernels import ref
+    g = jax.random.normal(jax.random.PRNGKey(0), (4096, 256))
+    r = jnp.zeros_like(g)
+    f_1bit = jax.jit(lambda g, r: ref.onebit_quant_ref(g, r))
+    emit("compression/op_onebit_1M", time_fn(f_1bit, g, r),
+         "elements=1048576;oracle=ref.onebit_quant_ref")
+    f_topk = jax.jit(lambda g: ref.topk_sparsify_ref(g, 8))
+    emit("compression/op_topk_1M", time_fn(f_topk, g),
+         "elements=1048576;k=8/256;oracle=ref.topk_sparsify_ref")
+
+
+if __name__ == "__main__":
+    run()

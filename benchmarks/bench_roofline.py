@@ -1,0 +1,40 @@
+"""Benchmark: roofline table from the multi-pod dry-run artifacts
+(results_singlepod.json / results_multipod.json, produced by
+``python -m repro.launch.dryrun --all [--multi-pod] --out ...``)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run():
+    for fname, mesh in (("results_singlepod.json", "16x16"),
+                        ("results_multipod.json", "2x16x16")):
+        path = os.path.join(ROOT, fname)
+        if not os.path.exists(path):
+            emit(f"roofline/{mesh}", 0.0, "missing=run repro.launch.dryrun --all")
+            continue
+        rows = json.load(open(path))
+        ok = [r for r in rows if r["status"] == "ok"]
+        for r in ok:
+            ro = r["roofline"]
+            emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                 ro["compute_s"] * 1e6,
+                 f"dominant={ro['dominant']};compute_ms={ro['compute_s']*1e3:.2f};"
+                 f"memory_ms={ro['memory_s']*1e3:.2f};"
+                 f"collective_ms={ro['collective_s']*1e3:.2f};"
+                 f"useful_flop_ratio={ro['useful_flops_ratio']:.2f};"
+                 f"gb_per_device={r['memory']['peak_per_device_gb']:.2f}")
+        nskip = sum(1 for r in rows if r["status"] == "skip")
+        nerr = sum(1 for r in rows if r["status"] == "error")
+        emit(f"roofline/{mesh}/summary", 0.0,
+             f"ok={len(ok)};skip={nskip};error={nerr}")
+
+
+if __name__ == "__main__":
+    run()

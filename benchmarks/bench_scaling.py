@@ -1,0 +1,39 @@
+"""Benchmark: communication-volume scaling (paper §2.2.4's "the gradient
+set easily reaches a few hundred MB").
+
+Reports the gradient-set size of every assigned architecture and the
+per-step wire bytes per strategy × worker count × compressor — the
+quantity the FAST design exists to manage."""
+
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core.compression import get_compressor
+from repro.launch.dryrun import ALL_ARCHS
+
+
+def run():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        n = cfg.param_count()
+        grad_mb = n * 4 / 2**20  # f32 gradient set, the paper's framing
+        emit(f"scaling/gradset_{arch}", 0.0,
+             f"params={n};grad_set_MB={grad_mb:.0f};"
+             f"paper_claim_few_hundred_MB={'exceeded' if grad_mb > 500 else 'matched'}")
+    # wire bytes per sync round per worker under each compressor
+    n = get_config("gemma3-1b").param_count()
+    for comp_name, comp in [
+        ("none", get_compressor("none")),
+        ("int8", get_compressor("int8")),
+        ("onebit", get_compressor("onebit")),
+        ("topk_1pct", get_compressor("topk", ratio=0.01)),
+    ]:
+        wire_mb = n * comp.wire_bits_per_element / 8 / 2**20
+        emit(f"scaling/wire_gemma3-1b_{comp_name}", 0.0,
+             f"wire_MB_per_round={wire_mb:.1f};"
+             f"reduction_x={32.0/comp.wire_bits_per_element:.1f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper claim/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_strategies   — §3 spectrum convergence (sync/ssp/downpour/gossip)
+  bench_compression  — §2.2.4 quantization + sparsification, error feedback
+  bench_consistency  — §3 Statement 1 / Figure 3
+  bench_staleness    — §3 staleness ⇒ implicit momentum (Mitliagkas)
+  bench_scaling      — §2.2.4 gradient-set sizes / wire volumes per arch
+  bench_roofline     — dry-run roofline table (deliverable g)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_ablation, bench_compression,
+                            bench_consistency, bench_roofline, bench_scaling,
+                            bench_staleness, bench_strategies)
+
+    print("name,us_per_call,derived")
+    mods = [
+        ("strategies", bench_strategies),
+        ("compression", bench_compression),
+        ("consistency", bench_consistency),
+        ("staleness", bench_staleness),
+        ("scaling", bench_scaling),
+        ("ablation", bench_ablation),
+        ("roofline", bench_roofline),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    failed = 0
+    for name, mod in mods:
+        if only and only != name:
+            continue
+        try:
+            mod.run()
+        except Exception:  # noqa: BLE001 — keep the harness sweeping
+            failed += 1
+            traceback.print_exc()
+            print(f"{name}/ERROR,0,failed")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Batched serving demo: wave-scheduled decode engine over a reduced
+gemma3 (sliding-window) model.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.serve.engine import DecodeEngine, Request, greedy_generate
+
+cfg = get_config("gemma3-1b").reduced()
+params = T.init_model(jax.random.PRNGKey(0), cfg)
+
+engine = DecodeEngine(params, cfg, batch_slots=4, max_seq=64)
+rng = np.random.default_rng(0)
+for i in range(10):
+    lp = int(rng.integers(2, 6))
+    engine.submit(Request(
+        rid=i, prompt=rng.integers(0, cfg.vocab_size, lp).astype(np.int32),
+        max_new_tokens=int(rng.integers(4, 9))))
+
+t0 = time.perf_counter()
+done = engine.run()
+dt = time.perf_counter() - t0
+tokens = sum(len(r.generated) for r in done)
+print(f"served {len(done)} requests, {tokens} tokens, "
+      f"{engine.steps} decode steps in {dt:.1f}s "
+      f"({tokens/dt:.1f} tok/s on CPU interpret)")
+for r in done[:3]:
+    print(f"  req {r.rid}: prompt {list(r.prompt)} -> {r.generated}")
+
+# sanity: single-request path agrees with the reference generator
+ref = greedy_generate(params, cfg, done[0].prompt,
+                      max_new_tokens=len(done[0].generated))
+print("engine matches reference:", ref == done[0].generated)

@@ -1,0 +1,38 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dry-run JSON.
+
+    PYTHONPATH=src python scripts/gen_tables.py results_singlepod.json
+"""
+
+import json
+import sys
+
+
+def table(path):
+    rows = json.load(open(path))
+    out = ["| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+           "dominant | useful-FLOP | GiB/dev |",
+           "|---|---|---:|---:|---:|---|---:|---:|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status'].upper()} | — | — |")
+            continue
+        ro, mem = r["roofline"], r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']*1e3:.2f} | "
+            f"{ro['memory_s']*1e3:.2f} | {ro['collective_s']*1e3:.2f} | "
+            f"{ro['dominant']} | {ro['useful_flops_ratio']:.2f} | "
+            f"{mem['peak_per_device_gb']:.2f} |")
+    ok = sum(1 for r in rows if r["status"] == "ok")
+    skip = sum(1 for r in rows if r["status"] == "skip")
+    err = sum(1 for r in rows if r["status"] == "error")
+    out.append("")
+    out.append(f"({ok} ok / {skip} skip / {err} error)")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for p in sys.argv[1:]:
+        print(f"### {p}\n")
+        print(table(p))
+        print()

@@ -1,0 +1,76 @@
+"""npz-based pytree checkpointer (no orbax dependency).
+
+Shard-aware in the practical sense: arrays are gathered to host (fully
+addressable on save) and restored with ``jax.device_put`` against the
+caller-provided sharding template, so a restore can re-shard onto a
+different mesh — the "redistribute training" requirement of the paper's
+enterprise story (§1).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}.{i}")
+    else:
+        yield prefix, tree
+
+
+def _unflatten_into(template, flat: dict, prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(template[k], flat,
+                                   f"{prefix}.{k}" if prefix else str(k))
+                for k in template}
+    if isinstance(template, (list, tuple)):
+        t = type(template)
+        return t(_unflatten_into(v, flat, f"{prefix}.{i}")
+                 for i, v in enumerate(template))
+    return flat[prefix]
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = {}
+    for path, leaf in _flatten(tree):
+        arrays[path] = np.asarray(jax.device_get(leaf))
+    fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    np.savez_compressed(fname, **arrays)
+    with open(os.path.join(ckpt_dir, "meta.json"), "w") as f:
+        json.dump({"latest": step}, f)
+    return fname
+
+
+def latest_step(ckpt_dir: str):
+    steps = []
+    if not os.path.isdir(ckpt_dir):
+        return None
+    for f in os.listdir(ckpt_dir):
+        m = re.match(r"ckpt_(\d+)\.npz$", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None):
+    """Restore into the structure of ``template``; if ``shardings`` (same
+    structure) is given, leaves are placed with those shardings."""
+    fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    data = np.load(fname)
+    flat = {k: data[k] for k in data.files}
+    tree = _unflatten_into(template, flat)
+    if shardings is not None:
+        tree = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree

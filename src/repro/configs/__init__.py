@@ -1,0 +1,8 @@
+from repro.configs.base import (  # noqa: F401
+    FULL_ATTENTION,
+    LayerSpec,
+    ModelConfig,
+    get_config,
+    list_configs,
+    register,
+)

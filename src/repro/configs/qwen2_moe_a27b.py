@@ -1,0 +1,24 @@
+"""qwen2-moe-a2.7b [moe]: 24L d_model=2048 16H (kv=16) expert d_ff=1408
+vocab=151936, 60 routed experts top-4 + 4 shared experts.
+[hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+
+from repro.configs.base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,               # routed-expert hidden dim
+    moe_d_ff=1408,
+    vocab_size=151_936,
+    qkv_bias=True,
+    tie_embeddings=False,
+    num_experts=60,
+    top_k=4,
+    num_shared_experts=4,
+    moe_every=1,
+))

@@ -1,0 +1,3 @@
+from repro.core.comm import Comm, HierComm, LocalComm, LocalHierComm, ShardComm  # noqa: F401
+from repro.core.compression import get_compressor  # noqa: F401
+from repro.core.strategies import Strategy, get_strategy  # noqa: F401

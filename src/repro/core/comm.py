@@ -1,0 +1,130 @@
+"""The FAST "tensor-moving interface" (paper §4), adapted to JAX/TPU.
+
+The paper's central design move is to decouple *parallel coordination* from
+*node-level execution* behind a general-purpose tensor-moving interface.
+Here that interface is ``Comm``: strategies (core/strategies.py) are written
+against it and run unchanged in two realizations:
+
+  * ``LocalComm``  — every worker's tensors are stacked on a leading axis W.
+    Collectives are axis-0 reductions / rolls.  Used for CPU tests,
+    convergence benchmarks, and vmap-based simulation of large worker
+    counts.  Deterministic and single-device.
+
+  * ``ShardComm``  — inside ``jax.shard_map`` over a named mesh axis;
+    tensors are per-worker shards and collectives lower to real TPU
+    ICI/DCN collectives (psum / ppermute).  Used by the production
+    launcher.
+
+This dual realization is exactly the paper's portability argument: the
+strategy code (the science) is independent of the transport (the fabric).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class Comm:
+    """Abstract tensor-moving interface."""
+
+    size: int
+
+    def all_mean(self, tree):
+        raise NotImplementedError
+
+    def all_sum(self, tree):
+        raise NotImplementedError
+
+    def ppermute(self, tree, shift: int = 1):
+        """Ring shift: worker w receives worker (w - shift) % W's value."""
+        raise NotImplementedError
+
+    def worker_index(self, like=None):
+        """Per-worker index in [0, W), broadcastable against local tensors."""
+        raise NotImplementedError
+
+
+class LocalComm(Comm):
+    """Stacked-replica realization: leaves have leading worker dim W."""
+
+    def __init__(self, size: int):
+        self.size = size
+
+    def all_mean(self, tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape),
+            tree)
+
+    def all_sum(self, tree):
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True), x.shape),
+            tree)
+
+    def ppermute(self, tree, shift: int = 1):
+        return jax.tree.map(lambda x: jnp.roll(x, shift, axis=0), tree)
+
+    def worker_index(self, like=None):
+        return jnp.arange(self.size)
+
+    # helpers for stacked layout -------------------------------------------
+    def replicate(self, tree):
+        """Broadcast a single-replica pytree to the stacked layout."""
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (self.size,) + jnp.shape(x)).copy(), tree)
+
+    def replica(self, tree, w: int):
+        return jax.tree.map(lambda x: x[w], tree)
+
+
+class ShardComm(Comm):
+    """shard_map realization over one (or more) named mesh axes."""
+
+    def __init__(self, axis_name, size: int):
+        self.axis_name = axis_name
+        self.size = size
+
+    def all_mean(self, tree):
+        return jax.tree.map(lambda x: jax.lax.pmean(x, self.axis_name), tree)
+
+    def all_sum(self, tree):
+        return jax.tree.map(lambda x: jax.lax.psum(x, self.axis_name), tree)
+
+    def ppermute(self, tree, shift: int = 1):
+        n = self.size
+        perm = [((i - shift) % n, i) for i in range(n)]
+        return jax.tree.map(
+            lambda x: jax.lax.ppermute(x, self.axis_name, perm), tree)
+
+    def worker_index(self, like=None):
+        return jax.lax.axis_index(self.axis_name)
+
+
+class HierComm:
+    """Two-tier comm: ``inner`` (fast fabric, e.g. intra-pod ICI) and
+    ``outer`` (slow fabric, e.g. pod-to-pod DCN).  The beyond-paper
+    hierarchical strategy composes a complete strategy on ``inner`` with a
+    partial one on ``outer`` (DESIGN.md §2)."""
+
+    def __init__(self, inner: Comm, outer: Comm):
+        self.inner = inner
+        self.outer = outer
+        self.size = inner.size * outer.size
+
+
+class LocalHierComm(HierComm):
+    """Stacked layout (P, W, ...): axis 0 = pods (outer), axis 1 = workers."""
+
+    def __init__(self, pods: int, workers: int):
+        inner = LocalComm(workers)
+        outer = LocalComm(pods)
+        super().__init__(inner, outer)
+        # re-bind axes: inner ops act on axis 1, outer on axis 0
+        inner.all_mean = lambda tree: jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.mean(x, axis=1, keepdims=True), x.shape), tree)
+        inner.all_sum = lambda tree: jax.tree.map(
+            lambda x: jnp.broadcast_to(jnp.sum(x, axis=1, keepdims=True), x.shape), tree)
+        inner.ppermute = lambda tree, shift=1: jax.tree.map(
+            lambda x: jnp.roll(x, shift, axis=1), tree)
+        outer.ppermute = lambda tree, shift=1: jax.tree.map(
+            lambda x: jnp.roll(x, shift, axis=0), tree)

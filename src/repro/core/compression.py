@@ -1,0 +1,228 @@
+"""Gradient compression with error feedback (paper §2.2.4).
+
+Two families, exactly the two the paper surveys:
+
+  * quantization — 1-bit SGD (Seide et al. [55]): per-block sign + scale,
+    with the error-feedback residual that makes it converge; plus an int8
+    variant.
+  * sparsification — top-k with residual accumulation (Strom [39], Deep
+    Gradient Compression [54]), realized as *block-local* top-k which is
+    the TPU-friendly form (no global sort; see DESIGN.md §2).
+
+Every compressor is a pair (encode, decode) threaded through an
+error-feedback wrapper:   c = encode(g + r);  r ← (g + r) − decode(c).
+The communicated object is ``decode(encode(·))`` — strategies communicate
+the *decompressed* tensor (wire format is an implementation detail of the
+transport; the wire-size accounting lives in ``wire_bytes``).
+
+The hot loops have Pallas TPU kernels in ``repro/kernels`` (onebit_quant,
+topk_sparsify); this module dispatches to the pure-jnp reference, which is
+numerically identical (kernels are validated against it in tests).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Compressor:
+    name: str
+    compress: Callable  # (x) -> (wire, meta)  [wire: what's transmitted]
+    decompress: Callable  # (wire, meta, shape, dtype) -> x_hat
+    wire_bits_per_element: float  # accounting for benchmarks
+
+
+# ---------------------------------------------------------------------------
+# identity
+# ---------------------------------------------------------------------------
+def none_compressor() -> Compressor:
+    return Compressor(
+        name="none",
+        compress=lambda x: (x, None),
+        decompress=lambda w, m, shape, dtype: w,
+        wire_bits_per_element=32.0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# 1-bit quantization (sign + per-block mean-|x| scale)
+# ---------------------------------------------------------------------------
+def onebit_compressor(block: int = 256) -> Compressor:
+    def compress(x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        n = flat.shape[0]
+        pad = (-n) % block
+        flat = jnp.pad(flat, (0, pad))
+        blocks = flat.reshape(-1, block)
+        sign = jnp.where(blocks >= 0, 1.0, -1.0)
+        scale = jnp.mean(jnp.abs(blocks), axis=-1, keepdims=True)
+        return (sign.astype(jnp.int8), scale), None
+
+    def decompress(wire, meta, shape, dtype):
+        sign, scale = wire
+        n = 1
+        for s in shape:
+            n *= s
+        flat = (sign.astype(jnp.float32) * scale).reshape(-1)[:n]
+        return flat.reshape(shape).astype(dtype)
+
+    # 1 bit per element + one fp32 scale per block
+    return Compressor("onebit", compress, decompress,
+                      wire_bits_per_element=1.0 + 32.0 / block)
+
+
+# ---------------------------------------------------------------------------
+# int8 linear quantization (per-block max-abs scale)
+# ---------------------------------------------------------------------------
+def int8_compressor(block: int = 256) -> Compressor:
+    def compress(x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        pad = (-flat.shape[0]) % block
+        blocks = jnp.pad(flat, (0, pad)).reshape(-1, block)
+        scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+        q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-30)), -127, 127)
+        return (q.astype(jnp.int8), scale), None
+
+    def decompress(wire, meta, shape, dtype):
+        q, scale = wire
+        n = 1
+        for s in shape:
+            n *= s
+        flat = (q.astype(jnp.float32) * scale).reshape(-1)[:n]
+        return flat.reshape(shape).astype(dtype)
+
+    return Compressor("int8", compress, decompress,
+                      wire_bits_per_element=8.0 + 32.0 / block)
+
+
+# ---------------------------------------------------------------------------
+# block-local top-k sparsification (DGC-style)
+# ---------------------------------------------------------------------------
+def topk_compressor(ratio: float = 0.01, block: int = 1024) -> Compressor:
+    k = max(1, int(round(block * ratio)))
+
+    def compress(x):
+        flat = x.reshape(-1).astype(jnp.float32)
+        pad = (-flat.shape[0]) % block
+        blocks = jnp.pad(flat, (0, pad)).reshape(-1, block)
+        vals, idx = jax.lax.top_k(jnp.abs(blocks), k)
+        taken = jnp.take_along_axis(blocks, idx, axis=-1)
+        return (taken, idx.astype(jnp.int32)), None
+
+    def decompress(wire, meta, shape, dtype):
+        taken, idx = wire
+        n = 1
+        for s in shape:
+            n *= s
+        nblocks = idx.shape[0]
+        blocks = jnp.zeros((nblocks, block), jnp.float32).at[
+            jnp.arange(nblocks)[:, None], idx].set(taken)
+        return blocks.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+    # k values (32b) + k indices (16b suffices for block≤64k) per block
+    return Compressor(f"topk{ratio}", compress, decompress,
+                      wire_bits_per_element=ratio * (32.0 + 16.0))
+
+
+REGISTRY = {
+    "none": none_compressor,
+    "onebit": onebit_compressor,
+    "int8": int8_compressor,
+    "topk": topk_compressor,
+}
+
+
+def get_compressor(name: str, **kw) -> Compressor:
+    return REGISTRY[name](**kw)
+
+
+# ---------------------------------------------------------------------------
+# error feedback
+# ---------------------------------------------------------------------------
+def ef_init(params):
+    """Error-feedback residual state (one per communicated leaf)."""
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def ef_compress_tree(comp: Compressor, grads, residual):
+    """Apply compressor with error feedback leaf-wise.
+
+    Returns (g_hat, new_residual): ``g_hat`` is what gets communicated
+    (already decompressed — see module docstring), residual carries the
+    compression error to the next round."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        wire, meta = comp.compress(target)
+        g_hat = comp.decompress(wire, meta, g.shape, jnp.float32)
+        return g_hat.astype(g.dtype), target - g_hat
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = jax.tree.leaves(residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    g_hat = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_r = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return g_hat, new_r
+
+
+def wire_bytes(comp: Compressor, tree) -> float:
+    """Bytes on the wire to ship ``tree`` once under ``comp``."""
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    return n * comp.wire_bits_per_element / 8.0
+
+
+# ---------------------------------------------------------------------------
+# Deep Gradient Compression momentum correction (Lin et al. [54], §2.2.4):
+# accumulate MOMENTUM (not raw gradients) into the residual before top-k,
+# so sparsified-away velocity keeps accumulating instead of being lost.
+# ---------------------------------------------------------------------------
+def dgc_init(params):
+    z = lambda p: jnp.zeros_like(p, jnp.float32)  # noqa: E731
+    return {"velocity": jax.tree.map(z, params),
+            "residual": jax.tree.map(z, params)}
+
+
+def dgc_compress_tree(comp: Compressor, grads, state, momentum: float = 0.9):
+    """Returns (g_hat, new_state): g_hat is the communicated (decompressed)
+    sparse velocity; velocity/residual carry what wasn't sent."""
+
+    def one(g, u, r):
+        u1 = momentum * u + g.astype(jnp.float32)
+        target = r + u1
+        wire, meta = comp.compress(target)
+        sent = comp.decompress(wire, meta, g.shape, jnp.float32)
+        # what was sent leaves both accumulators (DGC eq. 4-5)
+        mask = (sent != 0).astype(jnp.float32)
+        return sent.astype(g.dtype), u1 * (1 - mask), target - sent
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_u = jax.tree.leaves(state["velocity"])
+    flat_r = jax.tree.leaves(state["residual"])
+    outs = [one(g, u, r) for g, u, r in zip(flat_g, flat_u, flat_r)]
+    g_hat = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    new_state = {
+        "velocity": jax.tree.unflatten(treedef, [o[1] for o in outs]),
+        "residual": jax.tree.unflatten(treedef, [o[2] for o in outs]),
+    }
+    return g_hat, new_state
+
+
+def pack_signs(sign_int8):
+    """True 1-bit wire format: pack 8 int8 signs into one uint8 (the step
+    the Pallas kernel leaves to XLA; DESIGN.md §2 table)."""
+    bits = (sign_int8 > 0).astype(jnp.uint8).reshape(-1, 8)
+    weights = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], jnp.uint8)
+    return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
+
+
+def unpack_signs(packed, n):
+    weights = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], jnp.uint8)
+    bits = (packed[:, None] & weights) > 0
+    sign = jnp.where(bits.reshape(-1)[:n], 1, -1).astype(jnp.int8)
+    return sign

@@ -1,0 +1,56 @@
+"""Staleness accounting and the implicit-momentum connection.
+
+The paper (§3) leans on Mitliagkas et al., "Asynchrony begets Momentum":
+with W asynchronous workers, the expected update direction behaves like
+momentum SGD with  β ≈ 1 − 1/W  (geometric staleness distribution).  The
+paper flags "no clear understanding of what happens in case of incomplete
+communication" — we provide the measurement tooling:
+
+  * ``implicit_momentum(W)`` — the Mitliagkas prediction.
+  * ``effective_momentum_fit`` — fit β̂ from an observed weight trajectory
+    by regressing update_t against update_{t-1} (used by
+    benchmarks/bench_staleness.py to compare sync/ssp/downpour/gossip
+    against the prediction, and by tests).
+  * ``staleness_histogram`` — delivery-delay distribution of a strategy's
+    schedule, the quantity a centralized parameter server would measure
+    "for free" and a decentralized system must reconstruct (paper §3).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def implicit_momentum(n_workers: int) -> float:
+    """Mitliagkas et al. prediction: β = 1 − 1/W."""
+    return 1.0 - 1.0 / max(1, n_workers)
+
+
+def effective_momentum_fit(weight_traj: np.ndarray) -> float:
+    """Least-squares fit of u_t ≈ β u_{t-1} over a weight trajectory
+    (T, dim) — returns β̂."""
+    w = np.asarray(weight_traj, np.float64)
+    u = np.diff(w, axis=0)  # (T-1, dim)
+    if len(u) < 3:
+        return 0.0
+    num = float(np.sum(u[1:] * u[:-1]))
+    den = float(np.sum(u[:-1] * u[:-1])) + 1e-30
+    return num / den
+
+
+def staleness_histogram(schedule, n_workers: int, horizon: int):
+    """schedule: callable (src, dst, t) -> delivery delay (int or None).
+    Returns (delays list, drop_fraction)."""
+    delays, drops, total = [], 0, 0
+    for t in range(horizon):
+        for src in range(n_workers):
+            for dst in range(n_workers):
+                if src == dst:
+                    continue
+                total += 1
+                d = schedule(src, dst, t)
+                if d is None:
+                    drops += 1
+                else:
+                    delays.append(d)
+    return np.asarray(delays), drops / max(1, total)

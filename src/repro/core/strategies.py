@@ -1,0 +1,337 @@
+"""The communication-completeness spectrum (paper §3) as executable
+strategies.
+
+Spectrum point → strategy:
+  1. synchronous (large mini-batch)        → ``sync``
+  2. complete, bounded delay               → ``ssp``        (stale-synchronous)
+  3. complete, unbounded delay             → ``downpour``   (decentralized
+     realization of the parameter-server semantics; see DESIGN.md §2 for why
+     the central server is deliberately not built)
+  4. partial communication                 → ``gossip``     (ring mixing:
+     non-neighbor updates are *never* delivered directly)
+  +. model averaging (paper §2.2.3)        → ``local_sgd``
+  +. hierarchical (beyond-paper)           → ``hierarchical`` (complete
+     within the fast tier × partial across the slow tier)
+
+Every strategy is written against the ``Comm`` interface and therefore runs
+both in the stacked-replica simulator (LocalComm) and under shard_map on a
+real mesh (ShardComm).  Asynchrony is *logical*: per-worker schedules are
+explicit, deterministic state — the faithful SPMD realization of the paper's
+delivery-order analysis (Figure 3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Comm, HierComm, LocalComm
+from repro.core.compression import (Compressor, dgc_compress_tree, dgc_init,
+                                    ef_compress_tree, ef_init,
+                                    none_compressor, wire_bytes)
+from repro.optim.optimizers import Optimizer
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str
+    spectrum_point: int  # 1..4 per the paper's §3 taxonomy
+    complete: bool  # does every update eventually reach every worker?
+    init: Callable  # (params, comm) -> comm_state
+    update: Callable  # (params, grads, opt_state, comm_state, t, optimizer, comm)
+    #                 -> (params, opt_state, comm_state, metrics)
+
+
+def _maybe_vmap(comm: Comm, fn):
+    """Compression is block-local; under LocalComm the worker dim must not
+    leak into blocks, so map the function over workers."""
+    if isinstance(comm, LocalComm):
+        return jax.vmap(fn)
+    return fn
+
+
+def _compress(comm, compressor, grads, residual):
+    if compressor is None or compressor.name == "none":
+        return grads, residual, 32.0
+    fn = _maybe_vmap(comm, lambda g_r: ef_compress_tree(compressor, g_r[0], g_r[1]))
+    g_hat, new_r = fn((grads, residual))
+    return g_hat, new_r, compressor.wire_bits_per_element
+
+
+def _metrics(tree, bits, events=1.0):
+    n = sum(x.size for x in jax.tree.leaves(tree))
+    return {"wire_bytes": jnp.asarray(n * bits / 8.0 * events, jnp.float32),
+            "comm_events": jnp.asarray(events, jnp.float32)}
+
+
+def _zero_metrics():
+    return {"wire_bytes": jnp.zeros((), jnp.float32),
+            "comm_events": jnp.zeros((), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# 1. synchronous — large mini-batch all-reduce
+# ---------------------------------------------------------------------------
+def sync(compressor: Optional[Compressor] = None) -> Strategy:
+    def init(params, comm):
+        return {"residual": ef_init(params)} if compressor else {}
+
+    def update(params, grads, opt_state, cstate, t, opt: Optimizer, comm: Comm):
+        if compressor:
+            grads, cstate["residual"], bits = _compress(
+                comm, compressor, grads, cstate.get("residual"))
+        else:
+            bits = 32.0
+        g = comm.all_mean(grads)
+        params, opt_state = opt.update(g, opt_state, params, t)
+        return params, opt_state, cstate, _metrics(grads, bits)
+
+    return Strategy("sync", 1, True, init, update)
+
+
+# ---------------------------------------------------------------------------
+# +. local SGD / model averaging (paper §2.2.3)
+# ---------------------------------------------------------------------------
+def local_sgd(sync_every: int = 8,
+              compressor: Optional[Compressor] = None) -> Strategy:
+    def init(params, comm):
+        return {}
+
+    def update(params, grads, opt_state, cstate, t, opt, comm):
+        params, opt_state = opt.update(grads, opt_state, params, t)
+        do_avg = (t + 1) % sync_every == 0
+        avg = comm.all_mean(params)
+        params = jax.tree.map(
+            lambda a, p: jnp.where(do_avg, a, p), avg, params)
+        m = _metrics(params, 32.0, events=do_avg.astype(jnp.float32)
+                     if hasattr(do_avg, "astype") else float(do_avg))
+        return params, opt_state, cstate, m
+
+    return Strategy("local_sgd", 2, True, init, update)
+
+
+# ---------------------------------------------------------------------------
+# 1b. sync + Deep Gradient Compression (momentum correction, [54])
+# ---------------------------------------------------------------------------
+def sync_dgc(compressor: Compressor, momentum: float = 0.9) -> Strategy:
+    """Synchronous exchange of momentum-corrected sparsified gradients:
+    velocity (not raw gradient) is accumulated into the residual, so
+    sparsified-away updates keep their momentum — the [54] refinement of
+    plain error feedback."""
+
+    def init(params, comm):
+        return {"dgc": dgc_init(params)}
+
+    def update(params, grads, opt_state, cstate, t, opt, comm):
+        fn = _maybe_vmap(comm, lambda gs: dgc_compress_tree(
+            compressor, gs[0], gs[1], momentum))
+        g_hat, cstate["dgc"] = fn((grads, cstate["dgc"]))
+        g = comm.all_mean(g_hat)
+        params, opt_state = opt.update(g, opt_state, params, t)
+        return params, opt_state, cstate, _metrics(
+            grads, compressor.wire_bits_per_element)
+
+    return Strategy("sync_dgc", 1, True, init, update)
+
+
+# ---------------------------------------------------------------------------
+# +. elastic averaging SGD (paper §2.2.3 via [50], Zhang/Choromanska/LeCun)
+# ---------------------------------------------------------------------------
+def easgd(alpha: float = 0.1, sync_every: int = 4) -> Strategy:
+    """Workers are elastically attracted to a (replicated) center variable;
+    the center moves toward the worker average.  Model averaging with a
+    spring instead of a hard reset — complete communication, point 2-ish."""
+
+    def init(params, comm):
+        return {"center": jax.tree.map(
+            lambda p: jnp.mean(p, axis=0, keepdims=True)
+            + jnp.zeros_like(p, jnp.float32)
+            if isinstance(comm, LocalComm) else p.astype(jnp.float32), params)}
+
+    def update(params, grads, opt_state, cstate, t, opt, comm):
+        params, opt_state = opt.update(grads, opt_state, params, t)
+        do = (t + 1) % sync_every == 0
+        center = cstate["center"]
+        diff = jax.tree.map(lambda p, c: p.astype(jnp.float32) - c,
+                            params, center)
+        new_center = jax.tree.map(
+            lambda c, d: c + alpha * d, center, comm.all_mean(diff))
+        new_params = jax.tree.map(
+            lambda p, d: (p.astype(jnp.float32) - alpha * d).astype(p.dtype),
+            params, diff)
+        params = jax.tree.map(lambda n, p: jnp.where(do, n, p),
+                              new_params, params)
+        cstate = {"center": jax.tree.map(lambda n, c: jnp.where(do, n, c),
+                                         new_center, center)}
+        ev = do.astype(jnp.float32) if hasattr(do, "astype") else float(do)
+        return params, opt_state, cstate, _metrics(params, 32.0, events=ev)
+
+    return Strategy("easgd", 2, True, init, update)
+
+
+# ---------------------------------------------------------------------------
+# 2. stale-synchronous — complete communication, bounded delay s
+# ---------------------------------------------------------------------------
+def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
+        staleness_aware_lr: bool = False) -> Strategy:
+    """``staleness_aware_lr`` (Zhang et al. [40]): stale contributions are
+    scaled by 1/s — the staleness-dependent learning-rate modulation."""
+    s = max(1, staleness)
+
+    def init(params, comm):
+        def ring(p):
+            return jnp.zeros((s,) + p.shape, jnp.float32)
+
+        st = {"buf": jax.tree.map(ring, params)}
+        if compressor:
+            st["residual"] = ef_init(params)
+        return st
+
+    def update(params, grads, opt_state, cstate, t, opt, comm):
+        bits = 32.0
+        if compressor:
+            grads, cstate["residual"], bits = _compress(
+                comm, compressor, grads, cstate["residual"])
+        slot = t % s
+        g_old = jax.tree.map(lambda b: b[slot], cstate["buf"])  # g_{t-s}
+        others_old = jax.tree.map(
+            lambda a, b: a - b, comm.all_sum(g_old), g_old)
+        w = comm.size
+        stale_scale = 1.0 / s if staleness_aware_lr else 1.0
+        g_eff = jax.tree.map(
+            lambda g, o: (g.astype(jnp.float32) + stale_scale * o) / w,
+            grads, others_old)
+        params, opt_state = opt.update(g_eff, opt_state, params, t)
+        cstate["buf"] = jax.tree.map(
+            lambda b, g: b.at[slot].set(g.astype(jnp.float32)),
+            cstate["buf"], grads)
+        return params, opt_state, cstate, _metrics(grads, bits)
+
+    return Strategy("ssp", 2, True, init, update)
+
+
+# ---------------------------------------------------------------------------
+# 3. downpour — complete communication, unbounded(-class) delay
+# ---------------------------------------------------------------------------
+def downpour(push_every: int = 4,
+             compressor: Optional[Compressor] = None) -> Strategy:
+    """Decentralized Downpour: workers accumulate locally and push on
+    staggered schedules; every update is eventually delivered everywhere
+    (complete).  Staggering makes deliveries interleave asynchronously —
+    the paper's point-3 regime without the parameter-server bottleneck."""
+
+    def init(params, comm):
+        st = {"acc": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+        if compressor:
+            st["residual"] = ef_init(params)
+        return st
+
+    def update(params, grads, opt_state, cstate, t, opt, comm):
+        bits = 32.0
+        if compressor:
+            grads, cstate["residual"], bits = _compress(
+                comm, compressor, grads, cstate["residual"])
+        w = comm.size
+        offset = comm.worker_index()  # (W,) under LocalComm, scalar shard
+        push = ((t + offset) % push_every == 0)
+
+        def bcast(flag, x):
+            return flag.reshape(flag.shape + (1,) * (x.ndim - flag.ndim)) \
+                if hasattr(flag, "ndim") and flag.ndim and flag.ndim < x.ndim else flag
+
+        acc_plus = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), cstate["acc"], grads)
+        deliver = jax.tree.map(
+            lambda a: jnp.where(bcast(push, a), a, 0.0), acc_plus)
+        recv = jax.tree.map(lambda s_, d: s_ - d, comm.all_sum(deliver), deliver)
+        g_eff = jax.tree.map(
+            lambda g, r: (g.astype(jnp.float32) + r) / w, grads, recv)
+        params, opt_state = opt.update(g_eff, opt_state, params, t)
+        cstate["acc"] = jax.tree.map(
+            lambda a: jnp.where(bcast(push, a), 0.0, a), acc_plus)
+        ev = jnp.mean(push.astype(jnp.float32))
+        return params, opt_state, cstate, _metrics(grads, bits, events=ev)
+
+    return Strategy("downpour", 3, True, init, update)
+
+
+# ---------------------------------------------------------------------------
+# 4. gossip — PARTIAL communication (ring mixing)
+# ---------------------------------------------------------------------------
+def gossip(mix_every: int = 1, symmetric: bool = True,
+           compressor: Optional[Compressor] = None) -> Strategy:
+    """Ring gossip on *weights* after the local step.  A worker only ever
+    hears from its ring neighbors — updates from others are never directly
+    delivered: the paper's point 4, where model consistency is genuinely
+    given up (Statement 1 does not apply)."""
+
+    def init(params, comm):
+        return {}
+
+    def update(params, grads, opt_state, cstate, t, opt, comm):
+        params, opt_state = opt.update(grads, opt_state, params, t)
+        do_mix = (t + 1) % mix_every == 0
+        left = comm.ppermute(params, shift=1)
+        if symmetric:
+            right = comm.ppermute(params, shift=-1)
+            mixed = jax.tree.map(
+                lambda p, l, r: (p.astype(jnp.float32) + l.astype(jnp.float32)
+                                 + r.astype(jnp.float32)) / 3.0,
+                params, left, right)
+        else:
+            mixed = jax.tree.map(
+                lambda p, l: (p.astype(jnp.float32) + l.astype(jnp.float32)) / 2.0,
+                params, left)
+        params = jax.tree.map(
+            lambda m, p: jnp.where(do_mix, m.astype(p.dtype), p), mixed, params)
+        ev = (do_mix.astype(jnp.float32) if hasattr(do_mix, "astype")
+              else float(do_mix)) * (2.0 if symmetric else 1.0)
+        return params, opt_state, cstate, _metrics(params, 32.0, events=ev)
+
+    return Strategy("gossip", 4, False, init, update)
+
+
+# ---------------------------------------------------------------------------
+# beyond-paper: hierarchical — complete inner tier × partial outer tier
+# ---------------------------------------------------------------------------
+def hierarchical(inner: Strategy, outer: Strategy) -> Strategy:
+    """Compose: ``inner`` runs every step on the fast fabric (intra-pod),
+    ``outer`` on the slow fabric (cross-pod).  The comm handed to update
+    must be a HierComm."""
+
+    def init(params, comm: HierComm):
+        return {"inner": inner.init(params, comm.inner),
+                "outer": outer.init(params, comm.outer)}
+
+    def update(params, grads, opt_state, cstate, t, opt, comm: HierComm):
+        params, opt_state, cstate["inner"], m1 = inner.update(
+            params, grads, opt_state, cstate["inner"], t, opt, comm.inner)
+        noop = Optimizer(lambda p: {},
+                         lambda g, s, p, tt: (p, s))
+        zero_g = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), grads)
+        params, _, cstate["outer"], m2 = outer.update(
+            params, zero_g, {}, cstate["outer"], t, noop, comm.outer)
+        m = {k: m1[k] + m2[k] for k in m1}
+        return params, opt_state, cstate, m
+
+    return Strategy(f"hier({inner.name}x{outer.name})",
+                    4 if not outer.complete else inner.spectrum_point,
+                    inner.complete and outer.complete, init, update)
+
+
+REGISTRY = {
+    "sync": sync,
+    "sync_dgc": sync_dgc,
+    "local_sgd": local_sgd,
+    "easgd": easgd,
+    "ssp": ssp,
+    "downpour": downpour,
+    "gossip": gossip,
+}
+
+
+def get_strategy(name: str, **kw) -> Strategy:
+    return REGISTRY[name](**kw)

@@ -1,0 +1,86 @@
+"""Deterministic synthetic data pipeline.
+
+The paper's data parallelism partitions the dataset among workers
+(§2: "distributing partitions of training data among workers").  This
+pipeline gives every (worker, step) a *disjoint, reproducible* shard with
+no host I/O: batches are generated on device from a folded PRNG key.
+
+The token stream is learnable, not uniform noise: with probability
+``structure`` the next token is the affine successor  x' = (a·x + b) mod V,
+else uniform.  A model that learns the successor reaches
+H ≈ s·log V·(1−s)… well below log V — so convergence benchmarks
+(benchmarks/bench_strategies.py) have signal to distinguish strategies,
+which is exactly what the paper's §3 experiments need.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_per_worker: int
+    structure: float = 0.9  # P(next = successor)
+    a: int = 31
+    b: int = 7
+    seed: int = 0
+    # tokens are drawn from [0, active_vocab): a small active set makes the
+    # task learnable within a few hundred steps at large model/vocab scale
+    # (the embedding table only needs active_vocab live rows)
+    active_vocab: int = 0  # 0 ⇒ full vocab
+
+    @property
+    def v_act(self) -> int:
+        return self.active_vocab or self.vocab_size
+
+
+def _successor(x, cfg: DataConfig):
+    return (cfg.a * x + cfg.b) % cfg.v_act
+
+
+def sample_batch(cfg: DataConfig, worker: int, step: int):
+    """(batch_per_worker, seq_len) int32, deterministic in (seed, worker, step)."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(cfg.seed), worker), step)
+    k0, k1, k2 = jax.random.split(key, 3)
+    b, l, v = cfg.batch_per_worker, cfg.seq_len, cfg.v_act
+    start = jax.random.randint(k0, (b,), 0, v)
+    noise = jax.random.randint(k1, (b, l), 0, v)
+    coin = jax.random.bernoulli(k2, cfg.structure, (b, l))
+
+    def step_fn(x, inputs):
+        nz, cn = inputs
+        nxt = jnp.where(cn, _successor(x, cfg), nz)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(step_fn, start,
+                           (noise.swapaxes(0, 1), coin.swapaxes(0, 1)))
+    return toks.swapaxes(0, 1).astype(jnp.int32)  # (b, l)
+
+
+def worker_batches(cfg: DataConfig, n_workers: int, step: int):
+    """Stacked (W, batch_per_worker, seq_len) — LocalComm layout."""
+    return jnp.stack([sample_batch(cfg, w, step) for w in range(n_workers)])
+
+
+def global_batch(cfg: DataConfig, step: int, global_batch_size: int):
+    """One flat global batch (production path); workers' shards concatenated."""
+    n = global_batch_size // cfg.batch_per_worker
+    ws = worker_batches(cfg, n, step)
+    return ws.reshape(global_batch_size, cfg.seq_len)
+
+
+def bayes_entropy(cfg: DataConfig) -> float:
+    """Entropy of the generating process (loss floor for a perfect model)."""
+    s, v = cfg.structure, cfg.v_act
+    # next ~ s·δ(successor) + (1−s)·uniform; the successor bucket gets s+(1−s)/V
+    p_succ = s + (1 - s) / v
+    p_other = (1 - s) / v
+    return float(-(p_succ * np.log(p_succ) + (v - 1) * p_other * np.log(p_other)))

@@ -1,0 +1,55 @@
+"""1-bit gradient quantization with error feedback — Pallas kernel
+(Seide et al. [55], paper §2.2.4).
+
+Fuses the whole error-feedback round in one VMEM pass:
+    t = g + r;  sign = sgn(t);  scale = mean|t|;  r' = t − sign·scale
+int8 signs + one f32 scale per block (8,128)-tile aligned; the final
+8→1-bit packing is a bitcast-level wire detail left to XLA (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onebit_kernel(g_ref, r_ref, sign_ref, scale_ref, newr_ref):
+    t = g_ref[...].astype(jnp.float32) + r_ref[...]
+    sign = jnp.where(t >= 0, 1, -1).astype(jnp.int8)
+    scale = jnp.mean(jnp.abs(t), axis=-1, keepdims=True)  # (rows, 1)
+    decoded = sign.astype(jnp.float32) * scale
+    sign_ref[...] = sign
+    scale_ref[...] = scale
+    newr_ref[...] = t - decoded
+
+
+@functools.partial(jax.jit, static_argnames=("rows_per_step", "interpret"))
+def onebit_quant(g, r, rows_per_step: int = 8, interpret: bool = True):
+    """g, r: (nblocks, block) → (sign int8, scale (nb,1) f32, new_r f32)."""
+    nb, block = g.shape
+    pad = (-nb) % rows_per_step
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    grid = (nbp // rows_per_step,)
+    sign, scale, newr = pl.pallas_call(
+        _onebit_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_per_step, block), lambda i: (i, 0))] * 2,
+        out_specs=[
+            pl.BlockSpec((rows_per_step, block), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_step, 1), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_step, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, block), jnp.int8),
+            jax.ShapeDtypeStruct((nbp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((nbp, block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, r)
+    return sign[:nb], scale[:nb], newr[:nb]

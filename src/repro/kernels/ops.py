@@ -1,0 +1,43 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU the kernels compile natively; everywhere else they execute in
+interpret mode (the kernel body runs in Python on CPU) — numerically
+identical, validated against ``ref.py`` in tests/test_kernels_*.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_adam import fused_adam as _adam
+from repro.kernels.mamba_scan import mamba_scan as _mamba
+from repro.kernels.onebit_quant import onebit_quant as _onebit
+from repro.kernels.topk_sparsify import topk_sparsify as _topk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=-1,
+                    block_q=128, block_k=128):
+    return _flash(q, k, v, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k, interpret=_interpret())
+
+
+def topk_sparsify(x, k, rows_per_step=8):
+    return _topk(x, k, rows_per_step=rows_per_step, interpret=_interpret())
+
+
+def onebit_quant(g, r, rows_per_step=8):
+    return _onebit(g, r, rows_per_step=rows_per_step, interpret=_interpret())
+
+
+def fused_adam(p, g, m, v, lr, t, **kw):
+    return _adam(p, g, m, v, lr, t, interpret=_interpret(), **kw)
+
+
+def mamba_scan(u, delta, a, b, c, d_skip, d_block=128):
+    return _mamba(u, delta, a, b, c, d_skip, d_block=d_block,
+                  interpret=_interpret())

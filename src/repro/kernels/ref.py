@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``*_ref`` matches its kernel bit-for-bit up to float tolerance; tests
+sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal + optional sliding window)
+# ---------------------------------------------------------------------------
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = -1):
+    """q,k,v: (B, H, L, D).  window: -1 ⇒ unlimited; else i−j < window."""
+    b, h, l, d = q.shape
+    logits = jnp.einsum("bhid,bhjd->bhij", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (d ** -0.5)
+    i = jnp.arange(l)[:, None]
+    j = jnp.arange(l)[None, :]
+    mask = jnp.ones((l, l), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= (i - j) < window
+    logits = jnp.where(mask, logits, -2.0e38)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhij,bhjd->bhid", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-local top-k sparsification (DGC)
+# ---------------------------------------------------------------------------
+def topk_sparsify_ref(x, k: int):
+    """x: (nblocks, block). Returns (values (nb,k), indices (nb,k) int32,
+    dense (nb, block) with only the top-k kept."""
+    mag = jnp.abs(x.astype(jnp.float32))
+    _, idx = jax.lax.top_k(mag, k)
+    vals = jnp.take_along_axis(x, idx, axis=-1)
+    dense = jnp.zeros_like(x).at[
+        jnp.arange(x.shape[0])[:, None], idx].set(vals)
+    return vals, idx.astype(jnp.int32), dense
+
+
+# ---------------------------------------------------------------------------
+# 1-bit quantization with error feedback
+# ---------------------------------------------------------------------------
+def onebit_quant_ref(x, residual):
+    """x, residual: (nblocks, block) f32.
+    Returns (sign int8, scale (nb,1) f32, new_residual)."""
+    t = x.astype(jnp.float32) + residual
+    sign = jnp.where(t >= 0, 1, -1).astype(jnp.int8)
+    scale = jnp.mean(jnp.abs(t), axis=-1, keepdims=True)
+    decoded = sign.astype(jnp.float32) * scale
+    return sign, scale, t - decoded
+
+
+# ---------------------------------------------------------------------------
+# selective scan (Mamba S6)
+# ---------------------------------------------------------------------------
+def mamba_scan_ref(u, delta, a, b, c, d_skip):
+    """u, delta: (B, L, D); a: (D, N); b, c: (B, L, N); d_skip: (D,).
+    Returns (y (B, L, D), h_last (B, D, N))."""
+    bsz, l, d = u.shape
+    n = a.shape[1]
+
+    def step(h, xs):
+        u_t, dt, b_t, c_t = xs  # (B,D),(B,D),(B,N),(B,N)
+        abar = jnp.exp(dt[..., None] * a[None])  # (B, D, N)
+        h = abar * h + (dt * u_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t) + d_skip * u_t
+        return h, y
+
+    h0 = jnp.zeros((bsz, d, n), jnp.float32)
+    xs = (u.swapaxes(0, 1).astype(jnp.float32),
+          delta.swapaxes(0, 1).astype(jnp.float32),
+          b.swapaxes(0, 1).astype(jnp.float32),
+          c.swapaxes(0, 1).astype(jnp.float32))
+    hlast, ys = jax.lax.scan(step, h0, xs)
+    return ys.swapaxes(0, 1).astype(u.dtype), hlast
+
+
+# ---------------------------------------------------------------------------
+# fused Adam step
+# ---------------------------------------------------------------------------
+def fused_adam_ref(p, g, m, v, lr, b1=0.9, b2=0.999, eps=1e-8, t=1):
+    """All (N,) arrays; t is the 1-based step. Returns (p, m, v)."""
+    gf = g.astype(jnp.float32)
+    m1 = b1 * m + (1 - b1) * gf
+    v1 = b2 * v + (1 - b2) * gf * gf
+    mh = m1 / (1 - b1 ** t)
+    vh = v1 / (1 - b2 ** t)
+    p1 = p - lr * mh / (jnp.sqrt(vh) + eps)
+    return p1.astype(p.dtype), m1, v1

@@ -1,0 +1,61 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"
+
+"""HLO collective diagnosis: top-N collectives by bytes for one
+(arch × shape), from the unrolled 1-super-block lowering.
+
+    PYTHONPATH=src python -m repro.launch.diagnose --arch qwen2-moe-a2.7b --shape train_4k
+"""
+
+import argparse  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import build_step, resolve_config, truncate  # noqa: E402
+from repro.roofline.analysis import _INSTR_RE, _shape_bytes, COLLECTIVE_OPS  # noqa: E402
+
+
+def top_collectives(arch, shape, multi_pod=False, repeat=1, n=14, mode="tp"):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    import dataclasses
+    cfg = truncate(dataclasses.replace(resolve_config(arch, shape),
+                                       sharding_mode=mode), repeat)
+    step_fn, sds, sh, donate = build_step(cfg, shape, mesh)
+    with jax.set_mesh(mesh):
+        comp = jax.jit(step_fn, in_shardings=sh,
+                       donate_argnums=donate).lower(*sds).compile()
+    rows = []
+    for line in comp.as_text().splitlines():
+        s = line.strip()
+        m = _INSTR_RE.search(s)
+        if not m:
+            continue
+        shape_str, op = m.groups()
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_OPS and not op.endswith("-done"):
+            rows.append((_shape_bytes(shape_str), base, s[:170]))
+    rows.sort(reverse=True)
+    per_type = defaultdict(int)
+    for b, base, _ in rows:
+        per_type[base] += b
+    total = sum(per_type.values())
+    print(f"=== {arch} x {shape} [{'2x16x16' if multi_pod else '16x16'}] "
+          f"R={repeat}: {total/2**30:.2f} GiB collective, {len(rows)} ops")
+    for k, v in sorted(per_type.items(), key=lambda kv: -kv[1]):
+        print(f"  {k:20s} {v/2**30:8.2f} GiB")
+    for b, base, l in rows[:n]:
+        print(f"  {b/2**20:9.1f} MiB {base:18s} {l[:130]}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--repeat", type=int, default=1)
+    ap.add_argument("--mode", default="tp")
+    args = ap.parse_args()
+    top_collectives(args.arch, args.shape, args.multi_pod, args.repeat, mode=args.mode)

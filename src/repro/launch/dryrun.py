@@ -1,0 +1,153 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"  # noqa: E501 — MUST precede any jax import
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+against the production mesh, print memory/cost analysis, and emit roofline
+terms.  (The two lines above give the single-CPU container 512 placeholder
+devices so jax.make_mesh can build the production mesh; set ONLY here,
+never globally — smoke tests and benches must see 1 device.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results.json
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import (SHAPES, build_step, resolve_config,  # noqa: E402
+                                truncate)
+from repro.roofline.analysis import analyse, extrapolate_cost  # noqa: E402
+
+ALL_ARCHS = [
+    "gemma3-1b", "deepseek-67b", "seamless-m4t-medium", "xlstm-125m",
+    "qwen2.5-14b", "qwen2-moe-a2.7b", "granite-moe-1b-a400m", "pixtral-12b",
+    "jamba-1.5-large-398b", "qwen2-1.5b",
+]
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            mode: str = "tp"):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_label = "2x16x16" if multi_pod else "16x16"
+    n_dev = 512 if multi_pod else 256
+    shape = SHAPES[shape_name]
+
+    cfg = resolve_config(arch, shape_name)
+    if cfg is not None and mode != "tp":
+        import dataclasses
+        cfg = dataclasses.replace(cfg, sharding_mode=mode)
+    if cfg is None:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+                "status": "skip",
+                "reason": "full-attention enc-dec x 500k decode (DESIGN.md §4)"}
+
+    # --- full config, scan-over-layers: proves lowering/sharding + memory ---
+    t0 = time.time()
+    step_fn, sds, shardings, donate = build_step(cfg, shape_name, mesh)
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step_fn, in_shardings=shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*sds)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    del lowered, compiled
+
+    # --- depth-truncated UNROLLED lowerings: trip-count-exact roofline -----
+    specs_len, repeat_full = len(cfg.superblock()[0]), cfg.superblock()[1]
+    costs = {}
+    for r in (1, 2):
+        tcfg = truncate(cfg, r)
+        tstep, tsds, tsh, tdon = build_step(tcfg, shape_name, mesh)
+        with jax.set_mesh(mesh):
+            tcomp = jax.jit(tstep, in_shardings=tsh,
+                            donate_argnums=tdon).lower(*tsds).compile()
+        costs[r] = {"cost": dict(tcomp.cost_analysis()),
+                    "hlo": tcomp.as_text()}
+        del tcomp
+    cost, coll = extrapolate_cost(costs[1], costs[2], repeat_full)
+    roof = analyse(arch, shape, mesh_label, n_dev, cost, coll, cfg, mem)
+
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_label,
+        "status": "ok", "variant": cfg.name,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device_gb": round(
+                (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                 + mem.temp_size_in_bytes - mem.alias_size_in_bytes) / 2**30, 3),
+        },
+        "roofline": roof.row(),
+    }
+    if verbose:
+        print(f"== {arch} x {shape_name} [{mesh_label}] ({cfg.name})")
+        print(f"   lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"   memory_analysis: {mem}")
+        print(f"   per-device: args {mem.argument_size_in_bytes/2**30:.2f} GiB, "
+              f"temps {mem.temp_size_in_bytes/2**30:.2f} GiB")
+        ca_keys = {k: cost[k] for k in ("flops", "bytes accessed")
+                   if k in cost}
+        print(f"   cost_analysis: {ca_keys}")
+        rr = roof.row()
+        print(f"   roofline: compute {rr['compute_s']*1e3:.2f} ms | memory "
+              f"{rr['memory_s']*1e3:.2f} ms | collective "
+              f"{rr['collective_s']*1e3:.2f} ms  → dominant: {rr['dominant']}"
+              f" | useful-FLOP ratio {rr['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--mode", default="tp", choices=["tp", "cp"])
+    args = ap.parse_args()
+
+    pairs = []
+    if args.all:
+        pairs = [(a, s) for a in ALL_ARCHS for s in SHAPES]
+    else:
+        archs = [args.arch] if args.arch else ALL_ARCHS
+        shapes = [args.shape] if args.shape else list(SHAPES)
+        pairs = [(a, s) for a in archs for s in shapes]
+
+    results = []
+    for arch, shape in pairs:
+        try:
+            results.append(run_one(arch, shape, args.multi_pod, mode=args.mode))
+        except Exception as e:  # noqa: BLE001 — report, keep sweeping
+            traceback.print_exc()
+            results.append({"arch": arch, "shape": shape,
+                            "mesh": "2x16x16" if args.multi_pod else "16x16",
+                            "status": "error", "error": repr(e)})
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(results, f, indent=1)
+
+    ok = sum(1 for r in results if r["status"] == "ok")
+    skip = sum(1 for r in results if r["status"] == "skip")
+    err = sum(1 for r in results if r["status"] == "error")
+    print(f"\n==== dry-run summary: {ok} ok / {skip} skip / {err} error ====")
+    for r in results:
+        if r["status"] == "error":
+            print(f"  ERROR {r['arch']} x {r['shape']}: {r['error'][:200]}")
+    return 0 if err == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

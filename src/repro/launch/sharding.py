@@ -1,0 +1,190 @@
+"""Sharding rules: activation constraints + parameter partition specs.
+
+Conventions (DESIGN.md §5):
+  batch    → ("pod", "data")   (pure data parallel across pods — the tier the
+                                paper's partial-communication strategies target)
+  heads/ffn/experts/vocab → "model"   (tensor parallel)
+  large param dims        → "data"    (FSDP / ZeRO-3 style)
+  long-context sequence   → "data"    (524k decode, batch=1)
+
+The ``shard`` helper is a no-op outside a mesh context so model code runs
+unchanged in single-device smoke tests.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axis names used throughout the model code
+BATCH = ("pod", "data")
+SEQ = "data"
+MODEL = "model"
+EXPERT = "model"
+
+
+def seq_ax(cfg):
+    """Axis carrying the sequence dim of activations ("cp" mode)."""
+    return MODEL if getattr(cfg, "sharding_mode", "tp") == "cp" else None
+
+
+def heads_ax(cfg):
+    """Axis carrying heads/d_ff of activations ("tp" mode)."""
+    return None if getattr(cfg, "sharding_mode", "tp") == "cp" else MODEL
+
+
+def _filter_spec(spec, axis_names):
+    out = []
+    for entry in spec:
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in axes if a in axis_names)
+        out.append(kept if len(kept) > 1 else (kept[0] if kept else None))
+    return P(*out)
+
+
+def shard(x, *spec):
+    """Constrain activation sharding; drops axes absent from the mesh, not
+    dividing the dim, or currently Manual (inside a shard_map over that
+    axis); no-op when no mesh context is active."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    sizes = dict(mesh.shape)
+    manual = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
+              if "Manual" in str(t)}
+    sizes = {k: v for k, v in sizes.items() if k not in manual}
+    entries = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= x.ndim:
+            entries.append(None)
+            continue
+        axes = [a for a in (entry if isinstance(entry, tuple) else (entry,))
+                if a in sizes]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if x.shape[d] % prod == 0:
+                break
+            axes.pop()
+        entries.append(tuple(axes) if len(axes) > 1 else
+                       (axes[0] if axes else None))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*entries)))
+
+
+# ---------------------------------------------------------------------------
+# Parameter partition rules: (path regex, PartitionSpec) — first match wins.
+# Param path strings look like "stack/layers/0/attn/wq" etc.
+# FSDP: shard the big non-TP dim over "data"; TP dims over "model".
+# ---------------------------------------------------------------------------
+PARAM_RULES = [
+    # embeddings / lm head: vocab over model, d_model over data (FSDP)
+    (r".*embed.*", P("model", "data")),
+    (r".*lm_head.*", P("data", "model")),
+    # attention projections (leading scan dim handled separately)
+    (r".*(attn|self_attn|cross_attn)/wq$", P("data", "model", None)),
+    (r".*(attn|self_attn|cross_attn)/wk$", P("data", "model", None)),
+    (r".*(attn|self_attn|cross_attn)/wv$", P("data", "model", None)),
+    (r".*(attn|self_attn|cross_attn)/wo$", P("model", None, "data")),
+    (r".*(attn|self_attn|cross_attn)/(bq|bk|bv)$", P("model", None)),
+    # dense mlp
+    (r".*mlp/w_(gate|up)$", P("data", "model")),
+    (r".*mlp/w_down$", P("model", "data")),
+    # MoE: experts over model axis (expert parallel), then FSDP over data
+    (r".*moe/router.*", P("data", None)),
+    (r".*moe/w_(gate|up)$", P("model", "data", None)),
+    (r".*moe/w_down$", P("model", None, "data")),
+    (r".*shared/w_(gate|up)$", P("data", "model")),
+    (r".*shared/w_down$", P("model", "data")),
+    # mamba
+    (r".*mamba/in_proj$", P("data", "model")),
+    (r".*mamba/out_proj$", P("model", "data")),
+    (r".*mamba/(conv_w|conv_b|x_proj|dt_proj|A_log|D|dt_bias)$", None),  # small
+    # xlstm
+    (r".*mlstm/w(q|k|v)$", P("data", "model", None)),
+    (r".*mlstm/out_proj$", P("model", None, "data")),
+    (r".*slstm/W$", P("data", "model")),
+    (r".*slstm/R$", P("model", None, None)),
+    # norms and everything small: replicated
+    (r".*", None),
+]
+
+# "cp" (context-parallel) mode: the "model" axis carries SEQUENCE, so
+# weights take no TP — everything big is ZeRO-3 sharded over BOTH axes
+# (gathered at use; grads reduce-scattered by the partitioner).
+FSDP2 = ("data", "model")
+PARAM_RULES_CP = [
+    (r".*embed.*", P("model", "data")),
+    (r".*lm_head.*", P("data", "model")),
+    # attention weights: ZeRO over "data" only — a 2-axis shard makes the
+    # partitioner gather the (seq-sharded) residual stream instead of the
+    # much smaller weights (§Perf hillclimb 2 it. 2)
+    (r".*(attn|self_attn|cross_attn)/wq$", P("data", None, None)),
+    (r".*(attn|self_attn|cross_attn)/wk$", P("data", None, None)),
+    (r".*(attn|self_attn|cross_attn)/wv$", P("data", None, None)),
+    (r".*(attn|self_attn|cross_attn)/wo$", P(None, None, "data")),
+    (r".*mlp/w_(gate|up)$", P(FSDP2, None)),
+    (r".*mlp/w_down$", P(None, FSDP2)),
+    (r".*mamba/in_proj$", P(FSDP2, None)),
+    (r".*mamba/out_proj$", P(None, FSDP2)),
+    (r".*", None),
+]
+
+
+def spec_for_path(path: str, ndim: int, stacked: bool,
+                  mode: str = "tp") -> P:
+    rules = PARAM_RULES_CP if mode == "cp" else PARAM_RULES
+    for pat, spec in rules:
+        if re.match(pat, path):
+            if spec is None:
+                spec = P()
+            entries = list(spec)
+            if stacked:
+                entries = [None] + entries  # leading scan dim unsharded
+            # pad/trim to ndim
+            entries = entries[:ndim] + [None] * (ndim - len(entries))
+            return P(*entries)
+    return P()
+
+
+def _flatten_with_paths(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten_with_paths(tree[k], f"{prefix}/{k}" if prefix else k)
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten_with_paths(v, f"{prefix}/{i}")
+    else:
+        yield prefix, tree
+
+
+def param_specs(params, stacked_marker="stack", mode: str = "tp"):
+    """PartitionSpec pytree matching ``params`` (same structure)."""
+
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, f"{prefix}/{k}" if prefix else k) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(build(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        stacked = f"{stacked_marker}/" in prefix or prefix.startswith(stacked_marker)
+        return spec_for_path(prefix, tree.ndim if hasattr(tree, "ndim") else 0,
+                             stacked, mode)
+
+    return build(params)
+
+
+def param_shardings(params, mesh):
+    names = set(mesh.axis_names)
+
+    def to_sharding(spec):
+        return NamedSharding(mesh, _filter_spec(spec, names))
+
+    return jax.tree.map(to_sharding, param_specs(params),
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,278 @@
+"""Input specs and step builders for every (architecture × input shape).
+
+``input_specs`` returns weak-type-correct ShapeDtypeStruct stand-ins (no
+device allocation) for each model input; the dry-run lowers against them.
+Decode shapes lower ``serve_step`` (ONE token against a seq_len cache);
+``long_500k`` additionally requires sub-quadratic attention — full-attention
+archs get the explicitly-flagged sliding-window variant (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.optim.optimizers import adam
+from repro.train.loop import make_sharded_train_step
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+# the one genuine skip (DESIGN.md §4): full-attention enc-dec × 500k decode
+SKIPS = {("seamless-m4t-medium", "long_500k")}
+
+
+def resolve_config(name_or_cfg, shape_name: str,
+                   dtype: str = "bfloat16") -> Optional[ModelConfig]:
+    """Pick the per-pair model config; None ⇒ recorded skip.
+
+    ``long_500k`` on full-attention archs returns the sliding-window
+    variant; SSM/hybrid and natively-windowed archs run their published
+    config."""
+    from repro.configs import get_config
+
+    cfg = get_config(name_or_cfg) if isinstance(name_or_cfg, str) else name_or_cfg
+    if (cfg.name, shape_name) in SKIPS:
+        return None
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid") \
+            and cfg.sliding_window is None:
+        cfg = cfg.with_sliding_window(4096)
+    return dataclasses.replace(cfg, param_dtype=dtype, compute_dtype=dtype)
+
+
+def truncate(cfg: ModelConfig, repeat: int) -> ModelConfig:
+    """Depth-truncated UNROLLED variant (``repeat`` super-blocks) for exact
+    cost_analysis: XLA counts while-loop bodies once, so the dry-run derives
+    per-layer cost from unrolled 1- and 2-super-block lowerings and
+    extrapolates linearly in depth (exact for matmul/collective costs)."""
+    specs, _ = cfg.superblock()
+    return dataclasses.replace(
+        cfg,
+        num_layers=len(specs) * repeat,
+        num_encoder_layers=min(cfg.num_encoder_layers, repeat),
+        scan_layers=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+def _fit_spec(spec: P, shape, mesh) -> P:
+    """Drop sharding axes that don't divide the dim (or are absent)."""
+    sizes = dict(mesh.shape)  # Mesh.shape is an axis-name → size mapping
+    out = []
+    for d, entry in enumerate(spec):
+        if entry is None or d >= len(shape):
+            out.append(None)
+            continue
+        axes = list(entry) if isinstance(entry, tuple) else [entry]
+        axes = [a for a in axes if a in sizes]
+        while axes:
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if shape[d] % prod == 0:
+                break
+            axes.pop()  # drop the innermost axis and retry
+        out.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*out)
+
+
+def fit_sharding(sds, spec: P, mesh) -> NamedSharding:
+    return NamedSharding(mesh, _fit_spec(spec, sds.shape, mesh))
+
+
+BD = ("pod", "data")  # batch axes
+
+
+def _cache_spec(path: str, ndim: int, shape_name: str) -> P:
+    """Sharding for stacked decode-cache leaves (leading dim = scan repeat)."""
+    long = shape_name == "long_500k"
+    seq_axes = ("pod", "data", "model") if long else "model"
+    if path.endswith("/k") or path.endswith("/v"):  # (R,B,S,KV,Dh)
+        return P(None, None if long else "data", seq_axes, None, None)
+    if path.endswith("/conv"):  # (R,B,k-1,d_in)
+        return P(None, "data", None, "model")
+    if path.endswith("/ssm"):  # (R,B,d_in,N)
+        return P(None, "data", "model", None)
+    if path.endswith("/C"):  # (R,B,H,dh,dh)
+        return P(None, "data", "model", None, None)
+    if path.endswith("/n") or path.endswith("/m") or path.endswith("/c") \
+            or path.endswith("/h"):  # (R,B,H,dh) / (R,B,H) / slstm (R,B,D)
+        return P(*([None, "data"] + [None] * (ndim - 2)))
+    return P(*([None] * ndim))
+
+
+def _tree_shardings(sds_tree, spec_fn, mesh):
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else k) for k, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            t = type(tree)
+            return t(walk(v, f"{prefix}/{i}") for i, v in enumerate(tree))
+        return fit_sharding(tree, spec_fn(prefix, tree.ndim), mesh)
+
+    return walk(sds_tree)
+
+
+# ---------------------------------------------------------------------------
+# model / optimizer SDS (no allocation)
+# ---------------------------------------------------------------------------
+def model_sds(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
+
+
+def param_shardings_sds(params_sds, mesh, mode: str = "tp"):
+    from repro.launch.sharding import param_specs
+
+    specs = param_specs(params_sds, mode=mode)
+    return jax.tree.map(
+        lambda sds, spec: fit_sharding(sds, spec, mesh),
+        params_sds, specs,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)))
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+def _emb_dtype(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    b, l = shape.global_batch, shape.seq_len
+    sds, sh = {}, {}
+    if cfg.modality in ("vision",):  # decoder consumes patch+text embeddings
+        sds["embeds"] = jax.ShapeDtypeStruct((b, l, cfg.d_model), _emb_dtype(cfg))
+        sh["embeds"] = fit_sharding(sds["embeds"], P(BD, None, None), mesh)
+    else:
+        sds["tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+        sh["tokens"] = fit_sharding(sds["tokens"], P(BD, None), mesh)
+    sds["labels"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+    sh["labels"] = fit_sharding(sds["labels"], P(BD, None), mesh)
+    if cfg.is_encoder_decoder:  # audio frontend stub: frame embeddings
+        sds["source_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), _emb_dtype(cfg))
+        sh["source_embeds"] = fit_sharding(
+            sds["source_embeds"], P(BD, None, None), mesh)
+    return sds, sh
+
+
+# ---------------------------------------------------------------------------
+# step builders — each returns (step_fn, arg_sds (tuple), arg_shardings, donate)
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                     pod_compressor=None):
+    opt = adam(3e-4)
+    step_fn = make_sharded_train_step(cfg, opt, remat=True,
+                                      pod_compressor=pod_compressor)
+
+    params_sds = model_sds(cfg)
+    comm_sds, comm_sh = {}, {}
+    if pod_compressor is not None:  # error-feedback residual, param-shaped
+        comm_sds = {"residual": jax.tree.map(
+            lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.float32), params_sds)}
+        comm_sh = {"residual": param_shardings_sds(
+            comm_sds["residual"], mesh, cfg.sharding_mode)}
+    state_sds = {
+        "params": params_sds,
+        "opt_state": jax.eval_shape(opt.init, params_sds),
+        "comm_state": comm_sds,
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    psh = param_shardings_sds(params_sds, mesh, cfg.sharding_mode)
+    state_sh = {
+        "params": psh,
+        "opt_state": param_shardings_sds(state_sds["opt_state"], mesh,
+                                         cfg.sharding_mode),
+        "comm_state": comm_sh,
+        "step": NamedSharding(mesh, P()),
+    }
+    batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
+    return step_fn, (state_sds, batch_sds), (state_sh, batch_sh), (0,)
+
+
+def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    b, l = shape.global_batch, shape.seq_len
+
+    def step_fn(params, batch):
+        memory = None
+        if cfg.is_encoder_decoder:
+            memory = T.encode(params, cfg, embeds=batch["source_embeds"])
+        logits, cache = T.prefill(params, cfg,
+                                  tokens=batch.get("tokens"),
+                                  embeds=batch.get("embeds"),
+                                  memory=memory, last_only=True)
+        return logits[:, -1], cache
+
+    params_sds = model_sds(cfg)
+    batch_sds, batch_sh = {}, {}
+    if cfg.modality == "vision":
+        batch_sds["embeds"] = jax.ShapeDtypeStruct((b, l, cfg.d_model), _emb_dtype(cfg))
+        batch_sh["embeds"] = fit_sharding(batch_sds["embeds"], P(BD, None, None), mesh)
+    else:
+        batch_sds["tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
+        batch_sh["tokens"] = fit_sharding(batch_sds["tokens"], P(BD, None), mesh)
+    if cfg.is_encoder_decoder:
+        batch_sds["source_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq_len, cfg.d_model), _emb_dtype(cfg))
+        batch_sh["source_embeds"] = fit_sharding(
+            batch_sds["source_embeds"], P(BD, None, None), mesh)
+    psh = param_shardings_sds(params_sds, mesh, cfg.sharding_mode)
+    return step_fn, (params_sds, batch_sds), (psh, batch_sh), ()
+
+
+def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh):
+    b, s = shape.global_batch, shape.seq_len
+    cdtype = jnp.dtype(cfg.compute_dtype)
+
+    def step_fn(params, cache, token, pos, memory=None):
+        logits, new_cache = T.decode_step(params, cfg, token=token, pos=pos,
+                                          cache=cache, memory=memory)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), new_cache
+
+    params_sds = model_sds(cfg)
+    cache_sds = jax.eval_shape(lambda: T.init_cache(cfg, b, s, cdtype))
+    cache_sh = _tree_shardings(
+        cache_sds, lambda p, nd: _cache_spec(p, nd, shape.name), mesh)
+    token_sds = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    args_sds = [params_sds, cache_sds, token_sds, pos_sds]
+    args_sh = [param_shardings_sds(params_sds, mesh, cfg.sharding_mode), cache_sh,
+               fit_sharding(token_sds, P(BD), mesh), NamedSharding(mesh, P())]
+    if cfg.is_encoder_decoder:
+        mem = jax.ShapeDtypeStruct((b, cfg.encoder_seq_len, cfg.d_model), cdtype)
+        args_sds.append(mem)
+        args_sh.append(fit_sharding(mem, P(BD, None, None), mesh))
+    return step_fn, tuple(args_sds), tuple(args_sh), (1,)
+
+
+def build_step(cfg: ModelConfig, shape_name: str, mesh, pod_compressor=None):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh,
+                                pod_compressor=pod_compressor)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_serve_step(cfg, shape, mesh)

@@ -1,0 +1,495 @@
+"""Core transformer layers: norms, RoPE, GQA attention (sliding-window /
+bias / qk-norm / softcap / cross), SwiGLU MLP, and capacity-based MoE.
+
+All layers are pure functions over nested-dict parameter pytrees.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import FULL_ATTENTION, ModelConfig
+from repro.launch.sharding import BATCH, MODEL, heads_ax, seq_ax, shard
+
+NEG_INF = -2.0e38
+
+
+def _dtype(cfg: ModelConfig, kind: str):
+    return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
+
+
+def dense_init(key, shape, dtype, in_axis=0):
+    fan_in = shape[in_axis]
+    scale = 1.0 / max(1, fan_in) ** 0.5
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def init_rms_norm(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(x, p, eps):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope(x, positions, theta):
+    """x: (..., L, H, Dh), positions: (..., L) int, theta: scalar."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = jnp.arange(half, dtype=jnp.float32) * (2.0 / dh)
+    inv = jnp.power(jnp.asarray(theta, jnp.float32), -freq)  # (half,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (..., L, half)
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # (..., L, 1, half)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    pdt = _dtype(cfg, "param")
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), pdt),
+        "wk": dense_init(ks[1], (d, kv, dh), pdt),
+        "wv": dense_init(ks[2], (d, kv, dh), pdt),
+        "wo": dense_init(ks[3], (h, dh, d), pdt, in_axis=0),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), pdt)
+        p["bk"] = jnp.zeros((kv, dh), pdt)
+        p["bv"] = jnp.zeros((kv, dh), pdt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rms_norm(dh, pdt)
+        p["k_norm"] = init_rms_norm(dh, pdt)
+    return p
+
+
+def _qkv(p, cfg, xq, xkv):
+    q = jnp.einsum("bld,dhk->blhk", xq, p["wq"])
+    k = jnp.einsum("bld,dhk->blhk", xkv, p["wk"])
+    v = jnp.einsum("bld,dhk->blhk", xkv, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _softcap(cfg, logits):
+    if cfg.attn_logit_softcap:
+        c = cfg.attn_logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask):
+    """Full-sequence attention.  q: (B,Lq,H,Dh) k/v: (B,Lk,KV,Dh),
+    mask: (B,1,Lq,Lk) or (1,1,Lq,Lk).
+
+    GQA KV heads are EXPANDED to H before the einsum: the (H → KV, G)
+    reshape of the grouped form is unrepresentable for a head sharding and
+    makes the SPMD partitioner all-gather activations across the mesh
+    (observed: 1 GiB gathers on qwen2-1.5b).  Expansion keeps the "model"
+    head sharding intact end-to-end; the extra KV bytes are activation-
+    sized and compute is unchanged."""
+    b, lq, h, dh = q.shape
+    kvh = k.shape[2]
+    if cfg.sharding_mode == "cp":
+        # context parallel: q rows stay sequence-sharded; the (small, GQA)
+        # KV is all-gathered over "model" (constraining seq to replicated).
+        # KV stays UN-expanded (grouped einsum): heads are not sharded in
+        # cp mode, and expanding first makes the backward reduce dk/dv at
+        # H instead of KV heads (§Perf hillclimb 2 it. 2: 8× extra wire).
+        k = shard(k, BATCH, None, None, None)
+        v = shard(v, BATCH, None, None, None)
+        g = h // kvh
+        qg = q.reshape(b, lq, kvh, g, dh)
+        logits = jnp.einsum("blkgd,bskd->bkgls", qg, k).astype(jnp.float32)
+        logits *= dh ** -0.5
+        logits = _softcap(cfg, logits)
+        logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+        probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        out = jnp.einsum("bkgls,bskd->blkgd", probs, v).reshape(b, lq, h, dh)
+        return shard(out, BATCH, seq_ax(cfg), None, None)
+    if kvh != h:
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+    k = shard(k, BATCH, None, MODEL, None)
+    v = shard(v, BATCH, None, MODEL, None)
+    logits = jnp.einsum("blhd,bshd->bhls", q, k).astype(jnp.float32)
+    logits *= dh ** -0.5
+    logits = _softcap(cfg, logits)
+    logits = jnp.where(mask, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhls,bshd->blhd", probs, v)
+    return shard(out, BATCH, seq_ax(cfg), heads_ax(cfg), None)
+
+
+def _sdpa_banded(cfg: ModelConfig, q, k, v, window: int):
+    """Block-banded sliding-window attention (exact for window ≤ block).
+
+    q,k,v: (B, L, H|KV, Dh); block = window; each q block attends to k
+    blocks [prev, self] with in-band masking — (2·w)/L of the dense FLOPs."""
+    b, l, h, dh = q.shape
+    kvh = k.shape[2]
+    if kvh != h and cfg.sharding_mode != "cp":
+        k = jnp.repeat(k, h // kvh, axis=2)
+        v = jnp.repeat(v, h // kvh, axis=2)
+        kvh = h
+    w = window
+    nb = l // w
+    qb = q.reshape(b, nb, w, h, dh)
+    kb = k.reshape(b, nb, w, kvh, dh)
+    vb = v.reshape(b, nb, w, kvh, dh)
+    kprev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    vprev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    kk = jnp.concatenate([kprev, kb], axis=2)  # (B, nb, 2w, KV, Dh)
+    vv = jnp.concatenate([vprev, vb], axis=2)
+
+    g = h // kvh
+    qg = qb.reshape(b, nb, w, kvh, g, dh)
+    logits = jnp.einsum("bnikgd,bnjkd->bnkgij", qg, kk).astype(jnp.float32)
+    logits *= dh ** -0.5
+    logits = _softcap(cfg, logits)
+    # in-band mask: global i = n·w + ii, global j = n·w − w + jj
+    ii = jnp.arange(w)[:, None]
+    jj = jnp.arange(2 * w)[None, :]
+    rel = ii + w - jj  # = i − j
+    first = jnp.arange(nb) == 0  # block 0 has no prev
+    valid = (rel >= 0) & (rel < w)  # causal ∧ window
+    valid = valid[None, :, :] & ~(first[:, None, None] & (jj < w)[None])
+    logits = jnp.where(valid[None, :, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(vv.dtype)
+    out = jnp.einsum("bnkgij,bnjkd->bnikgd", probs, vv)
+    out = out.reshape(b, l, h, dh)
+    return shard(out, BATCH, seq_ax(cfg), heads_ax(cfg), None)
+
+
+def _sdpa_decode(cfg: ModelConfig, q, k, v, mask):
+    """Single-token decode attention against the (unexpanded) KV cache.
+    q: (B,1,H,Dh), k/v: (B,S,KV,Dh) — the grouped einsum is fine here
+    because q is tiny and stays replicated over "model" while the cache's
+    sequence dim carries the sharding."""
+    b, lq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, lq, kvh, g, dh)
+    logits = jnp.einsum("blkgd,bskd->bkgls", q, k).astype(jnp.float32)
+    logits *= dh ** -0.5
+    logits = _softcap(cfg, logits)
+    logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgls,bskd->blkgd", probs, v)
+    return out.reshape(b, lq, h, dh)
+
+
+def attention(p, cfg: ModelConfig, x, positions, window, theta,
+              cache=None, cache_pos=None, memory=None, causal=True,
+              collect_cache=False):
+    """One attention sub-layer.
+
+    Training: ``cache is None`` — full-sequence causal (+sliding window) attn;
+              with ``collect_cache`` the full-sequence (k, v) are returned as
+              a populated decode cache (prefill).
+    Decode:   ``cache`` holds (k, v) of length S; x has Lq=1; ``cache_pos`` is
+              the write position.  Returns (out, new_cache).
+    Cross-attention: ``memory`` is the encoder output; no cache, no causality.
+    """
+    xkv = memory if memory is not None else x
+    q, k, v = _qkv(p, cfg, x, xkv)
+    b, lq = x.shape[0], x.shape[1]
+
+    if memory is not None:  # cross attention: full visibility
+        lk = memory.shape[1]
+        mask = jnp.ones((1, 1, lq, lk), bool)
+        out = _sdpa(cfg, q, k, v, mask)
+        new_cache = cache
+    elif cache is None:  # training / prefill self-attention
+        q = rope(q, positions, theta)
+        k = rope(k, positions, theta)
+        q = shard(q, BATCH, seq_ax(cfg), heads_ax(cfg), None)
+        k = shard(k, BATCH, seq_ax(cfg), heads_ax(cfg), None)
+        if (isinstance(window, int) and window > 0 and causal
+                and lq % window == 0 and lq // window >= 2):
+            # static sliding window ⇒ block-banded attention: each q block
+            # attends only to (prev, self) k blocks — compute ∝ L·window,
+            # the jnp analogue of the Pallas kernel's block skipping.
+            out = _sdpa_banded(cfg, q, k, v, window)
+        else:
+            i = positions[:, :, None]  # (B, L, 1)
+            j = positions[:, None, :]  # (B, 1, L)
+            mask = (j <= i) if causal else jnp.ones_like(j <= i)
+            w = jnp.where(window == FULL_ATTENTION,
+                          jnp.iinfo(jnp.int32).max, window)
+            mask = mask & (i - j < w)
+            out = _sdpa(cfg, q, k, v, mask[:, None])
+        new_cache = {"k": k, "v": v} if collect_cache else None
+    else:  # single-token decode; cache_pos: scalar OR (B,) ragged positions
+        pos = cache_pos
+        ragged = hasattr(pos, "ndim") and pos.ndim == 1
+        pos_b = pos[:, None] if ragged else jnp.full((b, lq), pos, jnp.int32)
+        q = rope(q, pos_b, theta)
+        k = rope(k, pos_b, theta)
+        if ragged:  # per-row scatter write (continuous batching)
+            rows = jnp.arange(b)
+            ck = cache["k"].at[rows, pos].set(k[:, 0].astype(cache["k"].dtype))
+            cv = cache["v"].at[rows, pos].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+        s = ck.shape[1]
+        j = jnp.arange(s, dtype=jnp.int32)[None, None, :]  # (1,1,S)
+        w = jnp.where(window == FULL_ATTENTION, jnp.iinfo(jnp.int32).max, window)
+        p_ = pos[:, None, None] if ragged else pos
+        mask = (j <= p_) & (p_ - j < w)  # (1,1,S) or ragged (B,1,S)
+        out = _sdpa_decode(cfg, q, ck, cv, mask[:, None])  # → (.,1,1,S)
+        new_cache = {"k": ck, "v": cv}
+    out = jnp.einsum("blhk,hkd->bld", out, p["wo"])
+    out = shard(out, BATCH, seq_ax(cfg), None)
+    return out, new_cache
+
+
+def init_attn_cache(cfg: ModelConfig, batch, max_seq, dtype):
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_seq, kv, dh), dtype),
+        "v": jnp.zeros((batch, max_seq, kv, dh), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# dense MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    pdt = _dtype(cfg, "param")
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d, f), pdt),
+        "w_up": dense_init(k2, (d, f), pdt),
+        "w_down": dense_init(k3, (f, d), pdt),
+    }
+
+
+def _act(name):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+def mlp(p, cfg: ModelConfig, x):
+    h = _act(cfg.act)(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, BATCH, seq_ax(cfg), heads_ax(cfg))
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — capacity-based scatter/gather dispatch (no T×E×C
+# one-hot: see DESIGN.md §3).  Experts are sharded over the "model" axis.
+# ---------------------------------------------------------------------------
+def init_moe(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.expert_d_ff
+    e = cfg.num_experts_padded  # dummy experts: zero weights, never routed
+    pdt = _dtype(cfg, "param")
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, cfg.num_experts), pdt),
+        "w_gate": dense_init(ks[1], (e, d, f), pdt, in_axis=1),
+        "w_up": dense_init(ks[2], (e, d, f), pdt, in_axis=1),
+        "w_down": dense_init(ks[3], (e, f, d), pdt, in_axis=1),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.num_shared_experts * f)
+    return p
+
+
+def _route(p, cfg: ModelConfig, xt, e_pad, cap):
+    """Shared routing math.  xt: (T, D) → (flat_idx, slot, keep, gate, aux)."""
+    t = xt.shape[0]
+    e, k = cfg.num_experts, cfg.top_k
+    logits = (xt @ p["router"]).astype(jnp.float32)  # (T, E) active experts
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)  # (T, k), idx < E ≤ E_pad
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    onehot = jax.nn.one_hot(idx, e_pad, dtype=jnp.float32)  # (T, k, E_pad)
+    f_e = jnp.mean(jnp.sum(onehot[..., :e], axis=1), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e) * cfg.router_aux_coef
+
+    flat_idx = idx.reshape(t * k)
+    flat_gate = gate_vals.reshape(t * k)
+    oh = onehot.reshape(t * k, e_pad)
+    pos_in_e = jnp.cumsum(oh, axis=0) - oh  # position among same-expert rows
+    slot = jnp.sum(pos_in_e * oh, axis=-1).astype(jnp.int32)
+    keep = slot < cap
+    slot = jnp.where(keep, slot, cap)  # overflow → dump slot
+    return flat_idx, slot, keep, flat_gate, aux
+
+
+def _expert_ffn(cfg, buf, w_gate, w_up, w_down):
+    h = _act(cfg.act)(jnp.einsum("ecd,edf->ecf", buf, w_gate))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, w_up)
+    return jnp.einsum("ecf,efd->ecd", h, w_down)
+
+
+def _moe_dense(p, cfg: ModelConfig, x):
+    """Reference path (no mesh / tiny token counts): capacity dispatch with
+    jnp scatter/gather on one device's view."""
+    b, l, d = x.shape
+    e_pad, k = cfg.num_experts_padded, cfg.top_k
+    t = b * l
+    xt = x.reshape(t, d)
+    cap = int(max(k, round(t * k / e_pad * cfg.capacity_factor)))
+    flat_idx, slot, keep, flat_gate, aux = _route(p, cfg, xt, e_pad, cap)
+
+    src = jnp.repeat(xt, k, axis=0) if k > 1 else xt  # (T*k, D)
+    buf = jnp.zeros((e_pad, cap + 1, d), x.dtype)
+    buf = buf.at[flat_idx, slot].set(src.astype(x.dtype))
+    buf = shard(buf, MODEL, None, None)
+    out_buf = _expert_ffn(cfg, buf, p["w_gate"], p["w_up"], p["w_down"])
+
+    gathered = out_buf[flat_idx, slot]  # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    combined = jnp.sum((gathered * flat_gate[:, None].astype(gathered.dtype))
+                       .reshape(t, k, d), axis=1)
+    return combined.reshape(b, l, d), aux
+
+
+def _moe_ep(p, cfg: ModelConfig, x, mesh):
+    """Expert-parallel MoE via shard_map (beyond-paper perf path; see
+    EXPERIMENTS.md §Perf hillclimb 1).
+
+    The pjit-auto scatter dispatch makes the SPMD partitioner replicate a
+    GLOBAL (E, T·k·cf/E, D) buffer (observed: 80 GiB all-reduces/layer on
+    qwen2-moe).  Here dispatch is token-local per data shard, experts are
+    exchanged with two tiled ``all_to_all``s over the "model" axis, and
+    expert weights are explicitly FSDP-gathered over "data" (ZeRO-3: gather
+    the small weights, never the activations)."""
+    from jax.sharding import PartitionSpec as P
+
+    b, l, d = x.shape
+    e_pad, k = cfg.num_experts_padded, cfg.top_k
+    names = mesh.axis_names
+    dp = _fit_batch_axes(mesh, b, tuple(a for a in ("pod", "data")
+                                        if a in names))
+    ep = _axsize(mesh, "model")
+    n_dp = 1
+    for a in dp:
+        n_dp *= _axsize(mesh, a)
+    t_loc = (b // n_dp) * l
+    if t_loc % ep:
+        return _moe_dense(p, cfg, x)  # token slice must divide the EP axis
+    t_slice = t_loc // ep  # tokens dispatched by each model-device
+    e_loc = e_pad // ep
+    cap = int(max(k, round(t_slice * k / e_pad * cfg.capacity_factor)))
+    cap = -(-cap // 8) * 8  # tile-align
+
+    def local_fn(xl, router, wg, wu, wd):
+        # xl: (b_loc, L, D) — REPLICATED over "model"; each model-device
+        # dispatches only its 1/ep token slice (otherwise all ep devices
+        # dispatch identical tokens and expert compute + wire blow up ep×:
+        # §Perf hillclimb 1 it. 3).
+        bl = xl.shape[0]
+        xt = xl.reshape(bl * l, d)
+        midx = jax.lax.axis_index("model")
+        xt = jax.lax.dynamic_slice_in_dim(xt, midx * t_slice, t_slice, 0)
+        flat_idx, slot, keep, flat_gate, aux = _route(
+            {"router": router}, cfg, xt, e_pad, cap)
+        src = jnp.repeat(xt, k, axis=0) if k > 1 else xt
+        buf = jnp.zeros((e_pad, cap + 1, d), xl.dtype)
+        buf = buf.at[flat_idx, slot].set(src.astype(xl.dtype))
+        buf = buf[:, :cap]  # drop dump slot before the wire
+
+        # dispatch a2a: (E_pad, C, D) → (E_loc, ep·C, D).  Named so the
+        # opt-in remat policy can SAVE the a2a results (§Perf h1 it. 2).
+        recv = jax.lax.all_to_all(buf, "model", split_axis=0, concat_axis=1,
+                                  tiled=True)
+        recv = checkpoint_name(recv, "moe_dispatch")
+        # ZeRO-3 weight gather over the fsdp tier (grads reduce-scatter via AD)
+        if "data" in names:
+            wg = jax.lax.all_gather(wg, "data", axis=1, tiled=True)
+            wu = jax.lax.all_gather(wu, "data", axis=1, tiled=True)
+            wd = jax.lax.all_gather(wd, "data", axis=2, tiled=True)
+        out_loc = _expert_ffn(cfg, recv, wg, wu, wd)  # (E_loc, ep·C, D)
+        # combine a2a: back to (E_pad, C, D) for my token slice
+        back = jax.lax.all_to_all(out_loc, "model", split_axis=1,
+                                  concat_axis=0, tiled=True)
+        back = checkpoint_name(back, "moe_combine")
+        back = jnp.concatenate(
+            [back, jnp.zeros((e_pad, 1, d), back.dtype)], axis=1)  # dump slot
+        gathered = back[flat_idx, slot]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        combined = jnp.sum(
+            (gathered * flat_gate[:, None].astype(gathered.dtype))
+            .reshape(t_slice, k, d), axis=1)
+        # reassemble the full local token set (cheap: t_slice·D)
+        combined = jax.lax.all_gather(combined, "model", axis=0, tiled=True)
+        aux = jax.lax.pmean(aux, "model")
+        if dp:
+            aux = jax.lax.pmean(aux, dp)
+        return combined.reshape(bl, l, d), aux
+
+    batch_spec = P(dp if dp else None, None, None)
+    out, aux = jax.shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(batch_spec, P(None, None),
+                  P("model", "data" if "data" in names else None, None),
+                  P("model", "data" if "data" in names else None, None),
+                  P("model", None, "data" if "data" in names else None)),
+        out_specs=(batch_spec, P()),
+        check_vma=False,
+    )(x, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+    return out, aux
+
+
+def _axsize(mesh, name):
+    return dict(mesh.shape).get(name, 1)
+
+
+def _fit_batch_axes(mesh, b, candidates):
+    axes = []
+    prod = 1
+    for a in candidates:
+        s = _axsize(mesh, a)
+        if s > 1 and b % (prod * s) == 0:
+            axes.append(a)
+            prod *= s
+    return tuple(axes)
+
+
+def moe(p, cfg: ModelConfig, x):
+    """x: (B, L, D) → (out, aux_loss).  Dispatches to the expert-parallel
+    shard_map path under a mesh with a "model" axis (and enough tokens),
+    else the dense reference path."""
+    mesh = jax.sharding.get_abstract_mesh()
+    use_ep = (mesh is not None and not mesh.empty
+              and "model" in mesh.axis_names
+              and cfg.num_experts_padded % _axsize(mesh, "model") == 0
+              and x.shape[0] * x.shape[1] >= 4096)
+    if use_ep:
+        out, aux = _moe_ep(p, cfg, x, mesh)
+    else:
+        out, aux = _moe_dense(p, cfg, x)
+    if "shared" in p:
+        out = out + mlp(p["shared"], cfg, x)
+    return out, aux

@@ -1,0 +1,310 @@
+"""State-space & recurrent mixers: Mamba (selective SSM, chunked associative
+scan), and xLSTM's mLSTM / sLSTM blocks.
+
+TPU adaptation notes (DESIGN.md §2): the CUDA "hardware-aware" fused scan of
+the Mamba paper is realized here as a *chunked* ``lax.associative_scan`` —
+time is processed in VMEM-sized chunks (cfg.ssm_chunk) with an O(1) carry
+between chunks, which bounds the materialized (B, chunk, d_inner, N) tensor
+instead of the full (B, L, d_inner, N).  mLSTM uses the quadratic parallel
+form for training (it is attention-shaped, MXU-friendly) and the O(1)
+recurrent form for decode.  sLSTM is inherently sequential (recurrent weight
+matrix) and uses ``lax.scan`` over time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import BATCH, MODEL, shard
+from repro.models.layers import _dtype, dense_init, init_rms_norm, rms_norm
+
+NEG_INF = -2.0e38
+
+
+# ===========================================================================
+# Mamba (S6) block
+# ===========================================================================
+def init_mamba(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    kconv = cfg.ssm_conv_dim
+    dt_rank = max(1, d // 16)
+    pdt = _dtype(cfg, "param")
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), pdt),
+        "conv_w": dense_init(ks[1], (kconv, d_in), pdt),
+        "conv_b": jnp.zeros((d_in,), pdt),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * n), pdt),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), pdt),
+        "dt_bias": jnp.zeros((d_in,), pdt),
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                                          (d_in, n)).astype(pdt)),
+        "D": jnp.ones((d_in,), pdt),
+        "out_proj": dense_init(ks[4], (d_in, d), pdt),
+    }
+
+
+def _mamba_bcdt(p, cfg, u):
+    """u: (..., d_in) → (delta, B, C) with shapes (..., d_in), (..., N), (..., N)."""
+    n = cfg.ssm_state_dim
+    dbl = u @ p["x_proj"]  # (..., dt_rank + 2N)
+    dt_rank = dbl.shape[-1] - 2 * n
+    dt, b, c = dbl[..., :dt_rank], dbl[..., dt_rank:dt_rank + n], dbl[..., dt_rank + n:]
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # (..., d_in)
+    return delta, b, c
+
+
+def _causal_conv(p, u, conv_state=None):
+    """Depthwise causal conv over time.  u: (B, L, d_in)."""
+    k = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)  # (B, L+k-1, d_in)
+    out = sum(full[:, i:i + u.shape[1], :] * p["conv_w"][i] for i in range(k))
+    new_state = full[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out + p["conv_b"]), new_state
+
+
+def _selective_scan_chunk(a, bu, h0):
+    """Within-chunk associative scan.  a, bu: (B, c, d_in, N); h0: (B, d_in, N)."""
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_, b_ = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    h = a_ * h0[:, None] + b_  # (B, c, d_in, N)
+    return h, h[:, -1]
+
+
+def mamba(p, cfg: ModelConfig, x, cache=None, collect_cache=False):
+    """x: (B, L, D) → (out, new_cache).  cache = {"conv": (B,k-1,d_in), "ssm": (B,d_in,N)}."""
+    b, l, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state_dim
+    xz = x @ p["in_proj"]  # (B, L, 2*d_in)
+    u, z = xz[..., :d_in], xz[..., d_in:]
+    u = shard(u, BATCH, None, MODEL)
+
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))  # (d_in, N)
+
+    if cache is None:
+        u_pre = u  # pre-conv activations (tail feeds the decode conv state)
+        u, _ = _causal_conv(p, u)
+        delta, bb, cc = _mamba_bcdt(p, cfg, u)
+        # discretize: abar = exp(delta * A); bbar*u = delta * u * B
+        dA = delta.astype(jnp.float32)[..., None] * a_mat  # (B,L,d_in,N)
+        abar = jnp.exp(dA)
+        bu = (delta * u).astype(jnp.float32)[..., None] * bb.astype(jnp.float32)[..., None, :]
+
+        chunk = min(cfg.ssm_chunk, l)
+        if l % chunk:
+            chunk = l  # fall back: single chunk (smoke tests with odd L)
+        nchunks = l // chunk
+        abar = abar.reshape(b, nchunks, chunk, d_in, n)
+        bu = bu.reshape(b, nchunks, chunk, d_in, n)
+
+        def step(h0, xs):
+            ac, bc = xs  # (B, chunk, d_in, N)
+            hs, hlast = _selective_scan_chunk(ac, bc, h0)
+            return hlast, hs
+
+        h0 = jnp.zeros((b, d_in, n), jnp.float32)
+        _, hs = jax.lax.scan(step, h0,
+                             (abar.swapaxes(0, 1), bu.swapaxes(0, 1)))
+        hs = hs.swapaxes(0, 1).reshape(b, l, d_in, n)
+        y = jnp.einsum("bldn,bln->bld", hs, cc.astype(jnp.float32))
+        y = y + p["D"].astype(jnp.float32) * u.astype(jnp.float32)
+        new_cache = None
+        if collect_cache:  # prefill: expose final recurrent + conv state
+            kconv = cfg.ssm_conv_dim
+            new_cache = {"conv": u_pre[:, -(kconv - 1):, :] if kconv > 1 else
+                         jnp.zeros((b, 0, d_in), u_pre.dtype),
+                         "ssm": hs[:, -1]}
+    else:
+        # single-token decode: O(1) state update
+        u1, conv_state = _causal_conv(p, u, cache["conv"])
+        delta, bb, cc = _mamba_bcdt(p, cfg, u1)
+        dA = delta.astype(jnp.float32)[..., None] * a_mat  # (B,1,d_in,N)
+        abar = jnp.exp(dA)[:, 0]
+        bu = (delta * u1).astype(jnp.float32)[..., None] * bb.astype(jnp.float32)[..., None, :]
+        h = abar * cache["ssm"] + bu[:, 0]  # (B, d_in, N)
+        y = jnp.einsum("bdn,bn->bd", h, cc[:, 0].astype(jnp.float32))[:, None]
+        y = y + p["D"].astype(jnp.float32) * u1.astype(jnp.float32)
+        new_cache = {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}
+
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    return shard(out, BATCH, None, None), new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch, dtype):
+    d_in = cfg.ssm_expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, cfg.ssm_state_dim), jnp.float32),
+    }
+
+
+# ===========================================================================
+# mLSTM block (xLSTM): matrix memory, exponential gating.
+# ===========================================================================
+def init_mlstm(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = (cfg.ssm_expand * d) // h
+    pdt = _dtype(cfg, "param")
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h, dh), pdt),
+        "wk": dense_init(ks[1], (d, h, dh), pdt),
+        "wv": dense_init(ks[2], (d, h, dh), pdt),
+        "w_igate": dense_init(ks[3], (d, h), pdt),
+        "w_fgate": dense_init(ks[4], (d, h), pdt),
+        "fgate_bias": jnp.full((h,), 3.0, pdt),  # init toward remembering
+        "out_norm": init_rms_norm(h * dh, pdt),
+        "out_proj": dense_init(ks[5], (h * dh, d), pdt),
+    }
+
+
+def mlstm(p, cfg: ModelConfig, x, cache=None, collect_cache=False):
+    """x: (B,L,D).  Training: parallel quadratic form.  Decode: recurrent."""
+    b, l, d = x.shape
+    h = cfg.num_heads
+    dh = (cfg.ssm_expand * d) // h
+    q = jnp.einsum("bld,dhk->bhlk", x, p["wq"]) * dh ** -0.5
+    k = jnp.einsum("bld,dhk->bhlk", x, p["wk"]) * dh ** -0.5
+    v = jnp.einsum("bld,dhk->bhlk", x, p["wv"])
+    logi = (x @ p["w_igate"]).swapaxes(1, 2).astype(jnp.float32)  # (B,H,L)
+    logf = jax.nn.log_sigmoid(
+        (x @ p["w_fgate"]).swapaxes(1, 2).astype(jnp.float32)
+        + p["fgate_bias"].astype(jnp.float32)[None, :, None])
+
+    if cache is None:
+        # D_ij = sum_{s=j+1..i} logf_s + logi_j  (j <= i)
+        cumf = jnp.cumsum(logf, axis=-1)  # (B,H,L)
+        dmat = cumf[..., :, None] - cumf[..., None, :] + logi[..., None, :]
+        causal = jnp.tril(jnp.ones((l, l), bool))
+        dmat = jnp.where(causal, dmat, NEG_INF)
+        m = jnp.max(dmat, axis=-1, keepdims=True)  # (B,H,L,1) stabilizer
+        dexp = jnp.exp(dmat - m)
+        s = jnp.einsum("bhlk,bhsk->bhls", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * dexp
+        norm = jnp.maximum(jnp.abs(jnp.sum(s, axis=-1, keepdims=True)),
+                           jnp.exp(-m))
+        out = jnp.einsum("bhls,bhsk->bhlk", s / norm, v.astype(jnp.float32))
+        new_cache = None
+        if collect_cache:
+            # final recurrent state from the parallel form:
+            # d_j = Σ_{s>j} logf_s + logi_j ; C_L = Σ_j e^{d_j − m} v_j k_jᵀ
+            dj = cumf[..., -1:] - cumf + logi  # (B,H,L)
+            m_fin = jnp.max(dj, axis=-1)  # (B,H)
+            w_ = jnp.exp(dj - m_fin[..., None])  # (B,H,L)
+            kf = k.astype(jnp.float32)
+            vf = v.astype(jnp.float32)
+            C_fin = jnp.einsum("bhl,bhlv,bhlk->bhvk", w_, vf, kf)
+            n_fin = jnp.einsum("bhl,bhlk->bhk", w_, kf)
+            new_cache = {"C": C_fin, "n": n_fin, "m": m_fin}
+    else:
+        # recurrent: C ← f C + i v kᵀ ; n ← f n + i k ; h = (Cᵀ q)/max(|n·q|, e⁻ᵐ)
+        C, nvec, m0 = cache["C"], cache["n"], cache["m"]  # (B,H,dh,dh),(B,H,dh),(B,H)
+        logi0, logf0 = logi[..., 0], logf[..., 0]  # (B,H)
+        m1 = jnp.maximum(logf0 + m0, logi0)
+        fp = jnp.exp(logf0 + m0 - m1)[..., None]
+        ip = jnp.exp(logi0 - m1)[..., None]
+        k0 = k[:, :, 0].astype(jnp.float32)
+        v0 = v[:, :, 0].astype(jnp.float32)
+        q0 = q[:, :, 0].astype(jnp.float32)
+        C = fp[..., None] * C + ip[..., None] * (v0[..., :, None] * k0[..., None, :])
+        nvec = fp * nvec + ip * k0
+        num = jnp.einsum("bhvk,bhk->bhv", C, q0)
+        den = jnp.maximum(jnp.abs(jnp.sum(nvec * q0, axis=-1)), jnp.exp(-m1))
+        out = (num / den[..., None])[:, :, None, :]  # (B,H,1,dh)
+        new_cache = {"C": C, "n": nvec, "m": m1}
+
+    out = out.swapaxes(1, 2).reshape(b, -1, h * dh).astype(x.dtype)
+    out = rms_norm(out, p["out_norm"], cfg.norm_eps)
+    return out @ p["out_proj"], new_cache
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch, dtype):
+    h = cfg.num_heads
+    dh = (cfg.ssm_expand * cfg.d_model) // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.zeros((batch, h), jnp.float32),
+    }
+
+
+# ===========================================================================
+# sLSTM block (xLSTM): scalar memory, recurrent weights — sequential scan.
+# ===========================================================================
+def init_slstm(key, cfg: ModelConfig):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    pdt = _dtype(cfg, "param")
+    ks = jax.random.split(key, 3)
+    return {
+        "W": dense_init(ks[0], (d, 4 * d), pdt),  # i, f, z, o from x
+        "R": dense_init(ks[1], (h, dh, 4 * dh), pdt),  # block-diag recurrence
+        "b": jnp.concatenate([jnp.zeros((d,), pdt),
+                              jnp.full((d,), 3.0, pdt),  # forget bias
+                              jnp.zeros((2 * d,), pdt)]),
+        "out_proj": dense_init(ks[2], (d, d), pdt),
+    }
+
+
+def _slstm_cell(p, cfg, xw, state):
+    """xw: (B, 4D) pre-computed x @ W + b; state: dict of (B, D)."""
+    b = xw.shape[0]
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    c, n, hid, m = state["c"], state["n"], state["h"], state["m"]
+    rec = jnp.einsum("bhk,hkj->bhj", hid.reshape(b, h, dh).astype(jnp.float32),
+                     p["R"].astype(jnp.float32)).reshape(b, 4 * d)
+    g = xw.astype(jnp.float32) + rec
+    gi, gf, gz, go = jnp.split(g, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(gf)
+    m1 = jnp.maximum(logf + m, gi)
+    ip = jnp.exp(gi - m1)
+    fp = jnp.exp(logf + m - m1)
+    c1 = fp * c + ip * jnp.tanh(gz)
+    n1 = fp * n + ip
+    h1 = jax.nn.sigmoid(go) * c1 / jnp.maximum(n1, 1.0)
+    return {"c": c1, "n": n1, "h": h1, "m": m1}
+
+
+def slstm(p, cfg: ModelConfig, x, cache=None, collect_cache=False):
+    """x: (B, L, D) → (out, new_cache)."""
+    b, l, d = x.shape
+    xw = x @ p["W"] + p["b"]  # (B, L, 4D)
+
+    if cache is None:
+        state = init_slstm_cache(cfg, b, jnp.float32)
+
+        def step(st, xt):
+            st1 = _slstm_cell(p, cfg, xt, st)
+            return st1, st1["h"]
+
+        final, hs = jax.lax.scan(step, state, xw.swapaxes(0, 1))
+        out = hs.swapaxes(0, 1).astype(x.dtype)  # (B, L, D)
+        new_cache = final if collect_cache else None
+    else:
+        st1 = _slstm_cell(p, cfg, xw[:, 0], cache)
+        out = st1["h"][:, None].astype(x.dtype)
+        new_cache = st1
+    return out @ p["out_proj"], new_cache
+
+
+def init_slstm_cache(cfg: ModelConfig, batch, dtype):
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z}

@@ -1,0 +1,304 @@
+"""Model assembly: decoder-only LM and encoder-decoder, built from
+ModelConfig super-blocks and executed as ``lax.scan`` over stacked layer
+parameters (compile-time O(1) in depth).
+
+Public API:
+    init_model(key, cfg)                       → params
+    forward(params, cfg, tokens/embeds, ...)   → (logits, aux)   [training]
+    init_cache(cfg, batch, max_seq, dtype)     → cache pytree
+    decode_step(params, cfg, token, pos, cache, memory) → (logits, cache)
+    encode(params, cfg, embeds/tokens)         → memory            [enc-dec]
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import FULL_ATTENTION, LayerSpec, ModelConfig
+from repro.launch.sharding import BATCH, MODEL, heads_ax, seq_ax, shard
+from repro.models import layers as L
+from repro.models import ssm as S
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / apply
+# ---------------------------------------------------------------------------
+def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, cross: bool):
+    ks = jax.random.split(key, 8)
+    pdt = jnp.dtype(cfg.param_dtype)
+    p = {"pre_norm": L.init_rms_norm(cfg.d_model, pdt)}
+    if spec.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif spec.mixer == "mamba":
+        p["mamba"] = S.init_mamba(ks[0], cfg)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = S.init_mlstm(ks[0], cfg)
+    elif spec.mixer == "slstm":
+        p["slstm"] = S.init_slstm(ks[0], cfg)
+    if cross:
+        p["cross_norm"] = L.init_rms_norm(cfg.d_model, pdt)
+        p["cross_attn"] = L.init_attention(ks[1], cfg, cross=True)
+    if spec.ffn != "none":
+        p["ffn_norm"] = L.init_rms_norm(cfg.d_model, pdt)
+        if spec.ffn == "moe":
+            p["moe"] = L.init_moe(ks[2], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[2], cfg)
+    return p
+
+
+def _apply_layer(p, cfg, spec, h, positions, window, theta, cache, cache_pos,
+                 memory, causal=True, collect_cache=False):
+    """One (mixer → [cross] → ffn) layer. Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    x = L.rms_norm(h, p["pre_norm"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        out, new_cache = L.attention(p["attn"], cfg, x, positions, window,
+                                     theta, cache=cache, cache_pos=cache_pos,
+                                     causal=causal, collect_cache=collect_cache)
+    elif spec.mixer == "mamba":
+        out, new_cache = S.mamba(p["mamba"], cfg, x, cache=cache,
+                                 collect_cache=collect_cache)
+    elif spec.mixer == "mlstm":
+        out, new_cache = S.mlstm(p["mlstm"], cfg, x, cache=cache,
+                                 collect_cache=collect_cache)
+    elif spec.mixer == "slstm":
+        out, new_cache = S.slstm(p["slstm"], cfg, x, cache=cache,
+                                 collect_cache=collect_cache)
+    else:
+        out, new_cache = jnp.zeros_like(h), cache
+    h = h + out
+
+    if "cross_attn" in p and memory is not None:
+        x = L.rms_norm(h, p["cross_norm"], cfg.norm_eps)
+        out, _ = L.attention(p["cross_attn"], cfg, x, positions, window,
+                             theta, memory=memory)
+        h = h + out
+
+    if spec.ffn != "none":
+        x = L.rms_norm(h, p["ffn_norm"], cfg.norm_eps)
+        if spec.ffn == "moe":
+            out, aux = L.moe(p["moe"], cfg, x)
+        else:
+            out = L.mlp(p["mlp"], cfg, x)
+        h = h + out
+    return h, new_cache, aux
+
+
+def _init_layer_cache(cfg, spec, batch, max_seq, dtype):
+    if spec.mixer == "attn":
+        return L.init_attn_cache(cfg, batch, max_seq, dtype)
+    if spec.mixer == "mamba":
+        return S.init_mamba_cache(cfg, batch, dtype)
+    if spec.mixer == "mlstm":
+        return S.init_mlstm_cache(cfg, batch, dtype)
+    if spec.mixer == "slstm":
+        return S.init_slstm_cache(cfg, batch, dtype)
+    return {}
+
+
+# ---------------------------------------------------------------------------
+# model init
+# ---------------------------------------------------------------------------
+def init_model(key, cfg: ModelConfig):
+    specs, repeat = cfg.superblock()
+    pdt = jnp.dtype(cfg.param_dtype)
+    k_emb, k_stack, k_enc, k_head = jax.random.split(key, 4)
+
+    def init_superblock(k):
+        ks = jax.random.split(k, len(specs))
+        return {str(i): _init_layer(ks[i], cfg, spec, cross=cfg.is_encoder_decoder)
+                for i, spec in enumerate(specs)}
+
+    params = {
+        "embed": L.dense_init(k_emb, (cfg.vocab_size, cfg.d_model), pdt),
+        "stack": jax.vmap(init_superblock)(jax.random.split(k_stack, repeat)),
+        "final_norm": L.init_rms_norm(cfg.d_model, pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), pdt)
+    if cfg.is_encoder_decoder:
+        enc_spec = LayerSpec(mixer="attn", ffn="mlp")
+
+        def init_enc_layer(k):
+            return _init_layer(k, cfg, enc_spec, cross=False)
+
+        params["encoder"] = {
+            "stack": jax.vmap(init_enc_layer)(
+                jax.random.split(k_enc, cfg.num_encoder_layers)),
+            "final_norm": L.init_rms_norm(cfg.d_model, pdt),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# stack traversal (shared by training forward and decode)
+# ---------------------------------------------------------------------------
+def _run_stack(params, cfg: ModelConfig, h, positions, cache, cache_pos,
+               memory, remat=False, collect_cache=False):
+    specs, repeat = cfg.superblock()
+    np_windows, np_thetas = cfg.layer_windows()  # (repeat, S) numpy arrays
+    windows = jnp.asarray(np_windows)
+    thetas = jnp.asarray(np_thetas)
+
+    def superblock_body(carry, xs):
+        h, aux_acc = carry
+        p_sb, win_sb, th_sb, cache_sb = xs
+        new_cache_sb = {}
+        for i, spec in enumerate(specs):
+            c_i = cache_sb[str(i)] if cache_sb is not None else None
+            h, nc, aux = _apply_layer(
+                p_sb[str(i)], cfg, spec, h, positions, win_sb[i], th_sb[i],
+                c_i, cache_pos, memory, collect_cache=collect_cache)
+            new_cache_sb[str(i)] = nc if nc is not None else {}
+        return (h, aux_acc + aux), new_cache_sb
+
+    if remat:
+        if cfg.save_moe_a2a:
+            # save the named MoE a2a results across the remat boundary:
+            # −2 a2a/layer of wire, +~2.7 GB/layer of HBM (see §Perf it. 2)
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "moe_dispatch", "moe_combine")
+            body = jax.checkpoint(superblock_body, policy=policy)
+        else:
+            body = jax.checkpoint(superblock_body)
+    else:
+        body = superblock_body
+
+    if cfg.scan_layers:
+        (h, aux), new_cache = jax.lax.scan(
+            body, (h, jnp.zeros((), jnp.float32)),
+            (params["stack"], windows, thetas, cache))
+    else:  # unrolled: exact cost_analysis for the dry-run.  Window/theta are
+        # STATIC python scalars (closed over, NOT traced) so sliding-window
+        # layers take the block-banded attention path (compute ∝ window).
+        carry = (h, jnp.zeros((), jnp.float32))
+        collected = []
+        for r in range(repeat):
+            p_r = jax.tree.map(lambda x: x[r], params["stack"])
+            c_r = jax.tree.map(lambda x: x[r], cache) if cache is not None else None
+            win_r = tuple(int(w) for w in np_windows[r])
+            th_r = tuple(float(t) for t in np_thetas[r])
+
+            def body_r(carry, pc, _w=win_r, _t=th_r):
+                return superblock_body(carry, (pc[0], _w, _t, pc[1]))
+
+            body_r = jax.checkpoint(body_r) if remat else body_r
+            carry, nc = body_r(carry, (p_r, c_r))
+            collected.append(nc)
+        h, aux = carry
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *collected) \
+            if collected and (cache is not None or collect_cache) else None
+    if cache is None and not collect_cache:
+        new_cache = None
+    return h, aux, new_cache
+
+
+def _logits(params, cfg, h):
+    h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+    if cfg.sharding_mode == "cp":
+        # gather the (seq-sharded) stream once at the head so the vocab
+        # projection stays TP-sharded — otherwise the (V, D) embed/lm_head
+        # gradient is replicated and all-reduced densely (§Perf h2 it. 2)
+        h = shard(h, BATCH, None, None)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bld,vd->blv", h, params["embed"])
+    else:
+        logits = jnp.einsum("bld,dv->blv", h, params["lm_head"])
+    return shard(logits, BATCH, None, MODEL).astype(jnp.float32)
+
+
+def _embed(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        h = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        h = params["embed"][tokens].astype(jnp.dtype(cfg.compute_dtype))
+        h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype) if cfg.qk_norm else h
+    return shard(h, BATCH, seq_ax(cfg), None)
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
+            memory=None, remat=False):
+    """Training/prefill forward pass. Returns (logits, aux_loss)."""
+    h = _embed(params, cfg, tokens, embeds)
+    b, l = h.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    if cfg.is_encoder_decoder and memory is None:
+        raise ValueError("encoder-decoder model requires encoder `memory`")
+    h, aux, _ = _run_stack(params, cfg, h, positions, None, None, memory,
+                           remat=remat)
+    return _logits(params, cfg, h), aux
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, memory=None,
+            last_only=False):
+    """Full-sequence forward that also returns a populated decode cache
+    (inference prefill).  Returns (logits, cache); ``last_only`` projects
+    only the final position (what a real prefill needs — avoids the
+    (B, L, V) logits tensor)."""
+    h = _embed(params, cfg, tokens, embeds)
+    b, l = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    h, _, cache = _run_stack(params, cfg, h, positions, None, None, memory,
+                             collect_cache=True)
+    if last_only:
+        h = h[:, -1:]
+    return _logits(params, cfg, h), cache
+
+
+def encode(params, cfg: ModelConfig, embeds=None, tokens=None):
+    """Encoder pass (enc-dec models): bidirectional self-attention stack."""
+    enc = params["encoder"]
+    h = _embed(params, cfg, tokens, embeds)
+    b, l = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
+    spec = LayerSpec(mixer="attn", ffn="mlp")
+
+    def body(carry, p_layer):
+        h, _ = carry
+        h, _, _ = _apply_layer(p_layer, cfg, spec, h, positions,
+                               jnp.int32(FULL_ATTENTION),
+                               jnp.float32(cfg.rope_theta),
+                               None, None, None, causal=False)
+        return (h, 0.0), None
+
+    (h, _), _ = jax.lax.scan(body, (h, 0.0), enc["stack"])
+    return L.rms_norm(h, enc["final_norm"], cfg.norm_eps)
+
+
+def init_cache(cfg: ModelConfig, batch, max_seq, dtype=None):
+    """Decode cache, stacked (repeat, ...) to ride the same scan."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    specs, repeat = cfg.superblock()
+
+    def one(spec):
+        return _init_layer_cache(cfg, spec, batch, max_seq, dtype)
+
+    sb = {str(i): one(spec) for i, spec in enumerate(specs)}
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (repeat,) + x.shape).copy()
+                        if hasattr(x, "shape") else x, sb)
+
+
+def decode_step(params, cfg: ModelConfig, token=None, pos=None, cache=None,
+                memory=None, embeds=None):
+    """One-token decode against a KV/state cache.  token: (B,) int32;
+    pos: scalar int32 write position, or (B,) int32 for ragged slots
+    (continuous batching). Returns (logits (B, V), new_cache)."""
+    if embeds is None:
+        h = _embed(params, cfg, tokens=token[:, None])
+    else:
+        h = embeds
+    b = h.shape[0]
+    if hasattr(pos, "ndim") and pos.ndim == 1:
+        positions = pos[:, None].astype(jnp.int32)
+    else:
+        positions = jnp.full((b, 1), pos, jnp.int32)
+    h, _, new_cache = _run_stack(params, cfg, h, positions, cache, pos, memory)
+    return _logits(params, cfg, h)[:, 0], new_cache

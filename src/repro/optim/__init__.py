@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, momentum, adam, delay_compensated_sgd,
+    cosine_schedule, warmup_cosine, constant_schedule,
+)

@@ -1,0 +1,141 @@
+"""In-house optimizers (no optax dependency).
+
+SGD / momentum / Adam, plus the staleness-aware variant the paper's §3
+discussion calls for: delay-compensated SGD (Zheng et al., cited as [41]),
+which first-order-corrects a stale gradient toward the current weights.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# learning-rate schedules
+# ---------------------------------------------------------------------------
+def constant_schedule(lr):
+    return lambda t: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_schedule(lr, total_steps, final_frac=0.1):
+    def f(t):
+        frac = jnp.clip(t / max(1, total_steps), 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * c)
+    return f
+
+
+def warmup_cosine(lr, warmup, total_steps, final_frac=0.1):
+    cos = cosine_schedule(lr, total_steps - warmup, final_frac)
+    def f(t):
+        w = jnp.minimum(1.0, (t + 1) / max(1, warmup))
+        return jnp.where(t < warmup, lr * w, cos(t - warmup))
+    return f
+
+
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable  # params -> opt_state
+    update: Callable  # (grads, opt_state, params, t) -> (new_params, opt_state)
+
+
+def _as_sched(lr):
+    return lr if callable(lr) else constant_schedule(lr)
+
+
+def sgd(lr, weight_decay: float = 0.0) -> Optimizer:
+    lr = _as_sched(lr)
+
+    def init(params):
+        return {}
+
+    def update(grads, state, params, t):
+        step = lr(t)
+        new = jax.tree.map(
+            lambda p, g: p - step * (g + weight_decay * p).astype(p.dtype),
+            params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False,
+             weight_decay: float = 0.0) -> Optimizer:
+    lr = _as_sched(lr)
+
+    def init(params):
+        return {"m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params, t):
+        step = lr(t)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                         state["m"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                               m, grads)
+        else:
+            upd = m
+        new = jax.tree.map(
+            lambda p, u: p - step * (u + weight_decay * p).astype(p.dtype),
+            params, upd)
+        return new, {"m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr = _as_sched(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, t):
+        tt = t.astype(jnp.float32) + 1.0 if hasattr(t, "astype") else float(t) + 1.0
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** tt), m)
+        vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** tt), v)
+        step = lr(t)
+        new = jax.tree.map(
+            lambda p, m_, v_: p - step * (m_ / (jnp.sqrt(v_) + eps)
+                                          + weight_decay * p.astype(jnp.float32)).astype(p.dtype),
+            params, mh, vh)
+        return new, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def delay_compensated_sgd(lr, lam: float = 0.04) -> Optimizer:
+    """DC-ASGD (Zheng et al. 2016): g̃ = g + λ · g ⊙ g ⊙ (w − w_bak).
+
+    ``w_bak`` is the weight snapshot the gradient was computed against;
+    the optimizer state carries it and the *caller* (an async strategy)
+    refreshes it via ``state["w_bak"]`` when it ships a gradient.
+    """
+    lr = _as_sched(lr)
+
+    def init(params):
+        return {"w_bak": jax.tree.map(lambda p: p.astype(jnp.float32), params)}
+
+    def update(grads, state, params, t):
+        step = lr(t)
+
+        def comp(p, g, wb):
+            gf = g.astype(jnp.float32)
+            corr = gf + lam * gf * gf * (p.astype(jnp.float32) - wb)
+            return p - (step * corr).astype(p.dtype)
+
+        new = jax.tree.map(comp, params, grads, state["w_bak"])
+        new_bak = jax.tree.map(lambda p: p.astype(jnp.float32), new)
+        return new, {"w_bak": new_bak}
+
+    return Optimizer(init, update)

@@ -1,0 +1,141 @@
+"""Batched decode engine with TRUE continuous batching.
+
+Every slot carries its own position (ragged (B,) write positions in the
+cache — models/layers.py decode path): a freed slot is refilled from the
+queue immediately and ingests its prompt token-by-token while neighbouring
+slots keep generating.  One jitted decode step serves both phases.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (Lp,) int32
+    max_new_tokens: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class DecodeEngine:
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_seq: int, memory=None, pad_token: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.memory = memory
+        self.pad = pad_token
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.steps = 0
+        self.cache = T.init_cache(cfg, batch_slots, max_seq)
+        self.pos = np.zeros(batch_slots, np.int32)  # per-slot write position
+        self.slot: List[Optional[Request]] = [None] * batch_slots
+        self.phase = ["idle"] * batch_slots  # idle | prompt | decode
+        self.prompt_cursor = np.zeros(batch_slots, np.int32)
+        self._next_tok = np.zeros(batch_slots, np.int32)
+        self._decode = jax.jit(
+            lambda p, tok, pos, cache: T.decode_step(
+                p, cfg, token=tok, pos=pos, cache=cache, memory=self.memory))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _reset_slot(self, i: int):
+        """Zero slot i across the cache: the causal mask hides stale KV, but
+        recurrent state (mamba/xlstm) genuinely carries over and must clear."""
+        self.cache = jax.tree.map(
+            lambda x: x.at[:, i].set(0) if hasattr(x, "ndim") and x.ndim >= 2
+            else x, self.cache)
+
+    def _admit(self):
+        for i in range(self.b):
+            if self.phase[i] == "idle" and self.queue:
+                req = self.queue.pop(0)
+                self.slot[i] = req
+                self.phase[i] = "prompt"
+                self.prompt_cursor[i] = 0
+                self.pos[i] = 0
+                self._reset_slot(i)
+                self._next_tok[i] = req.prompt[0]
+
+    def step(self):
+        self._admit()
+        if all(p == "idle" for p in self.phase):
+            return
+        toks = np.where(np.array([p != "idle" for p in self.phase]),
+                        self._next_tok, self.pad).astype(np.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(self.pos), self.cache)
+        argmax = np.asarray(jnp.argmax(logits, -1), np.int32)
+        self.steps += 1
+        for i in range(self.b):
+            req = self.slot[i]
+            if req is None:
+                continue
+            self.pos[i] += 1
+            if self.phase[i] == "prompt":
+                self.prompt_cursor[i] += 1
+                if self.prompt_cursor[i] < len(req.prompt):
+                    self._next_tok[i] = req.prompt[self.prompt_cursor[i]]
+                else:  # prompt consumed: this step produced the first token
+                    req.generated.append(int(argmax[i]))
+                    self._next_tok[i] = argmax[i]
+                    self.phase[i] = "decode"
+            else:
+                req.generated.append(int(argmax[i]))
+                self._next_tok[i] = argmax[i]
+            if self.phase[i] == "decode" and (
+                    len(req.generated) >= req.max_new_tokens
+                    or self.pos[i] >= self.max_seq):
+                req.done = True
+                self.finished.append(req)
+                self.slot[i] = None
+                self.phase[i] = "idle"
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        while (self.queue or any(p != "idle" for p in self.phase)) \
+                and self.steps < max_steps:
+            self.step()
+        return self.finished
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
+                    memory=None):
+    """Reference single-sequence generation: prefill + greedy decode."""
+    prompt = jnp.asarray(prompt)[None]  # (1, Lp)
+    lp = prompt.shape[1]
+    total = lp + max_new_tokens
+    logits, cache = T.prefill(params, cfg, tokens=prompt, memory=memory,
+                              last_only=True)
+
+    def pad(x):  # prefill cache has S=lp for attention layers: grow to total
+        if x.ndim >= 3 and x.shape[2] == lp:
+            w = [(0, 0)] * x.ndim
+            w[2] = (0, total - lp)
+            return jnp.pad(x, w)
+        return x
+
+    cache = jax.tree.map(pad, cache)
+    tok = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits, -1)
+    out = [int(tok[0])]
+    decode = jax.jit(lambda p, t, pos, c: T.decode_step(
+        p, cfg, token=t, pos=pos, cache=c, memory=memory))
+    for i in range(max_new_tokens - 1):
+        logits, cache = decode(params, tok.astype(jnp.int32),
+                               jnp.int32(lp + i), cache)
+        tok = jnp.argmax(logits, -1)
+        out.append(int(tok[0]))
+    return out

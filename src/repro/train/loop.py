@@ -1,0 +1,181 @@
+"""Training loops.
+
+Two entry points mirroring the Comm duality (DESIGN.md §3):
+
+  * ``make_replica_train_step`` — the *strategy simulator*: W model replicas
+    stacked on axis 0 (LocalComm layout), per-worker data shards, any
+    spectrum strategy.  Runs on one device; used by tests, convergence
+    benchmarks, and the examples.  This is the paper's experimental rig.
+
+  * ``make_sharded_train_step`` — the production path: one global model,
+    pjit-sharded over (pod, data, model); the strategy runs across the
+    ``pod`` (or ``data``) axis via shard_map + ShardComm.  ``sync`` here is
+    plain global data parallelism (the paper's point 1), which is also what
+    the multi-pod dry-run lowers.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import Comm, LocalComm
+from repro.core.strategies import Strategy
+from repro.models import transformer as T
+from repro.optim.optimizers import Optimizer
+from repro.train.losses import lm_loss
+
+
+def init_train_state(params, optimizer: Optimizer, strategy: Strategy,
+                     comm: Comm):
+    return {
+        "params": params,
+        "opt_state": optimizer.init(params),
+        "comm_state": strategy.init(params, comm),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# replica simulator (LocalComm stacked layout)
+# ---------------------------------------------------------------------------
+def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
+                            comm: LocalComm, jit: bool = True):
+    """loss_fn(params, batch) -> scalar, defined for ONE replica.
+
+    The returned step takes stacked state (leading dim W on every leaf of
+    params/opt_state) and per-worker batches (leading dim W)."""
+
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def step(state, batches):
+        loss, grads = grad_fn(state["params"], batches)
+        params, opt_state, comm_state, metrics = strategy.update(
+            state["params"], grads, state["opt_state"], state["comm_state"],
+            state["step"], optimizer, comm)
+        new_state = {"params": params, "opt_state": opt_state,
+                     "comm_state": comm_state, "step": state["step"] + 1}
+        metrics = dict(metrics)
+        metrics["loss"] = jnp.mean(loss)
+        metrics["replica_divergence"] = _stack_divergence(params)
+        return new_state, metrics
+
+    return jax.jit(step) if jit else step
+
+
+def _stack_divergence(params):
+    """Max |w_i − w_0| over replicas — the model-consistency measure of §3."""
+
+    def per_leaf(x):
+        return jnp.max(jnp.abs(x - x[0:1])) if x.ndim > 0 and x.shape[0] > 1 \
+            else jnp.zeros((), x.dtype)
+
+    leaves = [per_leaf(x).astype(jnp.float32) for x in jax.tree.leaves(params)]
+    return jnp.max(jnp.stack(leaves)) if leaves else jnp.zeros(())
+
+
+# ---------------------------------------------------------------------------
+# production (sharded) train step — also the dry-run target
+# ---------------------------------------------------------------------------
+def make_loss_fn(cfg, remat: bool = True):
+    def loss_fn(params, batch):
+        memory = None
+        if cfg.is_encoder_decoder:
+            memory = T.encode(params, cfg, embeds=batch["source_embeds"])
+        logits, aux = T.forward(
+            params, cfg,
+            tokens=batch.get("tokens"),
+            embeds=batch.get("embeds"),
+            memory=memory,
+            remat=remat)
+        return lm_loss(logits, batch["labels"], aux)
+    return loss_fn
+
+
+def make_sharded_train_step(cfg, optimizer: Optimizer,
+                            strategy: Optional[Strategy] = None,
+                            comm: Optional[Comm] = None,
+                            remat: bool = True,
+                            pod_compressor=None):
+    """Global-model train step.  With ``strategy=None`` this is pure
+    synchronous data parallelism (gradients all-reduced by XLA across the
+    batch sharding) — the paper's spectrum point 1 and the dry-run target.
+    With a strategy + ShardComm, the gradient transform runs across the
+    named axis (used by the hierarchical pod-level strategies).
+
+    ``pod_compressor``: the paper's §2.2.4 technique as a first-class
+    production feature — gradients are synced *completely* inside each pod
+    (fast ICI, spectrum pt. 1) but the CROSS-POD hop (slow DCN, the paper's
+    loosely-coupled tier) ships the COMPRESSED payload: per-pod gradients
+    are 1-bit/int8/top-k encoded with error feedback, the compact wire
+    format is all-gathered over "pod", and each pod decodes + averages.
+    The byte reduction is visible in the lowered HLO (int8 gathers instead
+    of f32 all-reduce)."""
+
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    def sync_grads(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def pod_compressed_grads(params, batch, residual):
+        from jax.sharding import PartitionSpec as P
+
+        mesh = jax.sharding.get_abstract_mesh()
+
+        def per_pod(params, batch, residual):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_r = jax.tree.leaves(residual)
+            out_g, out_r = [], []
+            for g, r in zip(flat_g, flat_r):
+                target = g.astype(jnp.float32) + r
+                wire, meta = pod_compressor.compress(target)
+                decoded_self = pod_compressor.decompress(
+                    wire, meta, g.shape, jnp.float32)
+                # ship the COMPACT wire format across pods
+                gathered = jax.tree.map(
+                    lambda w: jax.lax.all_gather(w, "pod"), wire)
+                npods = jax.lax.axis_size("pod")
+                decoded = [
+                    pod_compressor.decompress(
+                        jax.tree.map(lambda w: w[i], gathered), meta,
+                        g.shape, jnp.float32)
+                    for i in range(npods)]
+                out_g.append(sum(decoded) / npods)
+                out_r.append(target - decoded_self)
+            grads = jax.tree.unflatten(treedef, [x.astype(g.dtype) for x, g
+                                                 in zip(out_g, flat_g)])
+            new_r = jax.tree.unflatten(treedef, out_r)
+            return jax.lax.pmean(loss, "pod"), grads, new_r
+
+        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        rep = jax.tree.map(lambda _: P(), params)
+        rep_r = jax.tree.map(lambda _: P(), residual)
+        return jax.shard_map(
+            per_pod, mesh=mesh, axis_names={"pod"},
+            in_specs=(rep, batch_specs, rep_r),
+            out_specs=(P(), rep, rep_r), check_vma=False,
+        )(params, batch, residual)
+
+    def step(state, batch):
+        if pod_compressor is not None:
+            loss, grads, new_res = pod_compressed_grads(
+                state["params"], batch, state["comm_state"]["residual"])
+            comm_state = {"residual": new_res}
+        else:
+            loss, grads = sync_grads(state["params"], batch)
+            comm_state = state["comm_state"]
+        if strategy is not None:
+            params, opt_state, comm_state, _ = strategy.update(
+                state["params"], grads, state["opt_state"],
+                comm_state, state["step"], optimizer, comm)
+        else:
+            params, opt_state = optimizer.update(
+                grads, state["opt_state"], state["params"], state["step"])
+        return ({"params": params, "opt_state": opt_state,
+                 "comm_state": comm_state, "step": state["step"] + 1}, loss)
+
+    return step

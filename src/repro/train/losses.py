@@ -1,0 +1,21 @@
+"""Losses."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, mask=None):
+    """logits: (..., V) fp32; labels: (...) int32. Mean over unmasked."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(logits, tokens, aux=0.0):
+    """Shifted next-token loss: predict tokens[t+1] from position t."""
+    return cross_entropy(logits[:, :-1], tokens[:, 1:]) + aux

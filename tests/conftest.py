@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches see the single real CPU device; ONLY the dry-run
+# (launch/dryrun.py) sets xla_force_host_platform_device_count.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

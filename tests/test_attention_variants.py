@@ -1,0 +1,69 @@
+"""Attention-path equivalence tests: banded vs dense-masked, cp vs tp,
+decode grouped vs full."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _sdpa, _sdpa_banded, _sdpa_decode
+
+
+@pytest.mark.parametrize("l,w", [(256, 64), (512, 128), (256, 32)])
+@pytest.mark.parametrize("kv", [1, 2, 4])
+def test_banded_equals_dense_masked(l, w, kv, rng):
+    cfg = ModelConfig(num_heads=4, num_kv_heads=kv)
+    b, h, dh = 2, 4, 32
+    q = jax.random.normal(rng, (b, l, h, dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, l, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, l, kv, dh))
+    i = jnp.arange(l)[:, None]
+    j = jnp.arange(l)[None, :]
+    mask = ((j <= i) & (i - j < w))[None, None]
+    dense = _sdpa(cfg, q, k, v, mask)
+    banded = _sdpa_banded(cfg, q, k, v, w)
+    np.testing.assert_allclose(np.asarray(banded), np.asarray(dense),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_banded_with_softcap(rng):
+    cfg = ModelConfig(num_heads=2, num_kv_heads=2, attn_logit_softcap=30.0)
+    b, l, h, dh, w = 1, 256, 2, 16, 64
+    q, k, v = (jax.random.normal(jax.random.fold_in(rng, i), (b, l, h, dh))
+               for i in range(3))
+    i_ = jnp.arange(l)[:, None]
+    j_ = jnp.arange(l)[None, :]
+    mask = ((j_ <= i_) & (i_ - j_ < w))[None, None]
+    np.testing.assert_allclose(
+        np.asarray(_sdpa_banded(cfg, q, k, v, w)),
+        np.asarray(_sdpa(cfg, q, k, v, mask)), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_grouped_equals_expanded(rng):
+    """The grouped decode einsum ≡ expanded full attention on one row."""
+    cfg = ModelConfig(num_heads=4, num_kv_heads=2)
+    b, s, h, kv, dh = 2, 64, 4, 2, 16
+    q = jax.random.normal(rng, (b, 1, h, dh))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (b, s, kv, dh))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (b, s, kv, dh))
+    pos = 40
+    j = jnp.arange(s)[None, None, :]
+    mask = j <= pos
+    got = _sdpa_decode(cfg, q, k, v, mask[:, None])
+    want = _sdpa(cfg, q, k, v, mask[:, None])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_gemma_window_pattern():
+    """gemma3's 5:1 local:global layout survives the config machinery."""
+    from repro.configs import get_config
+
+    cfg = get_config("gemma3-1b")
+    windows, thetas = cfg.layer_windows()
+    assert windows.shape == (26, 1)
+    globals_ = [i for i in range(26) if windows[i, 0] == -1]
+    assert globals_ == [5, 11, 17, 23]
+    assert all(windows[i, 0] == 512 for i in range(26) if i not in globals_)
+    assert thetas[5, 0] == 1_000_000.0 and thetas[0, 0] == 10_000.0

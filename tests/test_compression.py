@@ -1,0 +1,111 @@
+"""Compression tests (paper §2.2.4): correctness, error feedback,
+wire-size accounting, and hypothesis invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.compression import (ef_compress_tree, ef_init, get_compressor,
+                                    pack_signs, unpack_signs, wire_bytes)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("none", {}), ("onebit", {"block": 64}), ("int8", {"block": 64}),
+    ("topk", {"ratio": 0.1, "block": 64}),
+])
+def test_roundtrip_shapes(name, kw, rng):
+    comp = get_compressor(name, **kw)
+    x = jax.random.normal(rng, (7, 33))
+    wire, meta = comp.compress(x)
+    y = comp.decompress(wire, meta, x.shape, x.dtype)
+    assert y.shape == x.shape and y.dtype == x.dtype
+
+
+def test_int8_accuracy(rng):
+    comp = get_compressor("int8", block=128)
+    x = jax.random.normal(rng, (1024,))
+    wire, meta = comp.compress(x)
+    y = comp.decompress(wire, meta, x.shape, x.dtype)
+    assert float(jnp.max(jnp.abs(x - y))) < float(jnp.max(jnp.abs(x))) / 100
+
+
+def test_topk_keeps_largest(rng):
+    comp = get_compressor("topk", ratio=0.25, block=16)
+    # distinct magnitudes (no ties): |x| largest at indices 3, 7, 11, 15
+    x = jnp.asarray([0.1, -0.2, 0.3, -9.0, 0.4, -0.5, 0.6, 8.0,
+                     -0.7, 0.8, -0.9, 7.0, 1.0, -1.1, 1.2, -6.0])
+    wire, meta = comp.compress(x)
+    y = comp.decompress(wire, meta, x.shape, x.dtype)
+    kept = jnp.nonzero(y)[0]
+    assert set(int(i) for i in np.array(kept)) == {3, 7, 11, 15}
+
+
+def test_error_feedback_preserves_signal(rng):
+    """EF invariant: residual + decoded == accumulated gradient mass —
+    nothing is silently lost (the reason 1-bit SGD converges)."""
+    comp = get_compressor("onebit", block=32)
+    g = {"a": jax.random.normal(rng, (64,)),
+         "b": jax.random.normal(jax.random.fold_in(rng, 1), (8, 16))}
+    r = ef_init(g)
+    g_hat, r1 = ef_compress_tree(comp, g, r)
+    for k in g:
+        np.testing.assert_allclose(
+            np.asarray(g_hat[k] + r1[k]), np.asarray(g[k]), atol=1e-5)
+
+
+def test_error_feedback_unbiased_over_time(rng):
+    """Feeding the SAME gradient repeatedly, the mean decoded output
+    converges to the true gradient (EF removes the quantization bias)."""
+    comp = get_compressor("onebit", block=16)
+    g = {"w": jax.random.normal(rng, (64,))}
+    r = ef_init(g)
+    acc = jnp.zeros_like(g["w"])
+    n = 200
+    for _ in range(n):
+        g_hat, r = ef_compress_tree(comp, g, r)
+        acc = acc + g_hat["w"]
+    np.testing.assert_allclose(np.asarray(acc / n), np.asarray(g["w"]),
+                               atol=0.15)  # EF cycles can orbit; bias → 0 slowly
+
+
+def test_wire_bytes_accounting():
+    g = {"w": jnp.zeros((1000,))}
+    full = wire_bytes(get_compressor("none"), g)
+    onebit = wire_bytes(get_compressor("onebit", block=256), g)
+    topk = wire_bytes(get_compressor("topk", ratio=0.01, block=1000), g)
+    assert full == 4000
+    assert onebit < full / 25  # ~32× minus scale overhead
+    assert topk < full / 15  # 1% of (32+16)-bit entries
+
+
+def test_pack_unpack_signs(rng):
+    sign = jnp.where(jax.random.normal(rng, (128,)) > 0, 1, -1).astype(jnp.int8)
+    packed = pack_signs(sign)
+    assert packed.size == 16  # true 1-bit wire format
+    np.testing.assert_array_equal(np.asarray(unpack_signs(packed, 128)),
+                                  np.asarray(sign))
+
+
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["onebit", "int8"]))
+@settings(max_examples=25, deadline=None)
+def test_property_decode_magnitude_bounded(seed, name):
+    """Decoded output magnitude never exceeds the block max (quantizers
+    are non-expansive on the block max-norm)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4, 64))
+    comp = get_compressor(name, block=64)
+    wire, meta = comp.compress(x)
+    y = comp.decompress(wire, meta, x.shape, x.dtype)
+    assert float(jnp.max(jnp.abs(y))) <= float(jnp.max(jnp.abs(x))) + 1e-6
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=25, deadline=None)
+def test_property_topk_sparsity(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    comp = get_compressor("topk", ratio=0.0625, block=64)
+    wire, meta = comp.compress(x)
+    y = comp.decompress(wire, meta, x.shape, x.dtype)
+    nnz = int(jnp.sum(y != 0))
+    assert nnz <= 4 * 4  # k per block × nblocks

@@ -1,0 +1,185 @@
+"""Strategy-spectrum tests (paper §3) on the LocalComm replica simulator."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import strategies as ST
+from repro.core.comm import LocalComm, LocalHierComm
+from repro.core.compression import get_compressor
+from repro.optim import adam, momentum, sgd
+from repro.train.loop import init_train_state, make_replica_train_step
+
+W, DIM, NDATA = 4, 12, 64
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.PRNGKey(0)
+    Xs = jax.random.normal(key, (W, NDATA, DIM))
+    w_true = jax.random.normal(jax.random.PRNGKey(1), (DIM,))
+    Ys = Xs @ w_true + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (W, NDATA))
+
+    def loss_fn(params, batch):
+        X, Y = batch
+        return jnp.mean((X @ params["w"] - Y) ** 2)
+
+    return Xs, Ys, w_true, loss_fn
+
+
+def _run(strategy, problem, opt=None, steps=100):
+    Xs, Ys, w_true, loss_fn = problem
+    comm = LocalComm(W)
+    opt = opt or sgd(0.05)
+    params = comm.replicate({"w": jnp.zeros(DIM)})
+    state = init_train_state(params, opt, strategy, comm)
+    step = make_replica_train_step(loss_fn, opt, strategy, comm)
+    for _ in range(steps):
+        state, m = step(state, (Xs, Ys))
+    err = float(jnp.mean((state["params"]["w"] - w_true[None]) ** 2))
+    return state, m, err
+
+
+ALL = [
+    ("sync", ST.sync()),
+    ("local_sgd", ST.local_sgd(sync_every=4)),
+    ("ssp", ST.ssp(staleness=3)),
+    ("downpour", ST.downpour(push_every=4)),
+    ("gossip", ST.gossip()),
+]
+
+
+@pytest.mark.parametrize("name,strategy", ALL)
+def test_strategy_converges(name, strategy, problem):
+    _, m, err = _run(strategy, problem)
+    assert err < 1e-3, (name, err)
+    assert jnp.isfinite(m["loss"])
+
+
+def test_sync_replicas_exactly_consistent(problem):
+    state, m, _ = _run(ST.sync(), problem)
+    assert float(m["replica_divergence"]) == 0.0
+
+
+def test_complete_strategies_bounded_divergence(problem):
+    """SSP/downpour (complete communication) keep replicas near-consistent;
+    gossip (partial) diverges more — the §3 ordering."""
+    _, m_ssp, _ = _run(ST.ssp(staleness=3), problem)
+    _, m_dp, _ = _run(ST.downpour(push_every=4), problem)
+    _, m_gsp, _ = _run(ST.gossip(), problem)
+    assert float(m_ssp["replica_divergence"]) < 1e-2
+    assert float(m_dp["replica_divergence"]) < 1e-2
+    assert float(m_gsp["replica_divergence"]) >= 0.0  # exists; partial
+
+
+def test_spectrum_metadata():
+    assert ST.sync().spectrum_point == 1 and ST.sync().complete
+    assert ST.ssp().spectrum_point == 2 and ST.ssp().complete
+    assert ST.downpour().spectrum_point == 3 and ST.downpour().complete
+    assert ST.gossip().spectrum_point == 4 and not ST.gossip().complete
+
+
+def test_ssp_matches_sync_at_staleness_limit(problem):
+    """As s→0-equivalent (s=1 with buffers drained each step), SSP tracks
+    sync closely on a quadratic problem."""
+    _, _, err_sync = _run(ST.sync(), problem)
+    _, _, err_ssp = _run(ST.ssp(staleness=1), problem)
+    assert abs(err_sync - err_ssp) < 1e-3
+
+
+@pytest.mark.parametrize("comp", ["onebit", "int8", "topk"])
+def test_sync_with_compression_converges(comp, problem):
+    c = get_compressor(comp, block=16) if comp != "topk" \
+        else get_compressor("topk", ratio=0.25, block=16)
+    _, m, err = _run(ST.sync(compressor=c), problem, steps=150)
+    assert err < 1e-2, (comp, err)
+    assert float(m["wire_bytes"]) < W * DIM * 4  # genuinely fewer bytes
+
+
+def test_compression_reduces_wire_bytes(problem):
+    _, m_none, _ = _run(ST.sync(), problem, steps=3)
+    _, m_1bit, _ = _run(ST.sync(compressor=get_compressor("onebit", block=16)),
+                        problem, steps=3)
+    ratio = float(m_none["wire_bytes"]) / float(m_1bit["wire_bytes"])
+    assert ratio > 8  # 32b → ~3b (1 bit + scale overhead at tiny blocks)
+
+
+def test_gossip_mixing_contracts_divergence(problem):
+    """Doubly-stochastic ring mixing must not blow replicas apart."""
+    Xs, Ys, w_true, loss_fn = problem
+    comm = LocalComm(W)
+    opt = sgd(0.05)
+    strat = ST.gossip()
+    # start replicas DIFFERENT on purpose
+    params = {"w": jax.random.normal(jax.random.PRNGKey(5), (W, DIM))}
+    state = init_train_state(params, opt, strat, comm)
+    step = make_replica_train_step(loss_fn, opt, strat, comm)
+    div0 = float(jnp.max(jnp.abs(params["w"] - params["w"][0:1])))
+    for _ in range(50):
+        state, m = step(state, (Xs, Ys))
+    assert float(m["replica_divergence"]) < div0
+
+
+def test_hierarchical_strategy(problem):
+    """Beyond-paper: complete sync inside pods × gossip across pods."""
+    Xs, Ys, w_true, loss_fn = problem
+    pods, wk = 2, 2
+    comm = LocalHierComm(pods, wk)
+    strat = ST.hierarchical(ST.sync(), ST.gossip(mix_every=2))
+    opt = sgd(0.05)
+    params = {"w": jnp.zeros((pods, wk, DIM))}
+    state = init_train_state(params, opt, strat, comm)
+
+    def loss2(params, batch):
+        X, Y = batch
+        return jnp.mean((X @ params["w"] - Y) ** 2)
+
+    grad_fn = jax.vmap(jax.vmap(jax.value_and_grad(loss2)))
+    Xs2 = Xs.reshape(pods, wk, NDATA, DIM)
+    Ys2 = Ys.reshape(pods, wk, NDATA)
+
+    @jax.jit
+    def step(state):
+        loss, grads = grad_fn(state["params"], (Xs2, Ys2))
+        p, o, c, m = strat.update(state["params"], grads, state["opt_state"],
+                                  state["comm_state"], state["step"], opt, comm)
+        return {"params": p, "opt_state": o, "comm_state": c,
+                "step": state["step"] + 1}, (loss, m)
+
+    for _ in range(120):
+        state, (loss, m) = step(state)
+    err = float(jnp.mean((state["params"]["w"] - w_true) ** 2))
+    assert err < 1e-3
+    # intra-pod replicas exactly consistent (sync), cross-pod free to differ
+    w = state["params"]["w"]
+    assert float(jnp.max(jnp.abs(w[:, 0] - w[:, 1]))) < 1e-6
+
+
+def test_momentum_and_adam_compose_with_sync(problem):
+    for opt in (momentum(0.03, 0.9), adam(0.05)):
+        _, _, err = _run(ST.sync(), problem, opt=opt, steps=200)
+        assert err < 1e-2
+
+
+def test_easgd_converges(problem):
+    _, m, err = _run(ST.easgd(alpha=0.2, sync_every=4), problem, steps=150)
+    assert err < 1e-2
+    assert ST.easgd().complete
+
+
+def test_ssp_staleness_aware_lr(problem):
+    """Zhang et al. [40]: staleness-aware scaling keeps high-staleness SSP
+    stable (final error no worse than plain at s=8)."""
+    _, _, err_plain = _run(ST.ssp(staleness=8), problem, steps=150)
+    _, _, err_aware = _run(ST.ssp(staleness=8, staleness_aware_lr=True),
+                           problem, steps=150)
+    assert err_aware < max(err_plain * 3, 1e-2)
+
+
+def test_sync_dgc_converges(problem):
+    from repro.core.compression import get_compressor
+    topk = get_compressor("topk", ratio=0.25, block=16)
+    _, m, err = _run(ST.sync_dgc(topk), problem, steps=200)
+    assert err < 5e-2
+    assert float(m["wire_bytes"]) < W * DIM * 4

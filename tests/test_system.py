@@ -1,0 +1,124 @@
+"""End-to-end system tests: real (reduced) transformer + spectrum
+strategies + data pipeline + serving — the full FAST-JAX stack."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import strategies as ST
+from repro.core.comm import LocalComm
+from repro.data.pipeline import DataConfig, bayes_entropy, worker_batches
+from repro.models import transformer as T
+from repro.optim import adam
+from repro.serve.engine import DecodeEngine, Request, greedy_generate
+from repro.train.loop import (init_train_state, make_loss_fn,
+                              make_replica_train_step)
+
+W = 2
+
+
+def _tiny_cfg():
+    import dataclasses
+    return dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=64)
+
+
+def _train(strategy, steps=60, seed=0):
+    cfg = _tiny_cfg()
+    comm = LocalComm(W)
+    opt = adam(3e-3)
+    dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=32,
+                      batch_per_worker=4, seed=seed)
+    params = comm.replicate(T.init_model(jax.random.PRNGKey(seed), cfg))
+    state = init_train_state(params, opt, strategy, comm)
+    lf = make_loss_fn(cfg, remat=False)
+
+    def loss_fn(p, toks):
+        return lf(p, {"tokens": toks, "labels": toks})
+
+    step = make_replica_train_step(loss_fn, opt, strategy, comm)
+    losses = []
+    for t in range(steps):
+        state, m = step(state, worker_batches(dcfg, W, t))
+        losses.append(float(m["loss"]))
+    return losses, state, dcfg, cfg, comm
+
+
+@pytest.mark.parametrize("strategy", [
+    ST.sync(), ST.ssp(staleness=2), ST.gossip(), ST.local_sgd(sync_every=4),
+])
+def test_lm_trains_under_every_spectrum_point(strategy):
+    losses, *_ = _train(strategy)
+    assert losses[-1] < losses[0] - 0.3, (strategy.name, losses[0], losses[-1])
+    assert np.isfinite(losses).all()
+
+
+def test_lm_approaches_entropy_floor():
+    """The sync-trained LM must beat uniform by a wide margin (the data has
+    structure: §data pipeline)."""
+    losses, state, dcfg, cfg, comm = _train(ST.sync(), steps=150)
+    floor = bayes_entropy(dcfg)
+    uniform = np.log(cfg.vocab_size)
+    assert losses[-1] < 0.7 * uniform
+    assert losses[-1] > floor - 0.1  # can't beat the generating entropy
+
+
+def test_spectrum_equivalence_on_lm():
+    """Paper §3: points 1–3 'not significantly distinguishable' in
+    convergence on homogeneous fabric."""
+    l_sync, *_ = _train(ST.sync(), steps=80)
+    l_ssp, *_ = _train(ST.ssp(staleness=2), steps=80)
+    l_dp, *_ = _train(ST.downpour(push_every=2), steps=80)
+    final = np.array([l_sync[-1], l_ssp[-1], l_dp[-1]])
+    assert final.max() - final.min() < 0.35 * final.mean()
+
+
+def test_generation_roundtrip():
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    toks = greedy_generate(params, cfg, np.array([1, 2, 3], np.int32),
+                           max_new_tokens=5)
+    assert len(toks) == 5
+    assert all(0 <= t < cfg.vocab_size for t in toks)
+
+
+def test_greedy_generate_matches_forward_argmax():
+    """Generation must be consistent with teacher-forced forward argmax."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(1), cfg)
+    prompt = np.array([5, 9, 2, 7], np.int32)
+    gen = greedy_generate(params, cfg, prompt, max_new_tokens=4)
+    seq = list(prompt)
+    for _ in range(4):
+        logits, _ = T.forward(params, cfg,
+                              tokens=jnp.asarray(seq)[None])
+        seq.append(int(jnp.argmax(logits[0, -1])))
+    assert gen == seq[len(prompt):]
+
+
+def test_decode_engine_batched():
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_seq=48)
+    for i in range(5):
+        eng.submit(Request(rid=i, prompt=np.array([1 + i, 2, 3], np.int32),
+                           max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.generated) == 4 for r in done)
+
+
+def test_engine_matches_single_sequence():
+    """Batched engine output for one request == reference generation."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(2), cfg)
+    prompt = np.array([4, 8, 15], np.int32)
+    ref = greedy_generate(params, cfg, prompt, max_new_tokens=5)
+    eng = DecodeEngine(params, cfg, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
+    out = eng.run()[0].generated
+    assert out == ref
