@@ -1,18 +1,87 @@
 """Benchmark: roofline table from the multi-pod dry-run artifacts
 (results_singlepod.json / results_multipod.json, produced by
-``python -m repro.launch.dryrun --all [--multi-pod] --out ...``)."""
+``python -m repro.launch.dryrun --all [--multi-pod] --out ...``), plus the
+fabric fusion check: the lowered exchange HLO must contain at most
+n_buckets cross-worker collectives (one per leaf before core/fabric.py)."""
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import textwrap
 
 from benchmarks.common import emit
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+_FUSION_CHECK = """
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core.compression import get_compressor
+    from repro.core.fabric import BucketLayout, wire_nbytes
+    from repro.core.jax_compat import make_mesh, set_mesh, shard_map
+    from repro.launch.exchange import build_exchange
+    from repro.roofline.analysis import collective_count, parse_collectives
+
+    PODS, LAYERS = 4, 8
+    mesh = make_mesh((PODS,), ("pod",))
+    g = {f"l{i}": {"w": jax.ShapeDtypeStruct((PODS, 256, 64), jnp.float32),
+                   "b": jax.ShapeDtypeStruct((PODS, 64), jnp.float32)}
+         for i in range(LAYERS)}
+    bucket_bytes = 4 * 40_000
+    view = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((1,) + s.shape[1:], jnp.float32), g)
+    lay = BucketLayout.build(view, bucket_bytes, lead_axes=0)
+    rows = {"n_leaves": 2 * LAYERS, "n_buckets": lay.n_buckets}
+    for name in ("none", "onebit", "int8", "topk"):
+        comp = None if name == "none" else get_compressor(name)
+        fn = shard_map(build_exchange(comp, bucket_bytes), mesh=mesh,
+                       axis_names={"pod"}, in_specs=(P("pod"), P("pod")),
+                       out_specs=(P("pod"), P("pod")), check_vma=False)
+        with set_mesh(mesh):
+            c = jax.jit(fn).lower(g, g).compile()
+        pc = parse_collectives(c.as_text())
+        est = PODS * sum(wire_nbytes(comp, n) for n in lay.bucket_sizes)
+        rows[name] = {"collectives": collective_count(c.as_text()),
+                      "hlo_bytes": sum(pc["bytes"].values()),
+                      "fabric_bytes": est}
+    print("FUSION " + json.dumps(rows))
+"""
+
+
+def check_fusion():
+    """Lower the bucketed exchange on 4 forced host devices (subprocess:
+    this process must keep the single real device) and emit the
+    collective-count / wire-byte evidence."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_FUSION_CHECK)],
+        capture_output=True, text=True, env=env, timeout=560)
+    if out.returncode != 0:
+        emit("roofline/fusion", 0.0, "error=" + out.stderr[-200:].replace(
+            "\n", " ").replace(",", ";"))
+        return
+    line = [l for l in out.stdout.splitlines() if l.startswith("FUSION ")][0]
+    rows = json.loads(line[len("FUSION "):])
+    n_leaves, n_buckets = rows.pop("n_leaves"), rows.pop("n_buckets")
+    for name, r in rows.items():
+        ok = r["collectives"] <= n_buckets
+        ratio = rows["none"]["hlo_bytes"] / max(r["hlo_bytes"], 1)
+        emit(f"roofline/fusion/{name}", float(r["collectives"]),
+             f"n_leaves={n_leaves};n_buckets={n_buckets};"
+             f"collectives={r['collectives']};fused={ok};"
+             f"hlo_bytes={r['hlo_bytes']};fabric_bytes={r['fabric_bytes']};"
+             f"compression_x={ratio:.1f}")
+
 
 def run():
+    check_fusion()
     for fname, mesh in (("results_singlepod.json", "16x16"),
                         ("results_multipod.json", "2x16x16")):
         path = os.path.join(ROOT, fname)

@@ -6,17 +6,25 @@ Here that interface is ``Comm``: strategies (core/strategies.py) are written
 against it and run unchanged in two realizations:
 
   * ``LocalComm``  — every worker's tensors are stacked on a leading axis W.
-    Collectives are axis-0 reductions / rolls.  Used for CPU tests,
+    Collectives are axis reductions / rolls.  Used for CPU tests,
     convergence benchmarks, and vmap-based simulation of large worker
     counts.  Deterministic and single-device.
 
-  * ``ShardComm``  — inside ``jax.shard_map`` over a named mesh axis;
+  * ``ShardComm``  — inside ``shard_map`` over a named mesh axis;
     tensors are per-worker shards and collectives lower to real TPU
-    ICI/DCN collectives (psum / ppermute).  Used by the production
-    launcher.
+    ICI/DCN collectives (psum / ppermute / all-gather).  Used by the
+    production launcher.
 
 This dual realization is exactly the paper's portability argument: the
-strategy code (the science) is independent of the transport (the fabric).
+strategy code (the science) is independent of the transport.  The actual
+tensor moving — bucketing, flat-buffer fusion, wire packing — lives one
+level up in ``core/fabric.py`` (DESIGN.md §3), which drives these
+primitives once per *bucket* instead of once per parameter leaf.
+
+``lead_axes`` tells the fabric how many leading replica axes the stacked
+layout carries (0 for ShardComm shards, 1 for plain LocalComm, 2 for the
+pods×workers hierarchy) so flattening never mixes replicas into one
+compression block.
 """
 
 from __future__ import annotations
@@ -29,6 +37,7 @@ class Comm:
     """Abstract tensor-moving interface."""
 
     size: int
+    lead_axes: int = 0  # leading replica axes in the tensor layout
 
     def all_mean(self, tree):
         raise NotImplementedError
@@ -40,32 +49,49 @@ class Comm:
         """Ring shift: worker w receives worker (w - shift) % W's value."""
         raise NotImplementedError
 
+    def all_gather(self, tree):
+        """Every worker's value stacked on a NEW leading axis of size W.
+
+        Only meaningful for per-shard realizations (the fabric's packed
+        wire path); the stacked simulator already sees every replica."""
+        raise NotImplementedError
+
     def worker_index(self, like=None):
         """Per-worker index in [0, W), broadcastable against local tensors."""
         raise NotImplementedError
 
 
 class LocalComm(Comm):
-    """Stacked-replica realization: leaves have leading worker dim W."""
+    """Stacked-replica realization: leaves carry a worker dim at ``axis``.
 
-    def __init__(self, size: int):
+    ``lead_axes`` (defaults to ``axis + 1``) is the total count of leading
+    replica axes in the layout — e.g. the hierarchical (P, W, ...) layout
+    has lead_axes=2 for BOTH tier comms, while each tier reduces over its
+    own ``axis``."""
+
+    def __init__(self, size: int, axis: int = 0, lead_axes: int | None = None):
         self.size = size
+        self.axis = axis
+        self.lead_axes = axis + 1 if lead_axes is None else lead_axes
 
     def all_mean(self, tree):
+        ax = self.axis
         return jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape),
-            tree)
+            lambda x: jnp.broadcast_to(jnp.mean(x, axis=ax, keepdims=True),
+                                       x.shape), tree)
 
     def all_sum(self, tree):
+        ax = self.axis
         return jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.sum(x, axis=0, keepdims=True), x.shape),
-            tree)
+            lambda x: jnp.broadcast_to(jnp.sum(x, axis=ax, keepdims=True),
+                                       x.shape), tree)
 
     def ppermute(self, tree, shift: int = 1):
-        return jax.tree.map(lambda x: jnp.roll(x, shift, axis=0), tree)
+        return jax.tree.map(lambda x: jnp.roll(x, shift, axis=self.axis), tree)
 
     def worker_index(self, like=None):
-        return jnp.arange(self.size)
+        return jnp.arange(self.size).reshape(
+            (1,) * self.axis + (self.size,))
 
     # helpers for stacked layout -------------------------------------------
     def replicate(self, tree):
@@ -79,6 +105,8 @@ class LocalComm(Comm):
 
 class ShardComm(Comm):
     """shard_map realization over one (or more) named mesh axes."""
+
+    lead_axes = 0
 
     def __init__(self, axis_name, size: int):
         self.axis_name = axis_name
@@ -95,6 +123,10 @@ class ShardComm(Comm):
         perm = [((i - shift) % n, i) for i in range(n)]
         return jax.tree.map(
             lambda x: jax.lax.ppermute(x, self.axis_name, perm), tree)
+
+    def all_gather(self, tree):
+        return jax.tree.map(
+            lambda x: jax.lax.all_gather(x, self.axis_name), tree)
 
     def worker_index(self, like=None):
         return jax.lax.axis_index(self.axis_name)
@@ -113,18 +145,11 @@ class HierComm:
 
 
 class LocalHierComm(HierComm):
-    """Stacked layout (P, W, ...): axis 0 = pods (outer), axis 1 = workers."""
+    """Stacked layout (P, W, ...): axis 0 = pods (outer), axis 1 = workers.
+
+    Both tier comms declare lead_axes=2 — a compression block must never
+    mix values across pods OR workers, whichever tier is communicating."""
 
     def __init__(self, pods: int, workers: int):
-        inner = LocalComm(workers)
-        outer = LocalComm(pods)
-        super().__init__(inner, outer)
-        # re-bind axes: inner ops act on axis 1, outer on axis 0
-        inner.all_mean = lambda tree: jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.mean(x, axis=1, keepdims=True), x.shape), tree)
-        inner.all_sum = lambda tree: jax.tree.map(
-            lambda x: jnp.broadcast_to(jnp.sum(x, axis=1, keepdims=True), x.shape), tree)
-        inner.ppermute = lambda tree, shift=1: jax.tree.map(
-            lambda x: jnp.roll(x, shift, axis=1), tree)
-        outer.ppermute = lambda tree, shift=1: jax.tree.map(
-            lambda x: jnp.roll(x, shift, axis=0), tree)
+        super().__init__(LocalComm(workers, axis=1, lead_axes=2),
+                         LocalComm(pods, axis=0, lead_axes=2))

@@ -105,6 +105,10 @@ def int8_compressor(block: int = 256) -> Compressor:
 # block-local top-k sparsification (DGC-style)
 # ---------------------------------------------------------------------------
 def topk_compressor(ratio: float = 0.01, block: int = 1024) -> Compressor:
+    if block > 1 << 16:
+        raise ValueError(  # the packed wire format uses uint16 indices
+            f"topk block must be <= 65536 (got {block}); in-block indices "
+            "are shipped as uint16 (core/fabric.py)")
     k = max(1, int(round(block * ratio)))
 
     def compress(x):

@@ -1,0 +1,400 @@
+"""Bucketed flat-buffer exchange fabric (DESIGN.md §3).
+
+The paper's tensor-moving interface (``Comm``) decouples strategies from
+transport, but a naive realization still issues one collective per
+parameter leaf — hundreds of tiny transfers for a real model.  Following
+the fusion argument of cuDNN/DLL (many small ops → few large ops), the
+``Fabric`` flattens a gradient pytree into size-capped flat f32 *buckets*
+and drives every ``Comm`` primitive once per bucket:
+
+    tree (n_leaves) --bucketize--> [b0, b1, ...] (n_buckets ≤ n_leaves)
+                     --collective / compress+pack → wire--> ...
+                     --debucketize--> tree
+
+Compression (1-bit / int8 / top-k with error feedback) runs on the flat
+buffer, and the wire format is genuinely packed: every wire component is
+serialized into ONE uint8 buffer per bucket (8 signs/byte, bf16 scales,
+uint16 top-k indices), so a compressed exchange is a single all-gather of
+bytes per bucket — no per-leaf metadata soup.  ``wire_nbytes`` reports the
+exact size of that buffer (it is derived from the same packing code via
+``jax.eval_shape``), so strategy metrics match the bytes on the wire by
+construction.
+
+Replica safety: ``comm.lead_axes`` leading axes (worker stacking in the
+LocalComm simulator, pods×workers in the hierarchy) are preserved through
+flattening and the per-replica compression is vmapped over them — a
+compression block never mixes values from two replicas.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.comm import Comm, ShardComm
+from repro.core.compression import Compressor, pack_signs, unpack_signs
+
+DEFAULT_BUCKET_BYTES = 4 << 20  # 4 MiB of f32 per bucket
+
+
+def _prod(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class BucketLayout:
+    """Static description of tree ↔ flat-bucket correspondence.
+
+    Leaves are assigned greedily, in tree order, to f32 buckets holding at
+    most ``bucket_bytes`` (a leaf larger than the cap gets its own
+    bucket — leaves are never split).  ``lead_shape`` is the common shape
+    of the leading replica axes; offsets/sizes are in trailing elements."""
+
+    treedef: Any
+    lead_shape: tuple
+    shapes: tuple  # per-leaf trailing shape
+    dtypes: tuple  # per-leaf original dtype
+    sizes: tuple  # per-leaf trailing element count
+    bucket_of: tuple  # leaf index -> bucket index
+    offsets: tuple  # leaf offset inside its bucket (elements)
+    bucket_sizes: tuple  # elements per bucket
+    bucket_bytes: int
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.bucket_sizes)
+
+    @property
+    def total_elements(self) -> int:
+        return sum(self.bucket_sizes)
+
+    @staticmethod
+    def build(tree, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+              lead_axes: int = 0) -> "BucketLayout":
+        leaves, treedef = jax.tree.flatten(tree)
+        lead_shape = tuple(leaves[0].shape[:lead_axes]) if leaves else ()
+        for x in leaves:
+            if tuple(x.shape[:lead_axes]) != lead_shape:
+                raise ValueError(
+                    f"inconsistent replica axes: {x.shape[:lead_axes]} vs "
+                    f"{lead_shape} (lead_axes={lead_axes})")
+        shapes = tuple(tuple(x.shape[lead_axes:]) for x in leaves)
+        dtypes = tuple(x.dtype for x in leaves)
+        sizes = tuple(_prod(s) for s in shapes)
+        cap = max(1, bucket_bytes // 4)  # elements of f32
+        bucket_of, offsets, bucket_sizes = [], [], []
+        cur = -1  # no open bucket
+        for sz in sizes:
+            if cur < 0 or (bucket_sizes[cur] > 0
+                           and bucket_sizes[cur] + sz > cap):
+                bucket_sizes.append(0)
+                cur += 1
+            bucket_of.append(cur)
+            offsets.append(bucket_sizes[cur])
+            bucket_sizes[cur] += sz
+        return BucketLayout(treedef, lead_shape, shapes, dtypes, sizes,
+                            tuple(bucket_of), tuple(offsets),
+                            tuple(bucket_sizes), bucket_bytes)
+
+    # -- tree <-> buckets ---------------------------------------------------
+    def bucketize(self, tree):
+        """Tree → list of f32 buckets of shape lead_shape + (n_b,)."""
+        leaves = jax.tree.leaves(tree)
+        flats = [x.astype(jnp.float32).reshape(self.lead_shape + (-1,))
+                 for x in leaves]
+        out = []
+        for b in range(self.n_buckets):
+            segs = [flats[i] for i in range(self.n_leaves)
+                    if self.bucket_of[i] == b]
+            out.append(segs[0] if len(segs) == 1
+                       else jnp.concatenate(segs, axis=-1))
+        return out
+
+    def debucketize(self, buckets, cast: bool = True):
+        """Buckets → tree (cast back to original leaf dtypes unless
+        ``cast=False``, which keeps f32 — used for residual state)."""
+        leaves = []
+        for i in range(self.n_leaves):
+            b = buckets[self.bucket_of[i]]
+            seg = lax.slice_in_dim(b, self.offsets[i],
+                                   self.offsets[i] + self.sizes[i],
+                                   axis=b.ndim - 1)
+            seg = seg.reshape(self.lead_shape + self.shapes[i])
+            leaves.append(seg.astype(self.dtypes[i]) if cast else seg)
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# wire codecs: compressor wire tuple ↔ one packed uint8 buffer
+# ---------------------------------------------------------------------------
+def _to_bytes(x):
+    """Any array → flat uint8 view."""
+    if x.dtype == jnp.uint8:
+        return x.reshape(-1)
+    return lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+
+
+def _from_bytes(buf, shape, dtype):
+    dtype = jnp.dtype(dtype)
+    if dtype.itemsize == 1:
+        seg = buf.reshape(shape)
+        return seg if dtype == jnp.uint8 \
+            else lax.bitcast_convert_type(seg, dtype)
+    return lax.bitcast_convert_type(
+        buf.reshape(tuple(shape) + (dtype.itemsize,)), dtype)
+
+
+def _narrow_wire(name: str, wire):
+    """Narrow a compressor's wire tuple to its true on-the-wire dtypes.
+
+    Returns (arrays, widen) where ``widen`` maps the narrowed arrays back
+    to the structure ``Compressor.decompress`` expects.  The narrowing is
+    the wire format: packed sign bits, bf16 scales, uint16 top-k indices.
+    Unknown compressors fall through to an identity codec."""
+    if name == "onebit":
+        sign, scale = wire
+        n = sign.size
+        flat = sign.reshape(-1)
+        pad = (-n) % 8
+        if pad:
+            flat = jnp.concatenate([flat, jnp.ones((pad,), flat.dtype)])
+        packed = pack_signs(flat)
+
+        def widen(arrs):
+            p, s = arrs
+            return (unpack_signs(p, n).reshape(sign.shape),
+                    s.astype(jnp.float32))
+
+        return [packed, scale.astype(jnp.bfloat16)], widen
+    if name == "int8":
+        q, scale = wire
+
+        def widen(arrs):
+            return (arrs[0], arrs[1].astype(jnp.float32))
+
+        return [q, scale.astype(jnp.bfloat16)], widen
+    if name.startswith("topk"):
+        taken, idx = wire  # blocks ≤ 64k ⇒ uint16 indices
+
+        def widen(arrs):
+            return (arrs[0], arrs[1].astype(jnp.int32))
+
+        return [taken, idx.astype(jnp.uint16)], widen
+    arrs, tdef = jax.tree.flatten(wire)
+    return arrs, lambda a: jax.tree.unflatten(tdef, list(a))
+
+
+def _pack(arrs):
+    """Arrays → (uint8 buffer, static segment specs)."""
+    bufs = [_to_bytes(a) for a in arrs]
+    specs = [(a.shape, a.dtype, b.shape[-1]) for a, b in zip(arrs, bufs)]
+    buf = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs, axis=-1)
+    return buf, specs
+
+
+def _unpack(buf, specs):
+    out, off = [], 0
+    for shape, dtype, nb in specs:
+        seg = lax.slice_in_dim(buf, off, off + nb, axis=buf.ndim - 1)
+        out.append(_from_bytes(seg, shape, dtype))
+        off += nb
+    return out
+
+
+def wire_nbytes(compressor: Optional[Compressor], n: int) -> int:
+    """Exact packed-wire size (bytes) to ship ``n`` f32 elements once.
+
+    Derived from the actual packing code via eval_shape, so it equals the
+    size of the uint8 buffer a ShardComm exchange really gathers."""
+    if compressor is None or compressor.name == "none":
+        return 4 * n
+
+    def f(t):
+        wire, _ = compressor.compress(t)
+        arrs, _ = _narrow_wire(compressor.name, wire)
+        buf, _ = _pack(arrs)
+        return buf
+
+    return int(jax.eval_shape(
+        f, jax.ShapeDtypeStruct((n,), jnp.float32)).shape[0])
+
+
+# ---------------------------------------------------------------------------
+# fabric
+# ---------------------------------------------------------------------------
+class Fabric:
+    """Bucket-fused tensor moving over a ``Comm``.
+
+    Every public op issues at most ONE collective per bucket (and exactly
+    one all-gather of packed bytes per bucket on the compressed ShardComm
+    path).  Residual / DGC state stays param-shaped f32 trees, so existing
+    checkpoint and sharding-spec machinery is untouched."""
+
+    def __init__(self, comm: Comm, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+        self.comm = comm
+        self.bucket_bytes = bucket_bytes
+
+    def layout(self, tree) -> BucketLayout:
+        return BucketLayout.build(tree, self.bucket_bytes,
+                                  self.comm.lead_axes)
+
+    # -- plain (uncompressed) fused collectives -----------------------------
+    def all_mean(self, tree):
+        return self._collective(tree, self.comm.all_mean)
+
+    def all_sum(self, tree):
+        return self._collective(tree, self.comm.all_sum)
+
+    def ppermute(self, tree, shift: int = 1):
+        return self._collective(tree,
+                                lambda b: self.comm.ppermute(b, shift))
+
+    def _collective(self, tree, op):
+        lay = self.layout(tree)
+        if lay.n_leaves == 0:
+            return tree
+        return lay.debucketize(op(lay.bucketize(tree)))
+
+    # -- wire accounting ----------------------------------------------------
+    def flat_bytes(self, tree_or_layout) -> float:
+        """Uncompressed bytes to ship the tree once (all replicas)."""
+        lay = tree_or_layout if isinstance(tree_or_layout, BucketLayout) \
+            else self.layout(tree_or_layout)
+        return float(4 * lay.total_elements * _prod(lay.lead_shape))
+
+    def wire_bytes(self, tree_or_layout, compressor=None) -> float:
+        """Packed bytes to ship the tree once (all replicas)."""
+        lay = tree_or_layout if isinstance(tree_or_layout, BucketLayout) \
+            else self.layout(tree_or_layout)
+        per = sum(wire_nbytes(compressor, n) for n in lay.bucket_sizes)
+        return float(per * _prod(lay.lead_shape))
+
+    def metrics(self, nbytes, events=1.0):
+        ev = jnp.asarray(events, jnp.float32)
+        return {"wire_bytes": jnp.asarray(nbytes, jnp.float32) * ev,
+                "comm_events": ev}
+
+    # -- compression plumbing ----------------------------------------------
+    def _vmap_replicas(self, fn):
+        for _ in range(self.comm.lead_axes):
+            fn = jax.vmap(fn)
+        return fn
+
+    def _self_decode(self, target, compressor):
+        """Per-replica compress → pack → unpack → decode of a flat bucket.
+
+        The pack/unpack roundtrip is included on purpose: the simulator
+        then sees exactly the wire numerics (bf16 scales etc.) that the
+        sharded realization ships."""
+
+        def one(t):
+            wire, meta = compressor.compress(t)
+            arrs, widen = _narrow_wire(compressor.name, wire)
+            buf, specs = _pack(arrs)
+            return compressor.decompress(_w(widen, buf, specs), meta,
+                                         t.shape, jnp.float32)
+
+        def _w(widen, buf, specs):
+            return widen(_unpack(buf, specs))
+
+        return self._vmap_replicas(one)(target)
+
+    def _bucket_mean_compressed(self, target, compressor):
+        """(mean of per-replica decodes, own decode) for one flat bucket.
+
+        ShardComm: ONE all-gather of the packed byte buffer, then decode
+        every peer locally.  LocalComm: decode per replica (vmapped), then
+        one axis-mean — numerically identical."""
+        if isinstance(self.comm, ShardComm):
+            def enc(t):
+                wire, meta = compressor.compress(t)
+                arrs, widen = _narrow_wire(compressor.name, wire)
+                buf, specs = _pack(arrs)
+                dec = lambda bb: compressor.decompress(  # noqa: E731
+                    widen(_unpack(bb, specs)), meta, t.shape, jnp.float32)
+                (gathered,) = self.comm.all_gather([buf])
+                decs = [dec(gathered[i]) for i in range(self.comm.size)]
+                return sum(decs) / self.comm.size, dec(buf)
+
+            return enc(target)
+        dec_self = self._self_decode(target, compressor)
+        (mean,) = self.comm.all_mean([dec_self])
+        return mean, dec_self
+
+    # -- fused exchanges ----------------------------------------------------
+    def exchange(self, grads, residual=None, compressor=None, events=1.0):
+        """Fused all-mean of ``grads`` with optional compression + error
+        feedback.  Returns (mean_tree, new_residual_tree, metrics)."""
+        lay = self.layout(grads)
+        if compressor is None or compressor.name == "none":
+            out = self.comm.all_mean(lay.bucketize(grads))
+            return (lay.debucketize(out), residual,
+                    self.metrics(self.flat_bytes(lay), events))
+        gb = lay.bucketize(grads)
+        rb = lay.bucketize(residual)
+        g_out, r_out = [], []
+        for g, r in zip(gb, rb):
+            t = g + r
+            mean, dec_self = self._bucket_mean_compressed(t, compressor)
+            g_out.append(mean)
+            r_out.append(t - dec_self)
+        return (lay.debucketize(g_out),
+                lay.debucketize(r_out, cast=False),
+                self.metrics(self.wire_bytes(lay, compressor), events))
+
+    def exchange_dgc(self, grads, state, compressor, momentum: float = 0.9,
+                     events=1.0):
+        """Fused all-mean with DGC momentum correction (Lin et al. [54]):
+        velocity accumulates into the residual before top-k, and whatever
+        was sent leaves both accumulators.  ``state`` = {"velocity",
+        "residual"} param-shaped f32 trees."""
+        lay = self.layout(grads)
+        gb = lay.bucketize(grads)
+        ub = lay.bucketize(state["velocity"])
+        rb = lay.bucketize(state["residual"])
+        g_out, u_out, r_out = [], [], []
+        for g, u, r in zip(gb, ub, rb):
+            u1 = momentum * u + g
+            t = r + u1
+            mean, sent = self._bucket_mean_compressed(t, compressor)
+            mask = (sent != 0).astype(jnp.float32)
+            g_out.append(mean)
+            u_out.append(u1 * (1 - mask))
+            r_out.append(t - sent)
+        new_state = {"velocity": lay.debucketize(u_out, cast=False),
+                     "residual": lay.debucketize(r_out, cast=False)}
+        return (lay.debucketize(g_out), new_state,
+                self.metrics(self.wire_bytes(lay, compressor), events))
+
+    def compress(self, grads, residual, compressor):
+        """Error-feedback compression WITHOUT a collective (for strategies
+        that buffer/accumulate before communicating, e.g. SSP/Downpour).
+        Returns (g_hat_tree, new_residual_tree, packed_bytes_one_send)."""
+        lay = self.layout(grads)
+        if compressor is None or compressor.name == "none":
+            return grads, residual, self.flat_bytes(lay)
+        gb = lay.bucketize(grads)
+        rb = lay.bucketize(residual)
+        g_out, r_out = [], []
+        for g, r in zip(gb, rb):
+            t = g + r
+            dec = self._self_decode(t, compressor)
+            g_out.append(dec)
+            r_out.append(t - dec)
+        return (lay.debucketize(g_out),
+                lay.debucketize(r_out, cast=False),
+                self.wire_bytes(lay, compressor))

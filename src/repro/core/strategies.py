@@ -18,20 +18,25 @@ both in the stacked-replica simulator (LocalComm) and under shard_map on a
 real mesh (ShardComm).  Asynchrony is *logical*: per-worker schedules are
 explicit, deterministic state — the faithful SPMD realization of the paper's
 delivery-order analysis (Figure 3).
-"""
+
+All tensor moving goes through the bucketed ``Fabric`` (core/fabric.py,
+DESIGN.md §3): collectives run once per size-capped flat bucket instead of
+once per parameter leaf, compression applies to the flat buffer, and the
+``wire_bytes`` metric is the exact packed wire size (not an analytic
+bits-per-element estimate).  ``bucket_bytes`` on every strategy factory
+tunes the fusion granularity."""
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import Comm, HierComm, LocalComm
-from repro.core.compression import (Compressor, dgc_compress_tree, dgc_init,
-                                    ef_compress_tree, ef_init,
-                                    none_compressor, wire_bytes)
+from repro.core.comm import Comm, HierComm
+from repro.core.compression import Compressor, dgc_init, ef_init
+from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
 from repro.optim.optimizers import Optimizer
 
 
@@ -45,26 +50,9 @@ class Strategy:
     #                 -> (params, opt_state, comm_state, metrics)
 
 
-def _maybe_vmap(comm: Comm, fn):
-    """Compression is block-local; under LocalComm the worker dim must not
-    leak into blocks, so map the function over workers."""
-    if isinstance(comm, LocalComm):
-        return jax.vmap(fn)
-    return fn
-
-
-def _compress(comm, compressor, grads, residual):
-    if compressor is None or compressor.name == "none":
-        return grads, residual, 32.0
-    fn = _maybe_vmap(comm, lambda g_r: ef_compress_tree(compressor, g_r[0], g_r[1]))
-    g_hat, new_r = fn((grads, residual))
-    return g_hat, new_r, compressor.wire_bits_per_element
-
-
-def _metrics(tree, bits, events=1.0):
-    n = sum(x.size for x in jax.tree.leaves(tree))
-    return {"wire_bytes": jnp.asarray(n * bits / 8.0 * events, jnp.float32),
-            "comm_events": jnp.asarray(events, jnp.float32)}
+def _events(flag):
+    """Traced or python bool → f32 event count."""
+    return flag.astype(jnp.float32) if hasattr(flag, "astype") else float(flag)
 
 
 def _zero_metrics():
@@ -73,21 +61,20 @@ def _zero_metrics():
 
 
 # ---------------------------------------------------------------------------
-# 1. synchronous — large mini-batch all-reduce
+# 1. synchronous — large mini-batch all-reduce (bucket-fused)
 # ---------------------------------------------------------------------------
-def sync(compressor: Optional[Compressor] = None) -> Strategy:
+def sync(compressor: Optional[Compressor] = None,
+         bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     def init(params, comm):
         return {"residual": ef_init(params)} if compressor else {}
 
     def update(params, grads, opt_state, cstate, t, opt: Optimizer, comm: Comm):
+        fab = Fabric(comm, bucket_bytes)
+        g, new_res, m = fab.exchange(grads, cstate.get("residual"), compressor)
         if compressor:
-            grads, cstate["residual"], bits = _compress(
-                comm, compressor, grads, cstate.get("residual"))
-        else:
-            bits = 32.0
-        g = comm.all_mean(grads)
+            cstate = {"residual": new_res}
         params, opt_state = opt.update(g, opt_state, params, t)
-        return params, opt_state, cstate, _metrics(grads, bits)
+        return params, opt_state, cstate, m
 
     return Strategy("sync", 1, True, init, update)
 
@@ -96,18 +83,19 @@ def sync(compressor: Optional[Compressor] = None) -> Strategy:
 # +. local SGD / model averaging (paper §2.2.3)
 # ---------------------------------------------------------------------------
 def local_sgd(sync_every: int = 8,
-              compressor: Optional[Compressor] = None) -> Strategy:
+              compressor: Optional[Compressor] = None,
+              bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     def init(params, comm):
         return {}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
+        fab = Fabric(comm, bucket_bytes)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do_avg = (t + 1) % sync_every == 0
-        avg = comm.all_mean(params)
+        avg = fab.all_mean(params)
         params = jax.tree.map(
             lambda a, p: jnp.where(do_avg, a, p), avg, params)
-        m = _metrics(params, 32.0, events=do_avg.astype(jnp.float32)
-                     if hasattr(do_avg, "astype") else float(do_avg))
+        m = fab.metrics(fab.flat_bytes(params), events=_events(do_avg))
         return params, opt_state, cstate, m
 
     return Strategy("local_sgd", 2, True, init, update)
@@ -116,23 +104,22 @@ def local_sgd(sync_every: int = 8,
 # ---------------------------------------------------------------------------
 # 1b. sync + Deep Gradient Compression (momentum correction, [54])
 # ---------------------------------------------------------------------------
-def sync_dgc(compressor: Compressor, momentum: float = 0.9) -> Strategy:
+def sync_dgc(compressor: Compressor, momentum: float = 0.9,
+             bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     """Synchronous exchange of momentum-corrected sparsified gradients:
     velocity (not raw gradient) is accumulated into the residual, so
     sparsified-away updates keep their momentum — the [54] refinement of
-    plain error feedback."""
+    plain error feedback.  Runs on the flat buckets."""
 
     def init(params, comm):
         return {"dgc": dgc_init(params)}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fn = _maybe_vmap(comm, lambda gs: dgc_compress_tree(
-            compressor, gs[0], gs[1], momentum))
-        g_hat, cstate["dgc"] = fn((grads, cstate["dgc"]))
-        g = comm.all_mean(g_hat)
+        fab = Fabric(comm, bucket_bytes)
+        g, cstate["dgc"], m = fab.exchange_dgc(grads, cstate["dgc"],
+                                               compressor, momentum)
         params, opt_state = opt.update(g, opt_state, params, t)
-        return params, opt_state, cstate, _metrics(
-            grads, compressor.wire_bits_per_element)
+        return params, opt_state, cstate, m
 
     return Strategy("sync_dgc", 1, True, init, update)
 
@@ -140,25 +127,32 @@ def sync_dgc(compressor: Compressor, momentum: float = 0.9) -> Strategy:
 # ---------------------------------------------------------------------------
 # +. elastic averaging SGD (paper §2.2.3 via [50], Zhang/Choromanska/LeCun)
 # ---------------------------------------------------------------------------
-def easgd(alpha: float = 0.1, sync_every: int = 4) -> Strategy:
+def easgd(alpha: float = 0.1, sync_every: int = 4,
+          bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     """Workers are elastically attracted to a (replicated) center variable;
     the center moves toward the worker average.  Model averaging with a
     spring instead of a hard reset — complete communication, point 2-ish."""
 
     def init(params, comm):
-        return {"center": jax.tree.map(
-            lambda p: jnp.mean(p, axis=0, keepdims=True)
-            + jnp.zeros_like(p, jnp.float32)
-            if isinstance(comm, LocalComm) else p.astype(jnp.float32), params)}
+        def center(p):
+            if comm.lead_axes:  # stacked simulator: common center, full shape
+                # average over the axis THIS comm reduces (≠ lead_axes-1 for
+                # the outer tier of a hierarchy)
+                ax = getattr(comm, "axis", comm.lead_axes - 1)
+                return jnp.mean(p.astype(jnp.float32), axis=ax,
+                                keepdims=True) + jnp.zeros_like(p, jnp.float32)
+            return p.astype(jnp.float32)
+        return {"center": jax.tree.map(center, params)}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
+        fab = Fabric(comm, bucket_bytes)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do = (t + 1) % sync_every == 0
         center = cstate["center"]
         diff = jax.tree.map(lambda p, c: p.astype(jnp.float32) - c,
                             params, center)
         new_center = jax.tree.map(
-            lambda c, d: c + alpha * d, center, comm.all_mean(diff))
+            lambda c, d: c + alpha * d, center, fab.all_mean(diff))
         new_params = jax.tree.map(
             lambda p, d: (p.astype(jnp.float32) - alpha * d).astype(p.dtype),
             params, diff)
@@ -166,8 +160,8 @@ def easgd(alpha: float = 0.1, sync_every: int = 4) -> Strategy:
                               new_params, params)
         cstate = {"center": jax.tree.map(lambda n, c: jnp.where(do, n, c),
                                          new_center, center)}
-        ev = do.astype(jnp.float32) if hasattr(do, "astype") else float(do)
-        return params, opt_state, cstate, _metrics(params, 32.0, events=ev)
+        m = fab.metrics(fab.flat_bytes(params), events=_events(do))
+        return params, opt_state, cstate, m
 
     return Strategy("easgd", 2, True, init, update)
 
@@ -176,7 +170,8 @@ def easgd(alpha: float = 0.1, sync_every: int = 4) -> Strategy:
 # 2. stale-synchronous — complete communication, bounded delay s
 # ---------------------------------------------------------------------------
 def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
-        staleness_aware_lr: bool = False) -> Strategy:
+        staleness_aware_lr: bool = False,
+        bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     """``staleness_aware_lr`` (Zhang et al. [40]): stale contributions are
     scaled by 1/s — the staleness-dependent learning-rate modulation."""
     s = max(1, staleness)
@@ -191,14 +186,16 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
         return st
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        bits = 32.0
+        fab = Fabric(comm, bucket_bytes)
         if compressor:
-            grads, cstate["residual"], bits = _compress(
-                comm, compressor, grads, cstate["residual"])
+            grads, cstate["residual"], nbytes = fab.compress(
+                grads, cstate["residual"], compressor)
+        else:
+            nbytes = fab.flat_bytes(grads)
         slot = t % s
         g_old = jax.tree.map(lambda b: b[slot], cstate["buf"])  # g_{t-s}
         others_old = jax.tree.map(
-            lambda a, b: a - b, comm.all_sum(g_old), g_old)
+            lambda a, b: a - b, fab.all_sum(g_old), g_old)
         w = comm.size
         stale_scale = 1.0 / s if staleness_aware_lr else 1.0
         g_eff = jax.tree.map(
@@ -208,7 +205,7 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
         cstate["buf"] = jax.tree.map(
             lambda b, g: b.at[slot].set(g.astype(jnp.float32)),
             cstate["buf"], grads)
-        return params, opt_state, cstate, _metrics(grads, bits)
+        return params, opt_state, cstate, fab.metrics(nbytes)
 
     return Strategy("ssp", 2, True, init, update)
 
@@ -217,7 +214,8 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
 # 3. downpour — complete communication, unbounded(-class) delay
 # ---------------------------------------------------------------------------
 def downpour(push_every: int = 4,
-             compressor: Optional[Compressor] = None) -> Strategy:
+             compressor: Optional[Compressor] = None,
+             bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     """Decentralized Downpour: workers accumulate locally and push on
     staggered schedules; every update is eventually delivered everywhere
     (complete).  Staggering makes deliveries interleave asynchronously —
@@ -230,10 +228,12 @@ def downpour(push_every: int = 4,
         return st
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        bits = 32.0
+        fab = Fabric(comm, bucket_bytes)
         if compressor:
-            grads, cstate["residual"], bits = _compress(
-                comm, compressor, grads, cstate["residual"])
+            grads, cstate["residual"], nbytes = fab.compress(
+                grads, cstate["residual"], compressor)
+        else:
+            nbytes = fab.flat_bytes(grads)
         w = comm.size
         offset = comm.worker_index()  # (W,) under LocalComm, scalar shard
         push = ((t + offset) % push_every == 0)
@@ -246,14 +246,14 @@ def downpour(push_every: int = 4,
             lambda a, g: a + g.astype(jnp.float32), cstate["acc"], grads)
         deliver = jax.tree.map(
             lambda a: jnp.where(bcast(push, a), a, 0.0), acc_plus)
-        recv = jax.tree.map(lambda s_, d: s_ - d, comm.all_sum(deliver), deliver)
+        recv = jax.tree.map(lambda s_, d: s_ - d, fab.all_sum(deliver), deliver)
         g_eff = jax.tree.map(
             lambda g, r: (g.astype(jnp.float32) + r) / w, grads, recv)
         params, opt_state = opt.update(g_eff, opt_state, params, t)
         cstate["acc"] = jax.tree.map(
             lambda a: jnp.where(bcast(push, a), 0.0, a), acc_plus)
         ev = jnp.mean(push.astype(jnp.float32))
-        return params, opt_state, cstate, _metrics(grads, bits, events=ev)
+        return params, opt_state, cstate, fab.metrics(nbytes, events=ev)
 
     return Strategy("downpour", 3, True, init, update)
 
@@ -262,7 +262,8 @@ def downpour(push_every: int = 4,
 # 4. gossip — PARTIAL communication (ring mixing)
 # ---------------------------------------------------------------------------
 def gossip(mix_every: int = 1, symmetric: bool = True,
-           compressor: Optional[Compressor] = None) -> Strategy:
+           compressor: Optional[Compressor] = None,
+           bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     """Ring gossip on *weights* after the local step.  A worker only ever
     hears from its ring neighbors — updates from others are never directly
     delivered: the paper's point 4, where model consistency is genuinely
@@ -272,11 +273,12 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
         return {}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
+        fab = Fabric(comm, bucket_bytes)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do_mix = (t + 1) % mix_every == 0
-        left = comm.ppermute(params, shift=1)
+        left = fab.ppermute(params, shift=1)
         if symmetric:
-            right = comm.ppermute(params, shift=-1)
+            right = fab.ppermute(params, shift=-1)
             mixed = jax.tree.map(
                 lambda p, l, r: (p.astype(jnp.float32) + l.astype(jnp.float32)
                                  + r.astype(jnp.float32)) / 3.0,
@@ -287,9 +289,9 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
                 params, left)
         params = jax.tree.map(
             lambda m, p: jnp.where(do_mix, m.astype(p.dtype), p), mixed, params)
-        ev = (do_mix.astype(jnp.float32) if hasattr(do_mix, "astype")
-              else float(do_mix)) * (2.0 if symmetric else 1.0)
-        return params, opt_state, cstate, _metrics(params, 32.0, events=ev)
+        ev = _events(do_mix) * (2.0 if symmetric else 1.0)
+        m = fab.metrics(fab.flat_bytes(params), events=ev)
+        return params, opt_state, cstate, m
 
     return Strategy("gossip", 4, False, init, update)
 
@@ -300,7 +302,8 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
 def hierarchical(inner: Strategy, outer: Strategy) -> Strategy:
     """Compose: ``inner`` runs every step on the fast fabric (intra-pod),
     ``outer`` on the slow fabric (cross-pod).  The comm handed to update
-    must be a HierComm."""
+    must be a HierComm; each tier builds its own bucketed Fabric over its
+    own Comm (DESIGN.md §2)."""
 
     def init(params, comm: HierComm):
         return {"inner": inner.init(params, comm.inner),

@@ -12,6 +12,7 @@ from collections import defaultdict  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.core import jax_compat as compat  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import build_step, resolve_config, truncate  # noqa: E402
 from repro.roofline.analysis import _INSTR_RE, _shape_bytes, COLLECTIVE_OPS  # noqa: E402
@@ -23,7 +24,7 @@ def top_collectives(arch, shape, multi_pod=False, repeat=1, n=14, mode="tp"):
     cfg = truncate(dataclasses.replace(resolve_config(arch, shape),
                                        sharding_mode=mode), repeat)
     step_fn, sds, sh, donate = build_step(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         comp = jax.jit(step_fn, in_shardings=sh,
                        donate_argnums=donate).lower(*sds).compile()
     rows = []

@@ -20,6 +20,7 @@ import traceback  # noqa: E402
 
 import jax  # noqa: E402
 
+from repro.core import jax_compat as compat  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import (SHAPES, build_step, resolve_config,  # noqa: E402
                                 truncate)
@@ -51,7 +52,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     # --- full config, scan-over-layers: proves lowering/sharding + memory ---
     t0 = time.time()
     step_fn, sds, shardings, donate = build_step(cfg, shape_name, mesh)
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         jitted = jax.jit(step_fn, in_shardings=shardings,
                          donate_argnums=donate)
         lowered = jitted.lower(*sds)
@@ -67,10 +68,10 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     for r in (1, 2):
         tcfg = truncate(cfg, r)
         tstep, tsds, tsh, tdon = build_step(tcfg, shape_name, mesh)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             tcomp = jax.jit(tstep, in_shardings=tsh,
                             donate_argnums=tdon).lower(*tsds).compile()
-        costs[r] = {"cost": dict(tcomp.cost_analysis()),
+        costs[r] = {"cost": compat.cost_analysis(tcomp),
                     "hlo": tcomp.as_text()}
         del tcomp
     cost, coll = extrapolate_cost(costs[1], costs[2], repeat_full)

@@ -5,10 +5,12 @@ os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_p
 loosely-coupled-tier program of the hierarchical deployment (DESIGN.md §2).
 
 Each pod runs its own (single-pod) train step; this SEPARATE program then
-synchronizes gradients across pods: per-pod grads are 1-bit/int8/top-k
-encoded with error feedback, the COMPACT wire format is all-gathered over
-"pod", and each pod decodes + averages.  Grads carry a leading pod dim
-(stacked), sharded P("pod", <intra-pod spec>).
+synchronizes gradients across pods.  The exchange itself is a thin wrapper
+over the bucketed ``Fabric`` (core/fabric.py): per-pod grads are flattened
+into flat f32 buckets, 1-bit/int8/top-k encoded with error feedback, and
+ONE packed uint8 buffer per bucket is all-gathered over "pod" — the same
+code path the in-step exchange (train/loop.py) uses.  Grads carry a
+leading pod dim (stacked), sharded P("pod", <intra-pod spec>).
 
 (The fused form — compression inside the train step via partial-manual
 shard_map — trips an XLA SPMD partitioner CHECK in 0.8.2; the two-program
@@ -23,59 +25,33 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core.compression import (get_compressor, pack_signs,  # noqa: E402
-                                    unpack_signs)
+from repro.core import jax_compat as compat  # noqa: E402
+from repro.core.comm import ShardComm  # noqa: E402
+from repro.core.compression import get_compressor  # noqa: E402
+from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric  # noqa: E402
 from repro.launch.mesh import ICI_BW, make_production_mesh  # noqa: E402
 from repro.launch.specs import model_sds, param_shardings_sds  # noqa: E402
-from repro.launch.sharding import _filter_spec  # noqa: E402
 from repro.roofline.analysis import parse_collectives  # noqa: E402
 
 
-def build_exchange(compressor):
-    """(grads stacked (P, ...), residual (P, ...)) → (avg grads, residual)."""
+def build_exchange(compressor, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """(grads stacked (P, ...), residual (P, ...)) → (avg grads, residual).
+
+    Runs inside shard_map over "pod"; delegates to ``Fabric.exchange``:
+    at most one collective per bucket (an all-gather of packed bytes when
+    compressed, an all-reduce of the flat f32 bucket otherwise)."""
 
     def per_pod(g_loc, r_loc):
-        flat_g, treedef = jax.tree.flatten(g_loc)
-        flat_r = jax.tree.leaves(r_loc)
-        out_g, out_r = [], []
-        for g, r in zip(flat_g, flat_r):
-            if compressor is None:
-                out_g.append(jax.lax.pmean(g, "pod"))
-                out_r.append(r)
-                continue
-            target = g.astype(jnp.float32) + r
-            wire, meta = compressor.compress(target)
-            decoded_self = compressor.decompress(wire, meta, g.shape,
-                                                 jnp.float32)
-            if compressor.name == "onebit":
-                # true 1-bit wire format: pack 8 signs/byte before the hop
-                sign, scale = wire
-                nsign = sign.size
-                sshape = sign.shape
-                wire = (pack_signs(sign.reshape(-1)), scale)
-
-                def unpack(w):
-                    return (unpack_signs(w[0], nsign).reshape(sshape), w[1])
-            else:
-                def unpack(w):
-                    return w
-            gathered = jax.tree.map(lambda w: jax.lax.all_gather(w, "pod"),
-                                    wire)
-            npods = jax.lax.axis_size("pod")
-            dec = [compressor.decompress(
-                unpack(jax.tree.map(lambda w: w[i], gathered)), meta,
-                g.shape, jnp.float32) for i in range(npods)]
-            out_g.append((sum(dec) / npods).astype(g.dtype))
-            out_r.append(target - decoded_self)
-        return (jax.tree.unflatten(treedef, out_g),
-                jax.tree.unflatten(treedef, out_r))
+        comm = ShardComm("pod", compat.axis_size("pod"))
+        fab = Fabric(comm, bucket_bytes)
+        g, new_r, _ = fab.exchange(g_loc, r_loc, compressor)
+        return g, new_r
 
     return per_pod
 
 
-def lower_exchange(arch: str, compressor_name: str):
-    import dataclasses
-
+def lower_exchange(arch: str, compressor_name: str,
+                   bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     from repro.launch.specs import resolve_config
 
     mesh = make_production_mesh(multi_pod=True)
@@ -93,13 +69,13 @@ def lower_exchange(arch: str, compressor_name: str):
     g_sh = jax.tree.map(stack_sh, intra)
 
     comp = None if compressor_name == "none" else get_compressor(compressor_name)
-    fn = build_exchange(comp)
-    smapped = jax.shard_map(
+    fn = build_exchange(comp, bucket_bytes)
+    smapped = compat.shard_map(
         fn, mesh=mesh, axis_names={"pod"},
         in_specs=(P("pod"), P("pod")), out_specs=(P("pod"), P("pod")),
         check_vma=False)
-    with jax.set_mesh(mesh):
-        compiled = jax.jit(smapped).lower((g_sds,) * 0 or g_sds, g_sds).compile()
+    with compat.set_mesh(mesh):
+        compiled = jax.jit(smapped).lower(g_sds, g_sds).compile()
     pc = parse_collectives(compiled.as_text())
     total = sum(pc["bytes"].values())
     return total, pc
@@ -108,14 +84,17 @@ def lower_exchange(arch: str, compressor_name: str):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
+    ap.add_argument("--bucket-mib", type=float, default=4.0)
     args = ap.parse_args()
+    bucket_bytes = int(args.bucket_mib * 2**20)
     base = None
     for name in ("none", "int8", "onebit", "topk"):
-        total, pc = lower_exchange(args.arch, name)
+        total, pc = lower_exchange(args.arch, name, bucket_bytes)
         if base is None:
             base = total
+        ncoll = sum(pc["counts"].values())
         print(f"{args.arch} cross-pod exchange [{name:6s}]: "
-              f"{total/2**20:9.1f} MiB on the wire "
+              f"{total/2**20:9.1f} MiB on the wire in {ncoll} collectives "
               f"({base/max(total,1):5.1f}× vs uncompressed)  "
               f"→ {total/ICI_BW*1e3:7.2f} ms at pod-link bw")
 

@@ -7,8 +7,7 @@ roofline analysis.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.core import jax_compat as compat
 
 
 # TPU v5e per-chip hardware constants (roofline denominators)
@@ -20,11 +19,9 @@ ICI_BW = 50e9  # B/s per link
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/examples (e.g. (4,) over ("data",))."""
-    return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)

@@ -18,6 +18,8 @@ import re
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import jax_compat as compat
+
 # logical axis names used throughout the model code
 BATCH = ("pod", "data")
 SEQ = "data"
@@ -51,12 +53,11 @@ def shard(x, *spec):
     """Constrain activation sharding; drops axes absent from the mesh, not
     dividing the dim, or currently Manual (inside a shard_map over that
     axis); no-op when no mesh context is active."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     sizes = dict(mesh.shape)
-    manual = {n for n, t in zip(mesh.axis_names, mesh.axis_types)
-              if "Manual" in str(t)}
+    manual = compat.manual_axis_names(mesh)
     sizes = {k: v for k, v in sizes.items() if k not in manual}
     entries = []
     for d, entry in enumerate(spec):
@@ -74,6 +75,8 @@ def shard(x, *spec):
             axes.pop()
         entries.append(tuple(axes) if len(axes) > 1 else
                        (axes[0] if axes else None))
+    if all(e is None for e in entries):  # nothing to constrain (e.g. the
+        return x  # whole mesh is Manual inside a shard_map body)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*entries)))
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import FULL_ATTENTION, ModelConfig
+from repro.core import jax_compat as compat
 from repro.launch.sharding import BATCH, MODEL, heads_ax, seq_ax, shard
 
 NEG_INF = -2.0e38
@@ -450,7 +451,7 @@ def _moe_ep(p, cfg: ModelConfig, x, mesh):
         return combined.reshape(bl, l, d), aux
 
     batch_spec = P(dp if dp else None, None, None)
-    out, aux = jax.shard_map(
+    out, aux = compat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(batch_spec, P(None, None),
                   P("model", "data" if "data" in names else None, None),
@@ -481,7 +482,7 @@ def moe(p, cfg: ModelConfig, x):
     """x: (B, L, D) → (out, aux_loss).  Dispatches to the expert-parallel
     shard_map path under a mesh with a "model" axis (and enough tokens),
     else the dense reference path."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = compat.get_abstract_mesh()
     use_ep = (mesh is not None and not mesh.empty
               and "model" in mesh.axis_names
               and cfg.num_experts_padded % _axsize(mesh, "model") == 0

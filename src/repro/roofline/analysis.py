@@ -100,6 +100,16 @@ def parse_collectives(hlo_text: str, loop_trip_counts=None) -> dict:
     return {"bytes": out, "counts": counts}
 
 
+def collective_count(hlo_text: str, loop_trip_counts=None) -> int:
+    """Total cross-worker collective ops in an optimized HLO module.
+
+    The fusion check for the bucketed fabric (core/fabric.py): an exchange
+    lowered through ``Fabric`` must contain at most ``layout.n_buckets``
+    of these where the per-leaf path emitted one (or more) per parameter
+    leaf."""
+    return sum(parse_collectives(hlo_text, loop_trip_counts)["counts"].values())
+
+
 def extrapolate_cost(run1: dict, run2: dict, repeat: int):
     """Linear-in-depth extrapolation from unrolled 1-/2-super-block runs.
 

@@ -22,7 +22,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.comm import Comm, LocalComm
+from repro.core import jax_compat as compat
+from repro.core.comm import Comm, LocalComm, ShardComm
+from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
 from repro.core.strategies import Strategy
 from repro.models import transformer as T
 from repro.optim.optimizers import Optimizer
@@ -99,7 +101,8 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                             strategy: Optional[Strategy] = None,
                             comm: Optional[Comm] = None,
                             remat: bool = True,
-                            pod_compressor=None):
+                            pod_compressor=None,
+                            bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Global-model train step.  With ``strategy=None`` this is pure
     synchronous data parallelism (gradients all-reduced by XLA across the
     batch sharding) — the paper's spectrum point 1 and the dry-run target.
@@ -109,52 +112,34 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
     ``pod_compressor``: the paper's §2.2.4 technique as a first-class
     production feature — gradients are synced *completely* inside each pod
     (fast ICI, spectrum pt. 1) but the CROSS-POD hop (slow DCN, the paper's
-    loosely-coupled tier) ships the COMPRESSED payload: per-pod gradients
-    are 1-bit/int8/top-k encoded with error feedback, the compact wire
-    format is all-gathered over "pod", and each pod decodes + averages.
-    The byte reduction is visible in the lowered HLO (int8 gathers instead
-    of f32 all-reduce)."""
+    loosely-coupled tier) ships the COMPRESSED payload.  The exchange is
+    the bucketed ``Fabric`` (core/fabric.py): per-pod gradients are
+    flattened into flat f32 buckets, 1-bit/int8/top-k encoded with error
+    feedback, and ONE packed byte buffer per bucket is all-gathered over
+    "pod" — at most n_buckets collectives in the lowered HLO where the old
+    per-leaf path emitted one (or more) per parameter."""
 
     loss_fn = make_loss_fn(cfg, remat=remat)
 
     def sync_grads(params, batch):
         return jax.value_and_grad(loss_fn)(params, batch)
 
-    def pod_compressed_grads(params, batch, residual):
+    def pod_fabric_grads(params, batch, residual):
         from jax.sharding import PartitionSpec as P
 
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = compat.get_abstract_mesh()
+        npods = dict(mesh.shape).get("pod", 1)
 
         def per_pod(params, batch, residual):
             loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            flat_g, treedef = jax.tree.flatten(grads)
-            flat_r = jax.tree.leaves(residual)
-            out_g, out_r = [], []
-            for g, r in zip(flat_g, flat_r):
-                target = g.astype(jnp.float32) + r
-                wire, meta = pod_compressor.compress(target)
-                decoded_self = pod_compressor.decompress(
-                    wire, meta, g.shape, jnp.float32)
-                # ship the COMPACT wire format across pods
-                gathered = jax.tree.map(
-                    lambda w: jax.lax.all_gather(w, "pod"), wire)
-                npods = jax.lax.axis_size("pod")
-                decoded = [
-                    pod_compressor.decompress(
-                        jax.tree.map(lambda w: w[i], gathered), meta,
-                        g.shape, jnp.float32)
-                    for i in range(npods)]
-                out_g.append(sum(decoded) / npods)
-                out_r.append(target - decoded_self)
-            grads = jax.tree.unflatten(treedef, [x.astype(g.dtype) for x, g
-                                                 in zip(out_g, flat_g)])
-            new_r = jax.tree.unflatten(treedef, out_r)
+            fab = Fabric(ShardComm("pod", npods), bucket_bytes)
+            grads, new_r, _ = fab.exchange(grads, residual, pod_compressor)
             return jax.lax.pmean(loss, "pod"), grads, new_r
 
         batch_specs = jax.tree.map(lambda _: P("pod"), batch)
         rep = jax.tree.map(lambda _: P(), params)
         rep_r = jax.tree.map(lambda _: P(), residual)
-        return jax.shard_map(
+        return compat.shard_map(
             per_pod, mesh=mesh, axis_names={"pod"},
             in_specs=(rep, batch_specs, rep_r),
             out_specs=(P(), rep, rep_r), check_vma=False,
@@ -162,7 +147,7 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
 
     def step(state, batch):
         if pod_compressor is not None:
-            loss, grads, new_res = pod_compressed_grads(
+            loss, grads, new_res = pod_fabric_grads(
                 state["params"], batch, state["comm_state"]["residual"])
             comm_state = {"residual": new_res}
         else:

@@ -28,8 +28,8 @@ def test_moe_ep_matches_dense():
     """Expert-parallel shard_map MoE ≡ dense reference (fwd + grads)."""
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs.base import ModelConfig
+        from repro.core.jax_compat import make_mesh, set_mesh
         from repro.models import layers as L
 
         cfg = ModelConfig(d_model=64, num_experts=8, top_k=2, moe_d_ff=128,
@@ -44,9 +44,8 @@ def test_moe_ep_matches_dense():
 
         d_out, _ = L._moe_dense(p, cfg, x)
         g_d = jax.grad(loss)(p)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
-        with jax.set_mesh(mesh):
+        mesh = make_mesh((2, 4), ("data", "model"))
+        with set_mesh(mesh):
             e_out, _ = jax.jit(lambda p, x: L.moe(p, cfg, x))(p, x)
             g_e = jax.jit(jax.grad(loss))(p)
         assert float(jnp.max(jnp.abs(d_out - e_out))) < 1e-4
@@ -64,8 +63,8 @@ def test_sharded_forward_matches_single_device():
     out = _run("""
         import dataclasses
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType
         from repro.configs import get_config
+        from repro.core.jax_compat import make_mesh, set_mesh
         from repro.models import transformer as T
 
         cfg = dataclasses.replace(get_config("qwen2-1.5b").reduced(),
@@ -74,11 +73,10 @@ def test_sharded_forward_matches_single_device():
         toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
                                   cfg.vocab_size)
         ref, _ = T.forward(params, cfg, tokens=toks)
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh((2, 4), ("data", "model"))
         for mode in ("tp", "cp"):
             mcfg = dataclasses.replace(cfg, sharding_mode=mode)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 got, _ = jax.jit(lambda p, t: T.forward(p, mcfg, tokens=t))(
                     params, toks)
             err = float(jnp.max(jnp.abs(got - ref)))
@@ -93,20 +91,19 @@ def test_dryrun_lower_compile_small_mesh():
     compile + memory/cost analysis for a truncated arch (train + decode)."""
     out = _run("""
         import jax
-        from jax.sharding import AxisType
+        from repro.core.jax_compat import cost_analysis, make_mesh, set_mesh
         from repro.launch.specs import build_step, resolve_config, truncate
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         for arch, shape in (("gemma3-1b", "train_4k"),
                             ("qwen2-moe-a2.7b", "decode_32k"),
                             ("xlstm-125m", "long_500k")):
             cfg = truncate(resolve_config(arch, shape), 1)
             step, sds, sh, don = build_step(cfg, shape, mesh)
-            with jax.set_mesh(mesh):
+            with set_mesh(mesh):
                 comp = jax.jit(step, in_shardings=sh,
                                donate_argnums=don).lower(*sds).compile()
-            assert comp.cost_analysis().get("flops", 0) > 0
+            assert cost_analysis(comp).get("flops", 0) > 0
             assert comp.memory_analysis().argument_size_in_bytes > 0
             print(f"{arch}/{shape}_OK")
     """, devices=8)
@@ -133,24 +130,24 @@ def test_compressed_pod_exchange_lowers_and_reduces_wire():
     1-bit wire format than the f32 psum baseline."""
     out = _run("""
         import jax, jax.numpy as jnp
-        from jax.sharding import AxisType, NamedSharding, PartitionSpec as P
-        from repro.launch.exchange import build_exchange
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.compression import get_compressor
+        from repro.core.jax_compat import make_mesh, set_mesh, shard_map
+        from repro.launch.exchange import build_exchange
         from repro.roofline.analysis import parse_collectives
 
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         g = {"w": jax.ShapeDtypeStruct((2, 4096, 256), jnp.float32)}
         sh = {"w": NamedSharding(mesh, P("pod", "data", "model"))}
         totals = {}
         for name in ("none", "onebit"):
             comp = None if name == "none" else get_compressor(name)
-            fn = jax.shard_map(build_exchange(comp), mesh=mesh,
-                               axis_names={"pod"},
-                               in_specs=(P("pod"), P("pod")),
-                               out_specs=(P("pod"), P("pod")),
-                               check_vma=False)
-            with jax.set_mesh(mesh):
+            fn = shard_map(build_exchange(comp), mesh=mesh,
+                           axis_names={"pod"},
+                           in_specs=(P("pod"), P("pod")),
+                           out_specs=(P("pod"), P("pod")),
+                           check_vma=False)
+            with set_mesh(mesh):
                 c = jax.jit(fn).lower(g, g).compile()
             totals[name] = sum(parse_collectives(c.as_text())["bytes"].values())
         ratio = totals["none"] / max(totals["onebit"], 1)
