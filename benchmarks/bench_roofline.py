@@ -80,8 +80,91 @@ def check_fusion():
              f"compression_x={ratio:.1f}")
 
 
+_ZERO1_CHECK = """
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import strategies as ST
+    from repro.core.comm import ShardComm
+    from repro.core.fabric import BucketLayout, Fabric
+    from repro.core.jax_compat import make_mesh, set_mesh, shard_map
+    from repro.optim import adam
+    from repro.roofline.analysis import (exchange_wire_bytes,
+                                         opt_state_bytes, parse_collectives)
+    from repro.train.loop import zero1_opt_template
+
+    PODS, LAYERS = 4, 8
+    mesh = make_mesh((PODS,), ("pod",))
+    params = {f"l{i}": {"w": jax.ShapeDtypeStruct((256, 64), jnp.float32),
+                        "b": jax.ShapeDtypeStruct((64,), jnp.float32)}
+              for i in range(LAYERS)}
+    bucket_bytes = 4 * 40_000
+    lay = BucketLayout.build(params, bucket_bytes, lead_axes=0)
+    opt = adam(1e-3)
+    opt_state = zero1_opt_template(params, opt, PODS, bucket_bytes)
+    strat = ST.sync_zero1(bucket_bytes=bucket_bytes)
+    comm = ShardComm("pod", PODS)
+
+    def body(p, g, s):
+        p, s, _, _ = strat.update(p, g, s, {}, jnp.zeros((), jnp.int32),
+                                  opt, comm)
+        return p, s
+
+    rep = jax.tree.map(lambda _: P(), params)
+    ssp = jax.tree.map(lambda _: P("pod"), opt_state)
+    fn = shard_map(body, mesh=mesh, axis_names={"pod"},
+                   in_specs=(rep, rep, ssp), out_specs=(rep, ssp),
+                   check_vma=False)
+    with set_mesh(mesh):
+        c = jax.jit(fn).lower(params, params, opt_state).compile()
+    pc = parse_collectives(c.as_text())
+    n = sum(x.size for x in jax.tree.leaves(params))
+    shard_elems = sum(x.size for x in jax.tree.leaves(opt_state)) // PODS
+    rows = {"n_buckets": lay.n_buckets,
+            "counts": pc["counts"],
+            "dense_state_bytes": opt_state_bytes(n, opt.state_floats),
+            "zero1_state_bytes": 4 * shard_elems,
+            "zero1_model_bytes": opt_state_bytes(n, opt.state_floats,
+                                                 PODS, partitioned=True),
+            "wire_dense": exchange_wire_bytes(4 * n, PODS),
+            "wire_zero1": exchange_wire_bytes(4 * n, PODS, partitioned=True)}
+    print("ZERO1 " + json.dumps(rows))
+"""
+
+
+def check_zero1():
+    """Lower the partitioned (ZeRO-1) exchange on 4 forced host devices and
+    emit the reduce-scatter/all-gather counts + the ~W per-worker
+    optimizer-state shrink."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_ZERO1_CHECK)],
+        capture_output=True, text=True, env=env, timeout=560)
+    if out.returncode != 0:
+        emit("roofline/zero1", 0.0, "error=" + out.stderr[-200:].replace(
+            "\n", " ").replace(",", ";"))
+        return
+    line = [l for l in out.stdout.splitlines() if l.startswith("ZERO1 ")][0]
+    rows = json.loads(line[len("ZERO1 "):])
+    counts = rows["counts"]
+    ok = (0 < counts["reduce-scatter"] <= rows["n_buckets"]
+          and 0 < counts["all-gather"] <= rows["n_buckets"]
+          and counts["all-reduce"] == 0)
+    shrink = rows["dense_state_bytes"] / max(rows["zero1_state_bytes"], 1)
+    emit("roofline/zero1", float(counts["reduce-scatter"]),
+         f"n_buckets={rows['n_buckets']};rs={counts['reduce-scatter']};"
+         f"ag={counts['all-gather']};ar={counts['all-reduce']};"
+         f"partitioned={ok};state_shrink_x={shrink:.2f};"
+         f"model_shrink_x={rows['dense_state_bytes']/max(rows['zero1_model_bytes'],1):.2f};"
+         f"wire_parity={rows['wire_zero1'] == rows['wire_dense']}")
+
+
 def run():
     check_fusion()
+    check_zero1()
     for fname, mesh in (("results_singlepod.json", "16x16"),
                         ("results_multipod.json", "2x16x16")):
         path = os.path.join(ROOT, fname)

@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpointer import save_checkpoint, restore_checkpoint, latest_step  # noqa: F401
+from repro.checkpoint.checkpointer import (latest_step, read_meta,  # noqa: F401
+                                           reshard_bucket, restore_checkpoint,
+                                           save_checkpoint)

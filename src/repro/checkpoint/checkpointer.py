@@ -5,6 +5,19 @@ addressable on save) and restored with ``jax.device_put`` against the
 caller-provided sharding template, so a restore can re-shard onto a
 different mesh — the "redistribute training" requirement of the paper's
 enterprise story (§1).
+
+Two guarantees added for the production path:
+
+  * **Atomic writes** — the ``.npz`` and ``meta.json`` are written to a
+    temp name and ``os.replace``d into place, so a crash mid-save can
+    never leave a truncated "latest" checkpoint behind.
+  * **Partitioned (ZeRO-1) opt state** — ``save_checkpoint(partition=
+    play.spec())`` records the shard-bucket partition (worker count +
+    true bucket sizes) in meta.json; ``restore_checkpoint(repartition=
+    True)`` re-shards any saved shard-bucket leaf whose shape disagrees
+    with the template — reassemble chunks in rank order, drop the old
+    padding, re-pad for the new worker count — so a run saved at W
+    workers restores onto W' (the paper's "redistribute training").
 """
 
 from __future__ import annotations
@@ -15,6 +28,13 @@ import re
 
 import jax
 import numpy as np
+
+
+def _prod(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
 
 
 def _flatten(tree, prefix=""):
@@ -40,16 +60,43 @@ def _unflatten_into(template, flat: dict, prefix=""):
     return flat[prefix]
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+def save_checkpoint(ckpt_dir: str, step: int, tree,
+                    partition: dict | None = None) -> str:
+    """Atomically write ``tree`` as ``ckpt_<step>.npz`` + meta.json.
+
+    ``partition``: optional ZeRO-1 partition spec (``PartitionedLayout
+    .spec()``: {"n_parts", "bucket_sizes"}) describing the shard-bucket
+    leaves of the saved opt state; recorded in meta.json so a later
+    restore can re-shard onto a different worker count."""
     os.makedirs(ckpt_dir, exist_ok=True)
     arrays = {}
     for path, leaf in _flatten(tree):
         arrays[path] = np.asarray(jax.device_get(leaf))
     fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    np.savez_compressed(fname, **arrays)
-    with open(os.path.join(ckpt_dir, "meta.json"), "w") as f:
-        json.dump({"latest": step}, f)
+    tmp = fname + ".tmp"
+    with open(tmp, "wb") as f:  # file handle: savez won't append a suffix
+        np.savez_compressed(f, **arrays)
+    os.replace(tmp, fname)
+    # meta is MERGED, and partition specs are keyed per step, so a later
+    # partition-less save into the same dir never orphans an earlier
+    # partitioned checkpoint
+    meta = read_meta(ckpt_dir)
+    meta["latest"] = step
+    if partition is not None:
+        meta.setdefault("partitions", {})[str(step)] = partition
+    mpath = os.path.join(ckpt_dir, "meta.json")
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(meta, f)
+    os.replace(mpath + ".tmp", mpath)
     return fname
+
+
+def read_meta(ckpt_dir: str) -> dict:
+    mpath = os.path.join(ckpt_dir, "meta.json")
+    if not os.path.exists(mpath):
+        return {}
+    with open(mpath) as f:
+        return json.load(f)
 
 
 def latest_step(ckpt_dir: str):
@@ -63,12 +110,78 @@ def latest_step(ckpt_dir: str):
     return max(steps) if steps else None
 
 
-def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None):
+def reshard_bucket(arr: np.ndarray, true_size: int, target_shape) -> np.ndarray:
+    """Re-shard one saved ZeRO-1 bucket to a new partition.
+
+    Works for both layouts because shard chunks are stored in rank order:
+    a stacked simulator leaf (W, C) and a global flat leaf (padded,) both
+    flatten to chunk_0‖chunk_1‖…‖old_padding.  Drop the old padding
+    (``true_size`` live elements), zero-pad for the new worker count, and
+    reshape to the template."""
+    flat = np.asarray(arr).reshape(-1)[:true_size]
+    out = np.zeros((_prod(target_shape),), flat.dtype)
+    out[:true_size] = flat
+    return out.reshape(target_shape)
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None,
+                       repartition: bool = False):
     """Restore into the structure of ``template``; if ``shardings`` (same
-    structure) is given, leaves are placed with those shardings."""
+    structure) is given, leaves are placed with those shardings.
+
+    ``repartition=True``: shard-bucket leaves saved under a recorded ZeRO-1
+    partition (see ``save_checkpoint``) whose shapes disagree with the
+    template are re-sharded for the template's worker count.  Bucket
+    identity is the leaf's trailing path index (shard states are lists of
+    per-bucket arrays, so "opt_state.m.3" is bucket 3) — the template must
+    therefore be built with the SAME bucket layout (``bucket_bytes``) as
+    the save; a mismatched bucket count is rejected rather than silently
+    zero-filling state."""
     fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
     data = np.load(fname)
     flat = {k: data[k] for k in data.files}
+    if repartition:
+        part = read_meta(ckpt_dir).get("partitions", {}).get(str(step))
+        if part is None:
+            raise ValueError("repartition=True but the checkpoint records "
+                             "no partition spec (save with partition=...)")
+        sizes = part["bucket_sizes"]
+        resharded_lists = set()
+        for path, want in _flatten(template):
+            saved = flat.get(path)
+            head, _, idx = path.rpartition(".")
+            if saved is None or not idx.isdigit():
+                continue
+            wshape = tuple(getattr(want, "shape", ()))
+            if tuple(saved.shape) != wshape:
+                if int(idx) >= len(sizes):
+                    raise ValueError(
+                        f"{path}: bucket {idx} outside the recorded "
+                        f"partition ({len(sizes)} buckets) — template "
+                        "built with a different bucket layout")
+                if _prod(wshape) < sizes[int(idx)]:
+                    raise ValueError(
+                        f"{path}: template holds {_prod(wshape)} elements "
+                        f"but bucket {idx} carries {sizes[int(idx)]} — "
+                        "template built with a different bucket layout")
+                flat[path] = reshard_bucket(saved, sizes[int(idx)], wshape)
+                resharded_lists.add(head)
+        # every saved bucket of a re-sharded list must be consumed: a
+        # template with FEWER buckets (different bucket_bytes) would
+        # otherwise silently drop the tail buckets' state
+        for head in resharded_lists:
+            saved_idx = {int(k.rpartition(".")[2]) for k in data.files
+                         if k.rpartition(".")[0] == head
+                         and k.rpartition(".")[2].isdigit()}
+            templ_idx = {int(p.rpartition(".")[2])
+                         for p, _ in _flatten(template)
+                         if p.rpartition(".")[0] == head
+                         and p.rpartition(".")[2].isdigit()}
+            if saved_idx != templ_idx:
+                raise ValueError(
+                    f"{head}: checkpoint has buckets {sorted(saved_idx)} "
+                    f"but template expects {sorted(templ_idx)} — bucket "
+                    "layout (bucket_bytes) must match the save")
     tree = _unflatten_into(template, flat)
     if shardings is not None:
         tree = jax.tree.map(

@@ -49,11 +49,26 @@ class Comm:
         """Ring shift: worker w receives worker (w - shift) % W's value."""
         raise NotImplementedError
 
-    def all_gather(self, tree):
-        """Every worker's value stacked on a NEW leading axis of size W.
+    def all_gather(self, tree, tiled: bool = False):
+        """Gather every worker's value.
 
-        Only meaningful for per-shard realizations (the fabric's packed
-        wire path); the stacked simulator already sees every replica."""
+        ``tiled=False``: stacked on a NEW leading axis of size W (the
+        fabric's packed wire path; only meaningful for per-shard
+        realizations — the stacked simulator already sees every replica).
+        ``tiled=True``: concatenated along the LAST axis — the inverse of
+        ``reduce_scatter``, used by the partitioned (ZeRO-1) exchange."""
+        raise NotImplementedError
+
+    def reduce_scatter(self, tree, mean: bool = False):
+        """Cross-worker sum (or mean), scattered: worker w keeps only its
+        own chunk w of the last axis, which must divide by W.  The ZeRO-1
+        primitive: reduce_scatter + shard update + all_gather(tiled=True)
+        moves the same ring bytes as one all-reduce."""
+        raise NotImplementedError
+
+    def shard_chunk(self, tree):
+        """Worker w's own 1/W chunk of the last axis of a REPLICATED tree
+        (a local slice — no communication)."""
         raise NotImplementedError
 
     def worker_index(self, like=None):
@@ -88,6 +103,47 @@ class LocalComm(Comm):
 
     def ppermute(self, tree, shift: int = 1):
         return jax.tree.map(lambda x: jnp.roll(x, shift, axis=self.axis), tree)
+
+    def all_gather(self, tree, tiled: bool = False):
+        if not tiled:
+            raise NotImplementedError(
+                "stacked LocalComm already sees every replica; only the "
+                "tiled (last-axis concat) gather is defined")
+        ax, w = self.axis, self.size
+
+        def one(x):
+            y = jnp.moveaxis(x, ax, -2)  # (..., W, C): shards in rank order
+            flat = y.reshape(y.shape[:-2] + (w * x.shape[-1],))
+            return jnp.broadcast_to(jnp.expand_dims(flat, ax),
+                                    x.shape[:-1] + (w * x.shape[-1],))
+
+        return jax.tree.map(one, tree)
+
+    def reduce_scatter(self, tree, mean: bool = False):
+        ax, w = self.axis, self.size
+
+        def one(x):
+            red = jnp.mean(x, axis=ax) if mean else jnp.sum(x, axis=ax)
+            c = x.shape[-1] // w
+            chunks = red.reshape(red.shape[:-1] + (w, c))
+            return jnp.moveaxis(chunks, -2, ax)  # worker w gets chunk w
+
+        return jax.tree.map(one, tree)
+
+    def shard_chunk(self, tree):
+        """Worker w's own 1/W chunk of the last axis of a REPLICATED tree
+        (no communication: the local slice of a value every worker holds)."""
+        ax, w = self.axis, self.size
+
+        def one(x):
+            c = x.shape[-1] // w
+            chunks = x.reshape(x.shape[:-1] + (w, c))
+            idx = jax.lax.broadcasted_iota(
+                jnp.int32, chunks.shape[:-2] + (1, c), ax)
+            return jnp.take_along_axis(chunks, idx, axis=-2).reshape(
+                x.shape[:-1] + (c,))
+
+        return jax.tree.map(one, tree)
 
     def worker_index(self, like=None):
         return jnp.arange(self.size).reshape(
@@ -124,9 +180,29 @@ class ShardComm(Comm):
         return jax.tree.map(
             lambda x: jax.lax.ppermute(x, self.axis_name, perm), tree)
 
-    def all_gather(self, tree):
+    def all_gather(self, tree, tiled: bool = False):
         return jax.tree.map(
-            lambda x: jax.lax.all_gather(x, self.axis_name), tree)
+            lambda x: jax.lax.all_gather(
+                x, self.axis_name,
+                axis=x.ndim - 1 if tiled else 0, tiled=tiled), tree)
+
+    def reduce_scatter(self, tree, mean: bool = False):
+        def one(x):
+            y = jax.lax.psum_scatter(x, self.axis_name,
+                                     scatter_dimension=x.ndim - 1, tiled=True)
+            return y / self.size if mean else y
+
+        return jax.tree.map(one, tree)
+
+    def shard_chunk(self, tree):
+        """This shard's 1/W chunk of the last axis of a replicated tree."""
+        i = jax.lax.axis_index(self.axis_name)
+
+        def one(x):
+            c = x.shape[-1] // self.size
+            return jax.lax.dynamic_slice_in_dim(x, i * c, c, axis=x.ndim - 1)
+
+        return jax.tree.map(one, tree)
 
     def worker_index(self, like=None):
         return jax.lax.axis_index(self.axis_name)

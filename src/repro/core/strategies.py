@@ -3,6 +3,8 @@ strategies.
 
 Spectrum point → strategy:
   1. synchronous (large mini-batch)        → ``sync``
+  1z. sync + partitioned opt state (ZeRO-1) → ``sync_zero1``  (same wire
+     bytes as ``sync``, O(N/W) per-worker optimizer state)
   2. complete, bounded delay               → ``ssp``        (stale-synchronous)
   3. complete, unbounded delay             → ``downpour``   (decentralized
      realization of the parameter-server semantics; see DESIGN.md §2 for why
@@ -33,6 +35,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core.comm import Comm, HierComm
 from repro.core.compression import Compressor, dgc_init, ef_init
@@ -48,11 +51,32 @@ class Strategy:
     init: Callable  # (params, comm) -> comm_state
     update: Callable  # (params, grads, opt_state, comm_state, t, optimizer, comm)
     #                 -> (params, opt_state, comm_state, metrics)
+    init_opt: Optional[Callable] = None  # (params, optimizer, comm) ->
+    #                 opt_state; strategies that OWN the optimizer-state
+    #                 layout (ZeRO-1 shard buckets) override the default
+    #                 optimizer.init(params) in train/loop.init_train_state.
+
+    # Contract: ``update`` must treat ``comm_state`` as immutable and
+    # return a FRESH mapping — callers re-step from saved state (resume,
+    # speculative steps), so writing into the argument would corrupt it.
 
 
 def _events(flag):
     """Traced or python bool → f32 event count."""
     return flag.astype(jnp.float32) if hasattr(flag, "astype") else float(flag)
+
+
+def _gate(flag, sync_fn, operand):
+    """Run ``sync_fn`` (which issues collectives) only on sync steps.
+
+    A static schedule flag prunes at trace time (the non-sync trace has NO
+    collective at all); a traced flag becomes ``lax.cond`` — ``t`` is
+    replicated, every shard takes the same branch, and the collective
+    executes 1/sync_every of the steps instead of running every step and
+    being discarded through ``jnp.where``."""
+    if isinstance(flag, (bool, int)):  # static: prune the dead branch
+        return sync_fn(operand) if flag else operand
+    return lax.cond(flag, sync_fn, lambda o: o, operand)
 
 
 def _zero_metrics():
@@ -80,6 +104,45 @@ def sync(compressor: Optional[Compressor] = None,
 
 
 # ---------------------------------------------------------------------------
+# 1z. synchronous + partitioned optimizer state (ZeRO-1)
+# ---------------------------------------------------------------------------
+def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+    """Spectrum point 1 with sharded-optimizer data parallelism (ZeRO-1,
+    Rajbhandari et al.): each flat f32 bucket is reduce-SCATTERED so worker
+    w owns only chunk w of the mean gradient, updates its 1/W shard of the
+    parameters against 1/W of the optimizer state, and the updated shards
+    are all-gathered back into the full replicated parameters.
+
+    Wire bytes per step equal the dense all-reduce (reduce-scatter +
+    all-gather = one ring all-reduce), but per-worker optimizer-state
+    memory drops from O(N) to O(N/W) — the memory-bound lever of the
+    paper's large-mini-batch regime (§2).  Numerically equivalent to
+    ``sync`` with full state: the same mean reaches the same elementwise
+    update, only the ownership of the state is partitioned."""
+
+    def init(params, comm):
+        return {}
+
+    def init_opt(params, opt: Optimizer, comm: Comm):
+        # optimizer state over THIS worker's shard buckets: 1/W of the
+        # dense footprint per worker (tested in tests/test_zero1.py)
+        fab = Fabric(comm, bucket_bytes)
+        return opt.init(fab.shard_params(params))
+
+    def update(params, grads, opt_state, cstate, t, opt: Optimizer,
+               comm: Comm):
+        fab = Fabric(comm, bucket_bytes)
+        play = fab.partitioned_layout(params)
+        g_shards, m = fab.exchange_partitioned(grads, play)
+        p_shards = fab.shard_params(params, play)
+        p_shards, opt_state = opt.update(g_shards, opt_state, p_shards, t)
+        params = fab.unpartition(p_shards, play)
+        return params, opt_state, cstate, m
+
+    return Strategy("sync_zero1", 1, True, init, update, init_opt)
+
+
+# ---------------------------------------------------------------------------
 # +. local SGD / model averaging (paper §2.2.3)
 # ---------------------------------------------------------------------------
 def local_sgd(sync_every: int = 8,
@@ -92,9 +155,7 @@ def local_sgd(sync_every: int = 8,
         fab = Fabric(comm, bucket_bytes)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do_avg = (t + 1) % sync_every == 0
-        avg = fab.all_mean(params)
-        params = jax.tree.map(
-            lambda a, p: jnp.where(do_avg, a, p), avg, params)
+        params = _gate(do_avg, fab.all_mean, params)
         m = fab.metrics(fab.flat_bytes(params), events=_events(do_avg))
         return params, opt_state, cstate, m
 
@@ -116,10 +177,10 @@ def sync_dgc(compressor: Compressor, momentum: float = 0.9,
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
         fab = Fabric(comm, bucket_bytes)
-        g, cstate["dgc"], m = fab.exchange_dgc(grads, cstate["dgc"],
-                                               compressor, momentum)
+        g, new_dgc, m = fab.exchange_dgc(grads, cstate["dgc"],
+                                         compressor, momentum)
         params, opt_state = opt.update(g, opt_state, params, t)
-        return params, opt_state, cstate, m
+        return params, opt_state, {"dgc": new_dgc}, m
 
     return Strategy("sync_dgc", 1, True, init, update)
 
@@ -148,20 +209,21 @@ def easgd(alpha: float = 0.1, sync_every: int = 4,
         fab = Fabric(comm, bucket_bytes)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do = (t + 1) % sync_every == 0
-        center = cstate["center"]
-        diff = jax.tree.map(lambda p, c: p.astype(jnp.float32) - c,
-                            params, center)
-        new_center = jax.tree.map(
-            lambda c, d: c + alpha * d, center, fab.all_mean(diff))
-        new_params = jax.tree.map(
-            lambda p, d: (p.astype(jnp.float32) - alpha * d).astype(p.dtype),
-            params, diff)
-        params = jax.tree.map(lambda n, p: jnp.where(do, n, p),
-                              new_params, params)
-        cstate = {"center": jax.tree.map(lambda n, c: jnp.where(do, n, c),
-                                         new_center, center)}
+
+        def attract(args):
+            p, c = args
+            diff = jax.tree.map(lambda p_, c_: p_.astype(jnp.float32) - c_,
+                                p, c)
+            new_c = jax.tree.map(lambda c_, d: c_ + alpha * d,
+                                 c, fab.all_mean(diff))
+            new_p = jax.tree.map(
+                lambda p_, d: (p_.astype(jnp.float32)
+                               - alpha * d).astype(p_.dtype), p, diff)
+            return new_p, new_c
+
+        params, center = _gate(do, attract, (params, cstate["center"]))
         m = fab.metrics(fab.flat_bytes(params), events=_events(do))
-        return params, opt_state, cstate, m
+        return params, opt_state, {"center": center}, m
 
     return Strategy("easgd", 2, True, init, update)
 
@@ -187,8 +249,9 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
         fab = Fabric(comm, bucket_bytes)
+        new_c = dict(cstate)
         if compressor:
-            grads, cstate["residual"], nbytes = fab.compress(
+            grads, new_c["residual"], nbytes = fab.compress(
                 grads, cstate["residual"], compressor)
         else:
             nbytes = fab.flat_bytes(grads)
@@ -202,10 +265,10 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
             lambda g, o: (g.astype(jnp.float32) + stale_scale * o) / w,
             grads, others_old)
         params, opt_state = opt.update(g_eff, opt_state, params, t)
-        cstate["buf"] = jax.tree.map(
+        new_c["buf"] = jax.tree.map(
             lambda b, g: b.at[slot].set(g.astype(jnp.float32)),
             cstate["buf"], grads)
-        return params, opt_state, cstate, fab.metrics(nbytes)
+        return params, opt_state, new_c, fab.metrics(nbytes)
 
     return Strategy("ssp", 2, True, init, update)
 
@@ -229,8 +292,9 @@ def downpour(push_every: int = 4,
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
         fab = Fabric(comm, bucket_bytes)
+        new_c = dict(cstate)
         if compressor:
-            grads, cstate["residual"], nbytes = fab.compress(
+            grads, new_c["residual"], nbytes = fab.compress(
                 grads, cstate["residual"], compressor)
         else:
             nbytes = fab.flat_bytes(grads)
@@ -250,10 +314,15 @@ def downpour(push_every: int = 4,
         g_eff = jax.tree.map(
             lambda g, r: (g.astype(jnp.float32) + r) / w, grads, recv)
         params, opt_state = opt.update(g_eff, opt_state, params, t)
-        cstate["acc"] = jax.tree.map(
+        new_c["acc"] = jax.tree.map(
             lambda a: jnp.where(bcast(push, a), 0.0, a), acc_plus)
-        ev = jnp.mean(push.astype(jnp.float32))
-        return params, opt_state, cstate, fab.metrics(nbytes, events=ev)
+        # fleet-wide push fraction (a bare jnp.mean of a ShardComm flag is
+        # that shard's 0/1 indicator): the staggered schedule is
+        # deterministic in t, so every realization computes the same
+        # number locally — no collective spent on a metric.
+        sched = (t + jnp.arange(comm.size)) % push_every == 0
+        ev = jnp.mean(sched.astype(jnp.float32))
+        return params, opt_state, new_c, fab.metrics(nbytes, events=ev)
 
     return Strategy("downpour", 3, True, init, update)
 
@@ -276,19 +345,23 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
         fab = Fabric(comm, bucket_bytes)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do_mix = (t + 1) % mix_every == 0
-        left = fab.ppermute(params, shift=1)
-        if symmetric:
-            right = fab.ppermute(params, shift=-1)
-            mixed = jax.tree.map(
-                lambda p, l, r: (p.astype(jnp.float32) + l.astype(jnp.float32)
-                                 + r.astype(jnp.float32)) / 3.0,
-                params, left, right)
-        else:
-            mixed = jax.tree.map(
-                lambda p, l: (p.astype(jnp.float32) + l.astype(jnp.float32)) / 2.0,
-                params, left)
-        params = jax.tree.map(
-            lambda m, p: jnp.where(do_mix, m.astype(p.dtype), p), mixed, params)
+
+        def mix(p):
+            left = fab.ppermute(p, shift=1)
+            if symmetric:
+                right = fab.ppermute(p, shift=-1)
+                mixed = jax.tree.map(
+                    lambda p_, l, r: (p_.astype(jnp.float32)
+                                      + l.astype(jnp.float32)
+                                      + r.astype(jnp.float32)) / 3.0,
+                    p, left, right)
+            else:
+                mixed = jax.tree.map(
+                    lambda p_, l: (p_.astype(jnp.float32)
+                                   + l.astype(jnp.float32)) / 2.0, p, left)
+            return jax.tree.map(lambda m_, p_: m_.astype(p_.dtype), mixed, p)
+
+        params = _gate(do_mix, mix, params)
         ev = _events(do_mix) * (2.0 if symmetric else 1.0)
         m = fab.metrics(fab.flat_bytes(params), events=ev)
         return params, opt_state, cstate, m
@@ -310,15 +383,15 @@ def hierarchical(inner: Strategy, outer: Strategy) -> Strategy:
                 "outer": outer.init(params, comm.outer)}
 
     def update(params, grads, opt_state, cstate, t, opt, comm: HierComm):
-        params, opt_state, cstate["inner"], m1 = inner.update(
+        params, opt_state, c_in, m1 = inner.update(
             params, grads, opt_state, cstate["inner"], t, opt, comm.inner)
         noop = Optimizer(lambda p: {},
                          lambda g, s, p, tt: (p, s))
         zero_g = jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), grads)
-        params, _, cstate["outer"], m2 = outer.update(
+        params, _, c_out, m2 = outer.update(
             params, zero_g, {}, cstate["outer"], t, noop, comm.outer)
         m = {k: m1[k] + m2[k] for k in m1}
-        return params, opt_state, cstate, m
+        return params, opt_state, {"inner": c_in, "outer": c_out}, m
 
     return Strategy(f"hier({inner.name}x{outer.name})",
                     4 if not outer.complete else inner.spectrum_point,
@@ -327,6 +400,7 @@ def hierarchical(inner: Strategy, outer: Strategy) -> Strategy:
 
 REGISTRY = {
     "sync": sync,
+    "sync_zero1": sync_zero1,
     "sync_dgc": sync_dgc,
     "local_sgd": local_sgd,
     "easgd": easgd,

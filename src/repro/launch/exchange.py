@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=512"  # noqa: E501
-
 """Cross-pod gradient exchange with the paper's §2.2.4 compression — the
 loosely-coupled-tier program of the hierarchical deployment (DESIGN.md §2).
 
@@ -19,19 +16,30 @@ structure is also how multi-pod deployments actually launch.)
     PYTHONPATH=src python -m repro.launch.exchange --arch gemma3-1b
 """
 
-import argparse  # noqa: E402
+import argparse
+import os
 
-import jax  # noqa: E402
-import jax.numpy as jnp  # noqa: E402
-from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core import jax_compat as compat  # noqa: E402
-from repro.core.comm import ShardComm  # noqa: E402
-from repro.core.compression import get_compressor  # noqa: E402
-from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric  # noqa: E402
-from repro.launch.mesh import ICI_BW, make_production_mesh  # noqa: E402
-from repro.launch.specs import model_sds, param_shardings_sds  # noqa: E402
-from repro.roofline.analysis import parse_collectives  # noqa: E402
+from repro.core import jax_compat as compat
+from repro.core.comm import ShardComm
+from repro.core.compression import get_compressor
+from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
+from repro.launch.mesh import ICI_BW, make_production_mesh
+from repro.launch.specs import model_sds, param_shardings_sds
+from repro.roofline.analysis import parse_collectives
+
+
+def force_host_devices(n: int = 512):
+    """Give the CLI enough forced host devices for the multi-pod mesh.
+
+    Called from ``main()`` ONLY (before the first jax computation touches
+    the backend) — an import-time mutation of ``XLA_FLAGS`` used to leak
+    512 host devices into every test or tool importing ``build_exchange``."""
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={n}")
 
 
 def build_exchange(compressor, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
@@ -82,6 +90,7 @@ def lower_exchange(arch: str, compressor_name: str,
 
 
 def main():
+    force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--bucket-mib", type=float, default=4.0)

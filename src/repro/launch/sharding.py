@@ -183,6 +183,20 @@ def param_specs(params, stacked_marker="stack", mode: str = "tp"):
     return build(params)
 
 
+def zero1_state_shardings(opt_state_template, mesh, axis: str = "pod"):
+    """NamedShardings for ZeRO-1 optimizer state (train/loop.py::
+    zero1_opt_template): every leaf is a padded flat f32 bucket whose
+    length is a multiple of the ``axis`` size by construction, partitioned
+    over that data-parallel axis so each device holds its 1/W shard."""
+    names = set(mesh.axis_names)
+
+    def to_sh(leaf):
+        spec = P(axis) if axis in names and getattr(leaf, "ndim", 1) else P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(to_sh, opt_state_template)
+
+
 def param_shardings(params, mesh):
     names = set(mesh.axis_names)
 

@@ -20,7 +20,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
-from repro.optim.optimizers import adam
+from repro.optim.optimizers import adam, state_template
 from repro.train.loop import make_sharded_train_step
 
 
@@ -183,10 +183,11 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
 # step builders — each returns (step_fn, arg_sds (tuple), arg_shardings, donate)
 # ---------------------------------------------------------------------------
 def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                     pod_compressor=None):
+                     pod_compressor=None, partition_grads: bool = False):
     opt = adam(3e-4)
     step_fn = make_sharded_train_step(cfg, opt, remat=True,
-                                      pod_compressor=pod_compressor)
+                                      pod_compressor=pod_compressor,
+                                      partition_grads=partition_grads)
 
     params_sds = model_sds(cfg)
     comm_sds, comm_sh = {}, {}
@@ -195,22 +196,42 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
             lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.float32), params_sds)}
         comm_sh = {"residual": param_shardings_sds(
             comm_sds["residual"], mesh, cfg.sharding_mode)}
+    if partition_grads:  # ZeRO-1: flat shard-bucket state over "pod"
+        from repro.launch.sharding import zero1_state_shardings
+        from repro.train.loop import zero1_opt_template
+        npods = dict(mesh.shape).get("pod", 1)
+        opt_sds = zero1_opt_template(params_sds, opt, npods)
+        opt_sh = zero1_state_shardings(opt_sds, mesh)
+    else:
+        opt_sds = state_template(opt, params_sds)
+        opt_sh = param_shardings_sds(opt_sds, mesh, cfg.sharding_mode)
     state_sds = {
         "params": params_sds,
-        "opt_state": jax.eval_shape(opt.init, params_sds),
+        "opt_state": opt_sds,
         "comm_state": comm_sds,
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
     psh = param_shardings_sds(params_sds, mesh, cfg.sharding_mode)
     state_sh = {
         "params": psh,
-        "opt_state": param_shardings_sds(state_sds["opt_state"], mesh,
-                                         cfg.sharding_mode),
+        "opt_state": opt_sh,
         "comm_state": comm_sh,
         "step": NamedSharding(mesh, P()),
     }
     batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
     return step_fn, (state_sds, batch_sds), (state_sh, batch_sh), (0,)
+
+
+def build_step(cfg: ModelConfig, shape_name: str, mesh, pod_compressor=None,
+               partition_grads: bool = False):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return build_train_step(cfg, shape, mesh,
+                                pod_compressor=pod_compressor,
+                                partition_grads=partition_grads)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh)
+    return build_serve_step(cfg, shape, mesh)
 
 
 def build_prefill_step(cfg: ModelConfig, shape: ShapeSpec, mesh):
@@ -268,11 +289,3 @@ def build_serve_step(cfg: ModelConfig, shape: ShapeSpec, mesh):
     return step_fn, tuple(args_sds), tuple(args_sh), (1,)
 
 
-def build_step(cfg: ModelConfig, shape_name: str, mesh, pod_compressor=None):
-    shape = SHAPES[shape_name]
-    if shape.kind == "train":
-        return build_train_step(cfg, shape, mesh,
-                                pod_compressor=pod_compressor)
-    if shape.kind == "prefill":
-        return build_prefill_step(cfg, shape, mesh)
-    return build_serve_step(cfg, shape, mesh)

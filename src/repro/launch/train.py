@@ -38,7 +38,8 @@ def build_argparser():
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--strategy", default="sync",
-                    choices=["sync", "local_sgd", "ssp", "downpour", "gossip"])
+                    choices=["sync", "sync_zero1", "local_sgd", "ssp",
+                             "downpour", "gossip"])
     ap.add_argument("--compressor", default="none",
                     choices=["none", "onebit", "int8", "topk"])
     ap.add_argument("--workers", type=int, default=4)

@@ -3,6 +3,17 @@
 SGD / momentum / Adam, plus the staleness-aware variant the paper's §3
 discussion calls for: delay-compensated SGD (Zheng et al., cited as [41]),
 which first-order-corrects a stale gradient toward the current weights.
+
+Shard-aware by construction (ZeRO-1, core/strategies.py::sync_zero1):
+every ``init``/``update`` here is a pure elementwise ``jax.tree.map``, so
+the same optimizer runs unchanged on the fabric's flat f32 *shard buckets*
+(a list of 1/W chunks) — state built from shards IS the partitioned
+optimizer state, at 1/W of the dense per-worker footprint.  ``t`` (Adam
+bias correction) and the learning-rate schedule are replicated scalars, so
+shard updates agree exactly with the dense update on the same elements.
+``state_floats`` on each Optimizer records how many f32 state values it
+keeps per parameter (roofline memory accounting), and ``state_template``
+builds an allocation-free state skeleton for checkpoint re-sharding.
 """
 
 from __future__ import annotations
@@ -42,6 +53,17 @@ def warmup_cosine(lr, warmup, total_steps, final_frac=0.1):
 class Optimizer:
     init: Callable  # params -> opt_state
     update: Callable  # (grads, opt_state, params, t) -> (new_params, opt_state)
+    state_floats: int = 0  # f32 state values kept per parameter element
+
+
+def state_template(opt: Optimizer, params):
+    """Shape/dtype skeleton of ``opt.init(params)`` with NO allocation.
+
+    Works on ShapeDtypeStruct trees as well as real arrays — builds the
+    dry-run state specs (launch/specs.py) and the global ZeRO-1
+    shard-state template (train/loop.py::zero1_opt_template) without
+    materializing a dense state."""
+    return jax.eval_shape(opt.init, params)
 
 
 def _as_sched(lr):
@@ -61,7 +83,7 @@ def sgd(lr, weight_decay: float = 0.0) -> Optimizer:
             params, grads)
         return new, state
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, state_floats=0)
 
 
 def momentum(lr, beta: float = 0.9, nesterov: bool = False,
@@ -85,7 +107,7 @@ def momentum(lr, beta: float = 0.9, nesterov: bool = False,
             params, upd)
         return new, {"m": m}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, state_floats=1)
 
 
 def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
@@ -111,7 +133,7 @@ def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
             params, mh, vh)
         return new, {"m": m, "v": v}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, state_floats=2)
 
 
 def delay_compensated_sgd(lr, lam: float = 0.04) -> Optimizer:
@@ -138,4 +160,4 @@ def delay_compensated_sgd(lr, lam: float = 0.04) -> Optimizer:
         new_bak = jax.tree.map(lambda p: p.astype(jnp.float32), new)
         return new, {"w_bak": new_bak}
 
-    return Optimizer(init, update)
+    return Optimizer(init, update, state_floats=1)

@@ -100,6 +100,31 @@ def parse_collectives(hlo_text: str, loop_trip_counts=None) -> dict:
     return {"bytes": out, "counts": counts}
 
 
+def exchange_wire_bytes(flat_bytes: float, w: int,
+                        partitioned: bool = False) -> float:
+    """Ring bytes per worker to exchange one flat f32 buffer of
+    ``flat_bytes`` across ``w`` workers.
+
+    ``partitioned`` documents call-site intent only: a dense all-reduce
+    (2·(W−1)/W·N) and the ZeRO-1 reduce-scatter + all-gather
+    ((W−1)/W·N each) move the SAME bytes — partitioning the optimizer
+    state costs no extra wire (core/fabric.py::exchange_partitioned)."""
+    return 2.0 * (w - 1) / w * float(flat_bytes)
+
+
+def opt_state_bytes(n_params: int, state_floats: int, w: int = 1,
+                    partitioned: bool = False) -> float:
+    """Per-worker optimizer-state footprint in bytes.
+
+    Dense data parallelism replicates the full f32 state on every worker;
+    ZeRO-1 (``sync_zero1`` / ``partition_grads``) partitions it so each
+    worker holds 1/W — the redundancy the paper's memory-bound
+    large-mini-batch regime (§2) pays for nothing.  ``state_floats`` is
+    ``Optimizer.state_floats`` (0 sgd, 1 momentum, 2 adam)."""
+    total = 4.0 * state_floats * n_params
+    return total / w if partitioned else total
+
+
 def collective_count(hlo_text: str, loop_trip_counts=None) -> int:
     """Total cross-worker collective ops in an optimized HLO module.
 

@@ -26,6 +26,7 @@ class Request:
     max_new_tokens: int
     generated: list = field(default_factory=list)
     done: bool = False
+    truncated: bool = False  # prompt tail-clipped to the engine's max_seq
 
 
 class DecodeEngine:
@@ -51,6 +52,18 @@ class DecodeEngine:
                 p, cfg, token=tok, pos=pos, cache=cache, memory=self.memory))
 
     def submit(self, req: Request):
+        """Cache positions run 0..max_seq-1; an over-long prompt would keep
+        a slot in the prompt phase past the decode-phase termination check
+        and write past the cache.  Keep the TAIL (the context that matters
+        for continuation), leaving room for ≥ 1 generated token — recorded
+        on the request via ``truncated=True``."""
+        # max(1, ·): at max_seq == 1 a -0 slice would keep the WHOLE
+        # prompt; keep one token and let the cache-full check finish the
+        # slot after its single generated token
+        limit = max(1, self.max_seq - 1)
+        if len(req.prompt) > limit:
+            req.prompt = np.asarray(req.prompt[-limit:])
+            req.truncated = True
         self.queue.append(req)
 
     def _reset_slot(self, i: int):
@@ -97,9 +110,12 @@ class DecodeEngine:
             else:
                 req.generated.append(int(argmax[i]))
                 self._next_tok[i] = argmax[i]
-            if self.phase[i] == "decode" and (
-                    len(req.generated) >= req.max_new_tokens
-                    or self.pos[i] >= self.max_seq):
+            # Termination: decode slots finish at max_new_tokens; ANY slot
+            # (prompt phase included — belt over the submit-time truncation)
+            # finishes when the cache is full, so pos never passes max_seq.
+            if (self.phase[i] == "decode"
+                    and len(req.generated) >= req.max_new_tokens) \
+                    or self.pos[i] >= self.max_seq:
                 req.done = True
                 self.finished.append(req)
                 self.slot[i] = None

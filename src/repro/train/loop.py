@@ -24,18 +24,24 @@ import jax.numpy as jnp
 
 from repro.core import jax_compat as compat
 from repro.core.comm import Comm, LocalComm, ShardComm
-from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
+from repro.core.fabric import (BucketLayout, DEFAULT_BUCKET_BYTES, Fabric,
+                               PartitionedLayout)
 from repro.core.strategies import Strategy
 from repro.models import transformer as T
-from repro.optim.optimizers import Optimizer
+from repro.optim.optimizers import Optimizer, state_template
 from repro.train.losses import lm_loss
 
 
 def init_train_state(params, optimizer: Optimizer, strategy: Strategy,
                      comm: Comm):
+    # strategies that own the optimizer-state layout (ZeRO-1 shard buckets)
+    # build it themselves; everyone else gets the dense param-shaped state
+    init_opt = getattr(strategy, "init_opt", None)
+    opt_state = (init_opt(params, optimizer, comm) if init_opt is not None
+                 else optimizer.init(params))
     return {
         "params": params,
-        "opt_state": optimizer.init(params),
+        "opt_state": opt_state,
         "comm_state": strategy.init(params, comm),
         "step": jnp.zeros((), jnp.int32),
     }
@@ -97,11 +103,29 @@ def make_loss_fn(cfg, remat: bool = True):
     return loss_fn
 
 
+def zero1_opt_template(params, optimizer: Optimizer, n_parts: int,
+                       bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """GLOBAL optimizer state for the partitioned production path: one
+    padded flat f32 bucket per state leaf, to be sharded ``P("pod")`` over
+    the data-parallel axis (per-device footprint 1/W).  Accepts arrays or
+    ShapeDtypeStructs; returns the same flavour."""
+    play = PartitionedLayout.build(
+        BucketLayout.build(params, bucket_bytes, lead_axes=0), n_parts)
+    sds = [jax.ShapeDtypeStruct((p,), jnp.float32)
+           for p in play.padded_sizes]
+    template = state_template(optimizer, sds)
+    if all(isinstance(x, jax.ShapeDtypeStruct)
+           for x in jax.tree.leaves(params)):
+        return template
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+
+
 def make_sharded_train_step(cfg, optimizer: Optimizer,
                             strategy: Optional[Strategy] = None,
                             comm: Optional[Comm] = None,
                             remat: bool = True,
                             pod_compressor=None,
+                            partition_grads: bool = False,
                             bucket_bytes: int = DEFAULT_BUCKET_BYTES):
     """Global-model train step.  With ``strategy=None`` this is pure
     synchronous data parallelism (gradients all-reduced by XLA across the
@@ -117,9 +141,21 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
     flattened into flat f32 buckets, 1-bit/int8/top-k encoded with error
     feedback, and ONE packed byte buffer per bucket is all-gathered over
     "pod" — at most n_buckets collectives in the lowered HLO where the old
-    per-leaf path emitted one (or more) per parameter."""
+    per-leaf path emitted one (or more) per parameter.
+
+    ``partition_grads`` (ZeRO-1): gradients are reduce-SCATTERED over the
+    "pod" axis instead of all-reduced; each pod updates its 1/W parameter
+    shard against 1/W of the optimizer state (``state["opt_state"]`` must
+    be the flat shard buckets from ``zero1_opt_template``, sharded
+    ``P("pod")``) and the updated shards are all-gathered back.  Same wire
+    bytes as the all-reduce, O(W) less optimizer-state memory per device.
+    Mutually exclusive with ``pod_compressor`` and ``strategy``."""
 
     loss_fn = make_loss_fn(cfg, remat=remat)
+    if partition_grads and (pod_compressor is not None
+                            or strategy is not None):
+        raise ValueError("partition_grads composes with the plain sync "
+                         "path only (no pod_compressor / strategy)")
 
     def sync_grads(params, batch):
         return jax.value_and_grad(loss_fn)(params, batch)
@@ -145,7 +181,42 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
             out_specs=(P(), rep, rep_r), check_vma=False,
         )(params, batch, residual)
 
+    def zero1_step_body(params, batch, opt_state, t):
+        """shard_map body over "pod": grads → reduce-scatter → shard update
+        → all-gather, one RS + one AG per bucket, NO full all-reduce of
+        gradients (the loss mean is the only scalar psum)."""
+        from jax.sharding import PartitionSpec as P
+
+        mesh = compat.get_abstract_mesh()
+        npods = dict(mesh.shape).get("pod", 1)
+
+        def per_pod(params, batch, opt_state, t):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            fab = Fabric(ShardComm("pod", npods), bucket_bytes)
+            play = fab.partitioned_layout(params)
+            g_shards, _ = fab.exchange_partitioned(grads, play)
+            p_shards = fab.shard_params(params, play)
+            p_shards, opt_state = optimizer.update(g_shards, opt_state,
+                                                   p_shards, t)
+            params = fab.unpartition(p_shards, play)
+            return jax.lax.pmean(loss, "pod"), params, opt_state
+
+        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        rep = jax.tree.map(lambda _: P(), params)
+        shard_specs = jax.tree.map(lambda _: P("pod"), opt_state)
+        return compat.shard_map(
+            per_pod, mesh=mesh, axis_names={"pod"},
+            in_specs=(rep, batch_specs, shard_specs, P()),
+            out_specs=(P(), rep, shard_specs), check_vma=False,
+        )(params, batch, opt_state, t)
+
     def step(state, batch):
+        if partition_grads:
+            loss, params, opt_state = zero1_step_body(
+                state["params"], batch, state["opt_state"], state["step"])
+            return ({"params": params, "opt_state": opt_state,
+                     "comm_state": state["comm_state"],
+                     "step": state["step"] + 1}, loss)
         if pod_compressor is not None:
             loss, grads, new_res = pod_fabric_grads(
                 state["params"], batch, state["comm_state"]["residual"])

@@ -286,3 +286,60 @@ def test_sync_dgc_converges(problem):
     _, m, err = _run(ST.sync_dgc(topk), problem, steps=200)
     assert err < 5e-2
     assert float(m["wire_bytes"]) < W * DIM * 4
+
+
+# ---------------------------------------------------------------------------
+# regression: update() must not alias/mutate the caller's comm_state
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_strat", [
+    lambda: ST.sync_dgc(get_compressor("topk", ratio=0.25, block=16)),
+    lambda: ST.ssp(staleness=3, compressor=get_compressor("int8", block=16)),
+    lambda: ST.downpour(push_every=4,
+                        compressor=get_compressor("int8", block=16)),
+    lambda: ST.hierarchical(ST.sync(), ST.gossip(mix_every=2)),
+], ids=["sync_dgc", "ssp", "downpour", "hierarchical"])
+def test_update_does_not_mutate_comm_state(make_strat, problem):
+    """Stepping twice from the SAME saved state must give identical
+    results: strategies used to write into the caller's cstate dict, so a
+    resume/re-step from a kept reference silently continued from t+1."""
+    Xs, Ys, w_true, loss_fn = problem
+    strat = make_strat()
+    if strat.name.startswith("hier"):
+        comm = LocalHierComm(2, 2)
+        params = {"w": jnp.zeros((2, 2, DIM))}
+        grads = {"w": jnp.ones((2, 2, DIM))}
+    else:
+        comm = LocalComm(W)
+        params = {"w": jnp.zeros((W, DIM))}
+        grads = {"w": jnp.ones((W, DIM))}
+    opt = sgd(0.05)
+    opt_state = opt.init(params)
+    cstate = strat.init(params, comm)
+    saved_leaves = jax.tree.leaves(cstate)
+    t = jnp.zeros((), jnp.int32)
+    # two UNJITTED updates from the same python dict: before the fix the
+    # first call rebound cstate["..."] in place and the second diverged
+    out1 = strat.update(params, grads, opt_state, cstate, t, opt, comm)
+    out2 = strat.update(params, grads, opt_state, cstate, t, opt, comm)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        out1[0], out2[0])
+    # the caller's dict still holds the exact original leaves
+    for a, b in zip(saved_leaves, jax.tree.leaves(cstate)):
+        assert a is b
+
+
+def test_downpour_events_is_fleet_fraction(problem):
+    """comm_events must be the fleet-wide push fraction (1/push_every with
+    staggered offsets), not a per-shard 0/1 indicator."""
+    strat = ST.downpour(push_every=4)
+    comm = LocalComm(W)
+    params = {"w": jnp.zeros((W, DIM))}
+    grads = {"w": jnp.ones((W, DIM))}
+    opt = sgd(0.05)
+    cstate = strat.init(params, comm)
+    for t in range(4):
+        *_, m = strat.update(params, grads, opt.init(params), cstate,
+                             jnp.asarray(t, jnp.int32), opt, comm)
+        assert float(m["comm_events"]) == pytest.approx(0.25)

@@ -112,6 +112,27 @@ def test_decode_engine_batched():
     assert all(len(r.generated) == 4 for r in done)
 
 
+def test_engine_bounds_overlong_prompt():
+    """A prompt longer than max_seq must not write past the cache: the
+    tail is kept at submit and any slot terminates when the cache fills."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    max_seq = 16
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_seq=max_seq)
+    long_prompt = (np.arange(40) % cfg.vocab_size).astype(np.int32)
+    eng.submit(Request(rid=0, prompt=long_prompt, max_new_tokens=8))
+    eng.submit(Request(rid=1, prompt=np.array([1, 2, 3], np.int32),
+                       max_new_tokens=4))
+    done = eng.run()
+    assert len(done) == 2
+    assert (eng.pos <= max_seq).all()  # never past the cache
+    r0 = next(r for r in done if r.rid == 0)
+    assert np.array_equal(r0.prompt, long_prompt[-(max_seq - 1):])
+    assert len(r0.generated) >= 1  # produced something, then hit the edge
+    r1 = next(r for r in done if r.rid == 1)
+    assert len(r1.generated) == 4  # short request unaffected
+
+
 def test_engine_matches_single_sequence():
     """Batched engine output for one request == reference generation."""
     cfg = _tiny_cfg()
