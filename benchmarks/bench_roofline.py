@@ -162,9 +162,99 @@ def check_zero1():
          f"wire_parity={rows['wire_zero1'] == rows['wire_dense']}")
 
 
+_PRECISION_CHECK = """
+    import json, re
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import strategies as ST
+    from repro.core.comm import ShardComm
+    from repro.core.fabric import BucketLayout, Fabric
+    from repro.core.jax_compat import make_mesh, set_mesh, shard_map
+    from repro.core.precision import get_policy
+    from repro.optim import adam
+    from repro.roofline.analysis import parse_collectives
+    from repro.train.loop import zero1_opt_template
+
+    PODS, LAYERS = 4, 8
+    mesh = make_mesh((PODS,), ("pod",))
+    bucket_bytes = 4 * 40_000
+
+    def lower(policy_name):
+        pol = get_policy(policy_name)
+        pdt = pol.param_dt
+        params = {f"l{i}": {"w": jax.ShapeDtypeStruct((256, 64), pdt),
+                            "b": jax.ShapeDtypeStruct((64,), pdt)}
+                  for i in range(LAYERS)}
+        opt = adam(1e-3)
+        opt_state = zero1_opt_template(params, opt, PODS, bucket_bytes,
+                                       policy=None if pol.is_noop else pol)
+        strat = ST.sync_zero1(bucket_bytes=bucket_bytes, policy=pol)
+        comm = ShardComm("pod", PODS)
+
+        def body(p, g, s):
+            p, s, _, _ = strat.update(p, g, s, {}, jnp.zeros((), jnp.int32),
+                                      adam(1e-3), comm)
+            return p, s
+
+        rep = jax.tree.map(lambda _: P(), params)
+        ssp = jax.tree.map(lambda _: P("pod"), opt_state)
+        fn = shard_map(body, mesh=mesh, axis_names={"pod"},
+                       in_specs=(rep, rep, ssp), out_specs=(rep, ssp),
+                       check_vma=False)
+        with set_mesh(mesh):
+            c = jax.jit(fn).lower(params, params, opt_state).compile()
+        txt = c.as_text()
+        pc = parse_collectives(txt)
+        f32_rs = sum(1 for l in txt.splitlines()
+                     if "reduce-scatter(" in l
+                     and re.search(r"=\\s*f32\\[", l))
+        fab = Fabric(comm, bucket_bytes, wire_dtype=pol.wire_dt)
+        lay = BucketLayout.build(params, bucket_bytes, lead_axes=0)
+        return {"hlo_bytes": pc["bytes"], "counts": pc["counts"],
+                "f32_reduce_scatters": f32_rs,
+                "fabric_wire_bytes": fab.flat_bytes(lay)}
+
+    rows = {"f32": lower("f32"), "bf16": lower("bf16")}
+    print("PRECISION " + json.dumps(rows))
+"""
+
+
+def check_precision():
+    """Lower the ZeRO-1 exchange under the f32 and bf16 policies and emit
+    the wire-shrink evidence: the bf16 reduce-scatter/all-gather ship ~2x
+    fewer bytes and no f32 reduce-scatter survives in the HLO."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_PRECISION_CHECK)],
+        capture_output=True, text=True, env=env, timeout=560)
+    if out.returncode != 0:
+        emit("roofline/precision", 0.0, "error=" + out.stderr[-200:].replace(
+            "\n", " ").replace(",", ";"))
+        return
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("PRECISION ")][0]
+    rows = json.loads(line[len("PRECISION "):])
+    f32, bf16 = rows["f32"], rows["bf16"]
+    shrink = f32["fabric_wire_bytes"] / max(bf16["fabric_wire_bytes"], 1)
+    ok = (shrink > 1.99 and bf16["f32_reduce_scatters"] == 0
+          and bf16["counts"]["reduce-scatter"] == 0
+          and bf16["counts"]["all-to-all"] > 0)
+    emit("roofline/precision", shrink,
+         f"wire_shrink_x={shrink:.2f};ok={ok};"
+         f"f32_rs_in_bf16_hlo={bf16['f32_reduce_scatters']};"
+         f"bf16_rs={bf16['counts']['reduce-scatter']};"
+         f"bf16_a2a={bf16['counts']['all-to-all']};"
+         f"ag_bytes_f32={f32['hlo_bytes']['all-gather']};"
+         f"ag_bytes_bf16={bf16['hlo_bytes']['all-gather']}")
+
+
 def run():
     check_fusion()
     check_zero1()
+    check_precision()
     for fname, mesh in (("results_singlepod.json", "16x16"),
                         ("results_multipod.json", "2x16x16")):
         path = os.path.join(ROOT, fname)

@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpointer import (latest_step, read_meta,  # noqa: F401
-                                           reshard_bucket, restore_checkpoint,
+                                           read_precision, reshard_bucket,
+                                           restore_checkpoint,
                                            save_checkpoint)

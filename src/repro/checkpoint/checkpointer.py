@@ -18,6 +18,21 @@ Two guarantees added for the production path:
     with the template — reassemble chunks in rank order, drop the old
     padding, re-pad for the new worker count — so a run saved at W
     workers restores onto W' (the paper's "redistribute training").
+
+Precision (core/precision.py, DESIGN.md §4):
+
+  * **Master precision on disk** — low-precision float leaves (bf16/f16
+    working params) are WIDENED to f32 before they hit the ``.npz``;
+    the checkpoint always stores the master-fidelity values (and ``.npz``
+    has no portable encoding for ml_dtypes anyway).  The widening is
+    lossless, and f32 leaves are written byte-identically to before.
+  * **Casted restore** — a restored leaf whose dtype disagrees with the
+    template is cast to the template's dtype, so a run saved under the
+    f32 policy restores directly into bf16 working params (and vice
+    versa), across worker counts when combined with ``repartition``.
+  * **Policy record** — ``save_checkpoint(precision=policy.spec())``
+    stores the full PrecisionPolicy per step in meta.json;
+    ``read_precision(dir, step)`` returns it for the resuming run.
 """
 
 from __future__ import annotations
@@ -60,18 +75,30 @@ def _unflatten_into(template, flat: dict, prefix=""):
     return flat[prefix]
 
 
+def _widen_for_disk(arr: np.ndarray) -> np.ndarray:
+    """Low-precision floats → f32 (master precision on disk; lossless)."""
+    if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float16"):
+        return arr.astype(np.float32)
+    return arr
+
+
 def save_checkpoint(ckpt_dir: str, step: int, tree,
-                    partition: dict | None = None) -> str:
+                    partition: dict | None = None,
+                    precision: dict | None = None) -> str:
     """Atomically write ``tree`` as ``ckpt_<step>.npz`` + meta.json.
 
     ``partition``: optional ZeRO-1 partition spec (``PartitionedLayout
     .spec()``: {"n_parts", "bucket_sizes"}) describing the shard-bucket
     leaves of the saved opt state; recorded in meta.json so a later
-    restore can re-shard onto a different worker count."""
+    restore can re-shard onto a different worker count.
+
+    ``precision``: optional PrecisionPolicy spec (``policy.spec()``)
+    recorded per step in meta.json.  Low-precision float leaves are
+    widened to f32 on disk regardless (see module docstring)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     arrays = {}
     for path, leaf in _flatten(tree):
-        arrays[path] = np.asarray(jax.device_get(leaf))
+        arrays[path] = _widen_for_disk(np.asarray(jax.device_get(leaf)))
     fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
     tmp = fname + ".tmp"
     with open(tmp, "wb") as f:  # file handle: savez won't append a suffix
@@ -84,6 +111,8 @@ def save_checkpoint(ckpt_dir: str, step: int, tree,
     meta["latest"] = step
     if partition is not None:
         meta.setdefault("partitions", {})[str(step)] = partition
+    if precision is not None:
+        meta.setdefault("precision", {})[str(step)] = precision
     mpath = os.path.join(ckpt_dir, "meta.json")
     with open(mpath + ".tmp", "w") as f:
         json.dump(meta, f)
@@ -97,6 +126,11 @@ def read_meta(ckpt_dir: str) -> dict:
         return {}
     with open(mpath) as f:
         return json.load(f)
+
+
+def read_precision(ckpt_dir: str, step: int) -> dict | None:
+    """The PrecisionPolicy spec recorded for ``step`` (None if absent)."""
+    return read_meta(ckpt_dir).get("precision", {}).get(str(step))
 
 
 def latest_step(ckpt_dir: str):
@@ -183,6 +217,18 @@ def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None,
                     f"but template expects {sorted(templ_idx)} — bucket "
                     "layout (bucket_bytes) must match the save")
     tree = _unflatten_into(template, flat)
+
+    def cast_to_template(x, want):
+        # casted restore: disk carries master (f32) fidelity — a template
+        # asking for a narrower working dtype (bf16 params) gets the cast
+        wd = getattr(want, "dtype", None)
+        if wd is None:
+            return x
+        wd = np.dtype(jax.numpy.dtype(wd))
+        x = np.asarray(x)
+        return x.astype(wd) if x.dtype != wd else x
+
+    tree = jax.tree.map(cast_to_template, tree, template)
     if shardings is not None:
         tree = jax.tree.map(
             lambda x, s: jax.device_put(x, s), tree, shardings)

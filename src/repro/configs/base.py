@@ -82,6 +82,9 @@ class ModelConfig:
     modality: Optional[str] = None  # None | "audio" | "vision"
 
     # numerics ----------------------------------------------------------------
+    # validated at construction against the precision subsystem's allowed
+    # set (core/precision.py) so a bad dtype fails HERE, not deep inside
+    # model init where the offending config is long out of the traceback
     param_dtype: str = "float32"
     compute_dtype: str = "float32"
 
@@ -102,6 +105,16 @@ class ModelConfig:
     save_moe_a2a: bool = False
 
     # ------------------------------------------------------------------------
+    def __post_init__(self):
+        from repro.core.precision import ALLOWED_DTYPES
+        for f in ("param_dtype", "compute_dtype"):
+            v = getattr(self, f)
+            if v not in ALLOWED_DTYPES:
+                raise ValueError(
+                    f"{self.name}: {f}={v!r} is not a supported precision "
+                    f"dtype; choose one of {ALLOWED_DTYPES} "
+                    "(see core/precision.py)")
+
     @property
     def resolved_head_dim(self) -> int:
         return self.head_dim if self.head_dim is not None else self.d_model // self.num_heads
@@ -166,7 +179,7 @@ class ModelConfig:
 
     def with_sliding_window(self, window: int = 4096) -> "ModelConfig":
         """Sliding-window *variant* for long-context decode on full-attention
-        archs (see DESIGN.md §4 — explicitly flagged as a variant)."""
+        archs (see DESIGN.md §5 — explicitly flagged as a variant)."""
         return replace(self, sliding_window=window, global_every=None,
                        name=self.name + "-swa")
 

@@ -194,6 +194,24 @@ class ShardComm(Comm):
 
         return jax.tree.map(one, tree)
 
+    def gather_chunks(self, tree):
+        """The data movement of a reduce-scatter WITHOUT the reduction:
+        worker w receives every peer's chunk w of the last axis (which
+        must divide by W), stacked on a NEW leading axis (W, ..., C).
+        One all-to-all per leaf — identical ring bytes to
+        ``reduce_scatter`` — leaving the ACCUMULATION dtype to the
+        caller.  This is how the fabric realizes a narrow (bf16) wire
+        with f32 accumulation: the wire op carries only the narrow
+        chunks (core/fabric.py::exchange_partitioned)."""
+        def one(x):
+            c = x.shape[-1] // self.size
+            y = x.reshape(x.shape[:-1] + (self.size, c))
+            y = jnp.moveaxis(y, -2, 0)  # (W, ..., C): piece w -> worker w
+            return jax.lax.all_to_all(y, self.axis_name, split_axis=0,
+                                      concat_axis=0)
+
+        return jax.tree.map(one, tree)
+
     def shard_chunk(self, tree):
         """This shard's 1/W chunk of the last axis of a replicated tree."""
         i = jax.lax.axis_index(self.axis_name)

@@ -252,13 +252,17 @@ def _unpack(buf, specs):
     return out
 
 
-def wire_nbytes(compressor: Optional[Compressor], n: int) -> int:
+def wire_nbytes(compressor: Optional[Compressor], n: int,
+                wire_dtype=jnp.float32) -> int:
     """Exact packed-wire size (bytes) to ship ``n`` f32 elements once.
 
     Derived from the actual packing code via eval_shape, so it equals the
-    size of the uint8 buffer a ShardComm exchange really gathers."""
+    size of the uint8 buffer a ShardComm exchange really gathers.  An
+    uncompressed exchange ships raw ``wire_dtype`` buckets (2 bytes/elem
+    under the bf16 policy); compressors own their packed format and ignore
+    ``wire_dtype``."""
     if compressor is None or compressor.name == "none":
-        return 4 * n
+        return jnp.dtype(wire_dtype).itemsize * n
 
     def f(t):
         wire, _ = compressor.compress(t)
@@ -281,43 +285,118 @@ class Fabric:
     path).  Residual / DGC state stays param-shaped f32 trees, so existing
     checkpoint and sharding-spec machinery is untouched."""
 
-    def __init__(self, comm: Comm, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    def __init__(self, comm: Comm, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 wire_dtype=None):
         self.comm = comm
         self.bucket_bytes = bucket_bytes
+        # dtype of the UNCOMPRESSED wire (PrecisionPolicy.wire_dtype):
+        # buckets are rounded to it before every collective.  f32 (the
+        # default) leaves every path bit-for-bit unchanged.
+        self.wire_dtype = (jnp.dtype(wire_dtype) if wire_dtype is not None
+                           else jnp.dtype(jnp.float32))
+
+    def _wire_cast(self, buckets):
+        """Round flat f32 buckets to the wire dtype.  On the stacked
+        simulator the rounded values are upcast back to f32 so the axis
+        reduction accumulates in f32 (the reference semantics of a bf16
+        wire with f32 ring accumulation); a ShardComm ships the narrow
+        buffer itself and the TPU reduction accumulates on-chip."""
+        if self.wire_dtype == jnp.float32:
+            return buckets
+        narrowed = [b.astype(self.wire_dtype) for b in buckets]
+        if isinstance(self.comm, ShardComm):
+            return narrowed
+        return [b.astype(jnp.float32) for b in narrowed]
 
     def layout(self, tree) -> BucketLayout:
         return BucketLayout.build(tree, self.bucket_bytes,
                                   self.comm.lead_axes)
 
     # -- plain (uncompressed) fused collectives -----------------------------
+    @property
+    def _narrow_sharded(self) -> bool:
+        """Narrow wire on a per-shard realization: XLA convert-promotes a
+        bf16 all-reduce/reduce-scatter/all-gather back to an f32 wire, so
+        every narrow ShardComm op must be expressed in promotion-proof
+        form (all-to-all of narrow chunks + local f32 accumulate, and
+        bitcast-uint16 gathers/permutes)."""
+        return (self.wire_dtype.itemsize == 2
+                and isinstance(self.comm, ShardComm))
+
+    def _bitcast_u16(self, buckets):
+        return [lax.bitcast_convert_type(b.astype(self.wire_dtype),
+                                         jnp.uint16) for b in buckets]
+
+    def _reduce_narrow_sharded(self, buckets, mean: bool):
+        """All-reduce(-mean) semantics per flat bucket with a provably
+        narrow wire: pad to a multiple of W, ship the narrowed chunks with
+        ONE all-to-all (ring bytes of a reduce-scatter), accumulate the W
+        received chunks locally in f32, and all-gather the reduced shard's
+        bitcast-uint16 wire image back (ring bytes of an all-gather).
+        RS + AG move exactly the bytes of the all-reduce they replace."""
+        w = self.comm.size
+        out = []
+        for b in buckets:
+            n = b.shape[-1]
+            p = -(-n // w) * w
+            bb = b if n == p else jnp.pad(
+                b, [(0, 0)] * (b.ndim - 1) + [(0, p - n)])
+            (stacked,) = self.comm.gather_chunks(
+                [bb.astype(self.wire_dtype)])
+            red = jnp.sum(stacked.astype(jnp.float32), axis=0)
+            if mean:
+                red = red / w
+            (full,) = self.comm.all_gather(self._bitcast_u16([red]),
+                                           tiled=True)
+            full = lax.bitcast_convert_type(full, self.wire_dtype)
+            out.append(lax.slice_in_dim(full.astype(jnp.float32), 0, n,
+                                        axis=full.ndim - 1))
+        return out
+
     def all_mean(self, tree):
-        return self._collective(tree, self.comm.all_mean)
+        return self._reduce(tree, mean=True)
 
     def all_sum(self, tree):
-        return self._collective(tree, self.comm.all_sum)
+        return self._reduce(tree, mean=False)
 
-    def ppermute(self, tree, shift: int = 1):
-        return self._collective(tree,
-                                lambda b: self.comm.ppermute(b, shift))
-
-    def _collective(self, tree, op):
+    def _reduce(self, tree, mean: bool):
         lay = self.layout(tree)
         if lay.n_leaves == 0:
             return tree
-        return lay.debucketize(op(lay.bucketize(tree)))
+        gb = lay.bucketize(tree)
+        if self._narrow_sharded:
+            return lay.debucketize(self._reduce_narrow_sharded(gb, mean))
+        op = self.comm.all_mean if mean else self.comm.all_sum
+        return lay.debucketize(op(self._wire_cast(gb)))
+
+    def ppermute(self, tree, shift: int = 1):
+        lay = self.layout(tree)
+        if lay.n_leaves == 0:
+            return tree
+        gb = lay.bucketize(tree)
+        if self._narrow_sharded:  # pure data movement: permute the bytes
+            out = self.comm.ppermute(self._bitcast_u16(gb), shift)
+            out = [lax.bitcast_convert_type(b, self.wire_dtype)
+                   for b in out]
+            return lay.debucketize(out)
+        return lay.debucketize(self.comm.ppermute(self._wire_cast(gb),
+                                                  shift))
 
     # -- wire accounting ----------------------------------------------------
     def flat_bytes(self, tree_or_layout) -> float:
-        """Uncompressed bytes to ship the tree once (all replicas)."""
+        """Uncompressed wire-dtype bytes to ship the tree once (all
+        replicas) — halves under a bf16 wire."""
         lay = tree_or_layout if isinstance(tree_or_layout, BucketLayout) \
             else self.layout(tree_or_layout)
-        return float(4 * lay.total_elements * _prod(lay.lead_shape))
+        return float(self.wire_dtype.itemsize * lay.total_elements
+                     * _prod(lay.lead_shape))
 
     def wire_bytes(self, tree_or_layout, compressor=None) -> float:
         """Packed bytes to ship the tree once (all replicas)."""
         lay = tree_or_layout if isinstance(tree_or_layout, BucketLayout) \
             else self.layout(tree_or_layout)
-        per = sum(wire_nbytes(compressor, n) for n in lay.bucket_sizes)
+        per = sum(wire_nbytes(compressor, n, self.wire_dtype)
+                  for n in lay.bucket_sizes)
         return float(per * _prod(lay.lead_shape))
 
     def metrics(self, nbytes, events=1.0):
@@ -378,7 +457,10 @@ class Fabric:
         feedback.  Returns (mean_tree, new_residual_tree, metrics)."""
         lay = self.layout(grads)
         if compressor is None or compressor.name == "none":
-            out = self.comm.all_mean(lay.bucketize(grads))
+            gb = lay.bucketize(grads)
+            out = (self._reduce_narrow_sharded(gb, mean=True)
+                   if self._narrow_sharded
+                   else self.comm.all_mean(self._wire_cast(gb)))
             return (lay.debucketize(out), residual,
                     self.metrics(self.flat_bytes(lay), events))
         gb = lay.bucketize(grads)
@@ -448,13 +530,42 @@ class Fabric:
         dense all-reduce of ``exchange`` (2·N·(W−1)/W per worker)."""
         play = play or self.partitioned_layout(grads)
         gb = self._pad_buckets(play.layout.bucketize(grads), play)
-        shards = self.comm.reduce_scatter(gb, mean=True)
+        if self._narrow_sharded:
+            # narrow wire with f32 ring accumulation, HLO-provably: the
+            # reduction is decomposed into ONE all-to-all of the narrowed
+            # chunks per bucket (identical ring bytes to a reduce-scatter)
+            # plus a local f32 accumulate — a bf16 reduce-scatter would be
+            # silently convert-promoted back to an f32 wire by XLA.
+            narrowed = [b.astype(self.wire_dtype) for b in gb]
+            stacked = self.comm.gather_chunks(narrowed)  # (W, C) per bucket
+            shards = [jnp.sum(s.astype(jnp.float32), axis=0)
+                      / self.comm.size for s in stacked]
+        else:
+            # f32 wire (or the stacked simulator, whose _wire_cast already
+            # rounds to the wire dtype and upcasts so the axis reduction
+            # accumulates in f32 — same semantics as the a2a path)
+            shards = self.comm.reduce_scatter(self._wire_cast(gb), mean=True)
+            if self.wire_dtype != jnp.float32:
+                shards = [s.astype(jnp.float32) for s in shards]
         return shards, self.metrics(self.flat_bytes(play.layout), events)
 
     def unpartition(self, shards, play: PartitionedLayout):
         """All-gather updated shards back into the full tree — one tiled
-        all-gather per bucket, padding sliced away, leaf dtypes restored."""
-        full = self.comm.all_gather(shards, tiled=True)
+        all-gather per bucket (of ``wire_dtype`` buffers: the gathered
+        params are the wire-dtype image of the f32 master shards), padding
+        sliced away, leaf dtypes restored."""
+        shards = self._wire_cast(shards)
+        if self._narrow_sharded:
+            # pin the narrow wire THROUGH the gather: XLA convert-promotes
+            # a bf16 all-gather back to an f32 one, so gather the bitcast
+            # uint16 image instead — dtype-exact data movement, the same
+            # trick as the packed uint8 compressed wire
+            full = self.comm.all_gather(self._bitcast_u16(shards),
+                                        tiled=True)
+            full = [lax.bitcast_convert_type(b, self.wire_dtype)
+                    for b in full]
+        else:
+            full = self.comm.all_gather(shards, tiled=True)
         full = [lax.slice_in_dim(b, 0, n, axis=b.ndim - 1)
                 for b, n in zip(full, play.layout.bucket_sizes)]
         return play.layout.debucketize(full)

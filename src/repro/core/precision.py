@@ -1,0 +1,210 @@
+"""End-to-end mixed-precision policy (DESIGN.md §4).
+
+A ``PrecisionPolicy`` names the dtype of every float in the system:
+
+    param_dtype    the working model weights (what forward consumes and the
+                   fabric gathers/mixes on the wire)
+    compute_dtype  matmul/activation compute inside the models (loss,
+                   softmax and norm statistics ALWAYS accumulate in f32 —
+                   models/layers.py, models/ssm.py, train/losses.py)
+    wire_dtype     uncompressed exchange buffers on the Fabric
+                   (core/fabric.py buckets; 2 bytes/element under bf16 —
+                   composes with, never replaces, the 1bit/int8/topk
+                   compressors which own their packed wire format)
+    master_dtype   the optimizer's master copy of the weights.  When it is
+                   wider than ``param_dtype`` a persistent master tree is
+                   kept: in the train state for dense strategies, and as
+                   1/W flat shard buckets INSIDE the partitioned optimizer
+                   state for the ZeRO-1 paths (the master rides the shard,
+                   so its footprint is O(N/W) per worker).
+
+plus dynamic loss scaling: the loss is multiplied by ``scale`` before the
+backward pass, gradients are unscaled in f32, and a step whose gradients
+contain inf/nan is SKIPPED — params, optimizer state and comm state are
+left untouched and the scale is halved; after ``growth_interval``
+consecutive finite steps the scale doubles.
+
+The ``f32`` policy is a strict no-op: every cast is identity and the
+scaling machinery is disabled, so f32 training stays bitwise-identical to
+a policy-less run (tested in tests/test_precision.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+ALLOWED_DTYPES = ("float32", "bfloat16", "float16")
+
+
+def _check_dtype(name: str, value: str):
+    if value not in ALLOWED_DTYPES:
+        raise ValueError(
+            f"{name}={value!r} is not a supported precision dtype; "
+            f"choose one of {ALLOWED_DTYPES}")
+
+
+@dataclass(frozen=True)
+class PrecisionPolicy:
+    name: str = "f32"
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    wire_dtype: str = "float32"
+    master_dtype: str = "float32"
+    init_loss_scale: float = 1.0
+    dynamic_scale: bool = False
+    growth_interval: int = 200
+
+    def __post_init__(self):
+        for f in ("param_dtype", "compute_dtype", "wire_dtype",
+                  "master_dtype"):
+            _check_dtype(f, getattr(self, f))
+
+    # -- dtype accessors ----------------------------------------------------
+    @property
+    def param_dt(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def compute_dt(self):
+        return jnp.dtype(self.compute_dtype)
+
+    @property
+    def wire_dt(self):
+        return jnp.dtype(self.wire_dtype)
+
+    @property
+    def master_dt(self):
+        return jnp.dtype(self.master_dtype)
+
+    # -- behaviour flags ----------------------------------------------------
+    @property
+    def uses_scaling(self) -> bool:
+        return self.dynamic_scale or self.init_loss_scale != 1.0
+
+    @property
+    def keeps_master(self) -> bool:
+        """A persistent wider master copy of the params is required."""
+        return self.master_dt != self.param_dt
+
+    @property
+    def is_noop(self) -> bool:
+        """True when the policy changes nothing vs. policy-less f32."""
+        f32 = jnp.dtype(jnp.float32)
+        return (self.param_dt == f32 and self.compute_dt == f32
+                and self.wire_dt == f32 and self.master_dt == f32
+                and not self.uses_scaling)
+
+    # -- tree casts (float leaves only; identity when dtypes match) ---------
+    def cast_to_param(self, tree):
+        return cast_floats(tree, self.param_dt)
+
+    def cast_to_compute(self, tree):
+        return cast_floats(tree, self.compute_dt)
+
+    def cast_to_master(self, tree):
+        return cast_floats(tree, self.master_dt)
+
+    # -- serialization (checkpoint meta) ------------------------------------
+    def spec(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def policy_from_spec(spec: dict) -> PrecisionPolicy:
+    return PrecisionPolicy(**spec)
+
+
+def cast_floats(tree, dtype):
+    """Cast every floating leaf of ``tree`` to ``dtype`` (ints untouched)."""
+    dtype = jnp.dtype(dtype)
+
+    def one(x):
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating):
+            return jnp.asarray(x).astype(dtype)
+        return x
+
+    return jax.tree.map(one, tree)
+
+
+POLICIES = {
+    # pure f32: the bitwise-identical default
+    "f32": PrecisionPolicy("f32"),
+    # mixed bf16: bf16 weights/compute/wire, f32 master + dynamic scaling.
+    # The initial scale is a power of two so scaling never perturbs bf16
+    # mantissas — only guards true overflow.
+    "bf16": PrecisionPolicy(
+        "bf16", param_dtype="bfloat16", compute_dtype="bfloat16",
+        wire_dtype="bfloat16", master_dtype="float32",
+        init_loss_scale=float(2 ** 15), dynamic_scale=True),
+    # pure bf16: no master, no scaling — minimum memory, lowest fidelity
+    "bf16-pure": PrecisionPolicy(
+        "bf16-pure", param_dtype="bfloat16", compute_dtype="bfloat16",
+        wire_dtype="bfloat16", master_dtype="bfloat16"),
+}
+
+
+def get_policy(policy) -> PrecisionPolicy:
+    """None → f32; a name → registry lookup; a policy → itself."""
+    if policy is None:
+        return POLICIES["f32"]
+    if isinstance(policy, PrecisionPolicy):
+        return policy
+    if policy not in POLICIES:
+        raise KeyError(f"unknown precision policy {policy!r}; "
+                       f"have {sorted(POLICIES)}")
+    return POLICIES[policy]
+
+
+def apply_policy(cfg, policy):
+    """ModelConfig with the policy's param/compute dtypes applied."""
+    policy = get_policy(policy)
+    return dataclasses.replace(cfg, param_dtype=policy.param_dtype,
+                               compute_dtype=policy.compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# dynamic loss scaling
+# ---------------------------------------------------------------------------
+def init_scale_state(policy: PrecisionPolicy) -> dict:
+    """Loss-scale carry: {"scale", "good_steps"} (replicated scalars)."""
+    return {"scale": jnp.asarray(policy.init_loss_scale, jnp.float32),
+            "good_steps": jnp.zeros((), jnp.int32)}
+
+
+def unscale_grads(grads, scale):
+    """Gradients → f32, divided by the loss scale."""
+    inv = 1.0 / jnp.asarray(scale, jnp.float32)
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * inv, grads)
+
+
+def tree_finite(tree):
+    """Scalar bool: every element of every leaf is finite."""
+    leaves = [jnp.all(jnp.isfinite(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)
+
+
+def next_scale_state(policy: PrecisionPolicy, sstate: dict, finite) -> dict:
+    """Overflow → halve (never below 1) and reset the streak; a finite
+    step extends the streak and every ``growth_interval``-th doubles."""
+    scale, good = sstate["scale"], sstate["good_steps"]
+    finite = jnp.asarray(finite)
+    if not policy.dynamic_scale:  # static scale: still skip, never adapt
+        return {"scale": scale,
+                "good_steps": jnp.where(finite, good + 1, 0)}
+    grow = finite & (good + 1 >= policy.growth_interval)
+    new_scale = jnp.where(
+        finite,
+        jnp.where(grow, scale * 2.0, scale),
+        jnp.maximum(scale * 0.5, 1.0))
+    new_good = jnp.where(finite & ~grow, good + 1, 0)
+    return {"scale": new_scale, "good_steps": new_good}
+
+
+def select_tree(pred, on_true, on_false):
+    """Elementwise where over two same-structure trees (the skip-step)."""
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b),
+                        on_true, on_false)

@@ -40,6 +40,7 @@ from jax import lax
 from repro.core.comm import Comm, HierComm
 from repro.core.compression import Compressor, dgc_init, ef_init
 from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
+from repro.core.precision import PrecisionPolicy
 from repro.optim.optimizers import Optimizer
 
 
@@ -55,10 +56,20 @@ class Strategy:
     #                 opt_state; strategies that OWN the optimizer-state
     #                 layout (ZeRO-1 shard buckets) override the default
     #                 optimizer.init(params) in train/loop.init_train_state.
+    owns_master: bool = False  # the wider master copy of the params lives
+    #                 INSIDE this strategy's opt_state (ZeRO-1 shard
+    #                 buckets) — the train loop must NOT keep its own.
 
     # Contract: ``update`` must treat ``comm_state`` as immutable and
     # return a FRESH mapping — callers re-step from saved state (resume,
     # speculative steps), so writing into the argument would corrupt it.
+
+
+def _fab(comm: Comm, bucket_bytes: int,
+         policy: Optional[PrecisionPolicy]) -> Fabric:
+    """Fabric with the policy's wire dtype (f32 when no policy)."""
+    return Fabric(comm, bucket_bytes,
+                  wire_dtype=policy.wire_dt if policy is not None else None)
 
 
 def _events(flag):
@@ -88,12 +99,13 @@ def _zero_metrics():
 # 1. synchronous — large mini-batch all-reduce (bucket-fused)
 # ---------------------------------------------------------------------------
 def sync(compressor: Optional[Compressor] = None,
-         bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+         bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+         policy: Optional[PrecisionPolicy] = None) -> Strategy:
     def init(params, comm):
         return {"residual": ef_init(params)} if compressor else {}
 
     def update(params, grads, opt_state, cstate, t, opt: Optimizer, comm: Comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         g, new_res, m = fab.exchange(grads, cstate.get("residual"), compressor)
         if compressor:
             cstate = {"residual": new_res}
@@ -106,7 +118,8 @@ def sync(compressor: Optional[Compressor] = None,
 # ---------------------------------------------------------------------------
 # 1z. synchronous + partitioned optimizer state (ZeRO-1)
 # ---------------------------------------------------------------------------
-def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+               policy: Optional[PrecisionPolicy] = None) -> Strategy:
     """Spectrum point 1 with sharded-optimizer data parallelism (ZeRO-1,
     Rajbhandari et al.): each flat f32 bucket is reduce-SCATTERED so worker
     w owns only chunk w of the mean gradient, updates its 1/W shard of the
@@ -118,7 +131,17 @@ def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     memory drops from O(N) to O(N/W) — the memory-bound lever of the
     paper's large-mini-batch regime (§2).  Numerically equivalent to
     ``sync`` with full state: the same mean reaches the same elementwise
-    update, only the ownership of the state is partitioned."""
+    update, only the ownership of the state is partitioned.
+
+    Under a master-keeping precision policy (bf16 working params, f32
+    master — core/precision.py) the f32 master rides the partitioned
+    opt-state shard: ``opt_state = {"opt": <inner state>, "master":
+    <1/W f32 shard buckets>}``.  The update then runs f32 master math
+    against the reduce-scattered (bf16-wire, f32-accumulated) gradient
+    shards and all-gathers the bf16 image of the new master back into the
+    replicated params — per-worker master cost O(N/W), wire cost halved."""
+
+    keeps_master = policy is not None and policy.keeps_master
 
     def init(params, comm):
         return {}
@@ -126,20 +149,30 @@ def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
     def init_opt(params, opt: Optimizer, comm: Comm):
         # optimizer state over THIS worker's shard buckets: 1/W of the
         # dense footprint per worker (tested in tests/test_zero1.py)
-        fab = Fabric(comm, bucket_bytes)
-        return opt.init(fab.shard_params(params))
+        fab = _fab(comm, bucket_bytes, policy)
+        shards = fab.shard_params(params)  # flat f32 shard buckets
+        inner = opt.init(shards)
+        if keeps_master:
+            return {"opt": inner, "master": shards}
+        return inner
 
     def update(params, grads, opt_state, cstate, t, opt: Optimizer,
                comm: Comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         play = fab.partitioned_layout(params)
         g_shards, m = fab.exchange_partitioned(grads, play)
-        p_shards = fab.shard_params(params, play)
-        p_shards, opt_state = opt.update(g_shards, opt_state, p_shards, t)
+        if keeps_master:
+            inner, p_shards = opt_state["opt"], opt_state["master"]
+        else:
+            inner, p_shards = opt_state, fab.shard_params(params, play)
+        p_shards, inner = opt.update(g_shards, inner, p_shards, t)
         params = fab.unpartition(p_shards, play)
-        return params, opt_state, cstate, m
+        new_state = {"opt": inner, "master": p_shards} if keeps_master \
+            else inner
+        return params, new_state, cstate, m
 
-    return Strategy("sync_zero1", 1, True, init, update, init_opt)
+    return Strategy("sync_zero1", 1, True, init, update, init_opt,
+                    owns_master=keeps_master)
 
 
 # ---------------------------------------------------------------------------
@@ -147,12 +180,13 @@ def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
 # ---------------------------------------------------------------------------
 def local_sgd(sync_every: int = 8,
               compressor: Optional[Compressor] = None,
-              bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+              bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+              policy: Optional[PrecisionPolicy] = None) -> Strategy:
     def init(params, comm):
         return {}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do_avg = (t + 1) % sync_every == 0
         params = _gate(do_avg, fab.all_mean, params)
@@ -166,7 +200,8 @@ def local_sgd(sync_every: int = 8,
 # 1b. sync + Deep Gradient Compression (momentum correction, [54])
 # ---------------------------------------------------------------------------
 def sync_dgc(compressor: Compressor, momentum: float = 0.9,
-             bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+             bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+             policy: Optional[PrecisionPolicy] = None) -> Strategy:
     """Synchronous exchange of momentum-corrected sparsified gradients:
     velocity (not raw gradient) is accumulated into the residual, so
     sparsified-away updates keep their momentum — the [54] refinement of
@@ -176,7 +211,7 @@ def sync_dgc(compressor: Compressor, momentum: float = 0.9,
         return {"dgc": dgc_init(params)}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         g, new_dgc, m = fab.exchange_dgc(grads, cstate["dgc"],
                                          compressor, momentum)
         params, opt_state = opt.update(g, opt_state, params, t)
@@ -189,7 +224,8 @@ def sync_dgc(compressor: Compressor, momentum: float = 0.9,
 # +. elastic averaging SGD (paper §2.2.3 via [50], Zhang/Choromanska/LeCun)
 # ---------------------------------------------------------------------------
 def easgd(alpha: float = 0.1, sync_every: int = 4,
-          bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+          bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+          policy: Optional[PrecisionPolicy] = None) -> Strategy:
     """Workers are elastically attracted to a (replicated) center variable;
     the center moves toward the worker average.  Model averaging with a
     spring instead of a hard reset — complete communication, point 2-ish."""
@@ -206,7 +242,7 @@ def easgd(alpha: float = 0.1, sync_every: int = 4,
         return {"center": jax.tree.map(center, params)}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do = (t + 1) % sync_every == 0
 
@@ -233,7 +269,8 @@ def easgd(alpha: float = 0.1, sync_every: int = 4,
 # ---------------------------------------------------------------------------
 def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
         staleness_aware_lr: bool = False,
-        bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+        bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+        policy: Optional[PrecisionPolicy] = None) -> Strategy:
     """``staleness_aware_lr`` (Zhang et al. [40]): stale contributions are
     scaled by 1/s — the staleness-dependent learning-rate modulation."""
     s = max(1, staleness)
@@ -248,7 +285,7 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
         return st
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         new_c = dict(cstate)
         if compressor:
             grads, new_c["residual"], nbytes = fab.compress(
@@ -278,7 +315,8 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
 # ---------------------------------------------------------------------------
 def downpour(push_every: int = 4,
              compressor: Optional[Compressor] = None,
-             bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+             bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+             policy: Optional[PrecisionPolicy] = None) -> Strategy:
     """Decentralized Downpour: workers accumulate locally and push on
     staggered schedules; every update is eventually delivered everywhere
     (complete).  Staggering makes deliveries interleave asynchronously —
@@ -291,7 +329,7 @@ def downpour(push_every: int = 4,
         return st
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         new_c = dict(cstate)
         if compressor:
             grads, new_c["residual"], nbytes = fab.compress(
@@ -332,7 +370,8 @@ def downpour(push_every: int = 4,
 # ---------------------------------------------------------------------------
 def gossip(mix_every: int = 1, symmetric: bool = True,
            compressor: Optional[Compressor] = None,
-           bucket_bytes: int = DEFAULT_BUCKET_BYTES) -> Strategy:
+           bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+           policy: Optional[PrecisionPolicy] = None) -> Strategy:
     """Ring gossip on *weights* after the local step.  A worker only ever
     hears from its ring neighbors — updates from others are never directly
     delivered: the paper's point 4, where model consistency is genuinely
@@ -342,7 +381,7 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
         return {}
 
     def update(params, grads, opt_state, cstate, t, opt, comm):
-        fab = Fabric(comm, bucket_bytes)
+        fab = _fab(comm, bucket_bytes, policy)
         params, opt_state = opt.update(grads, opt_state, params, t)
         do_mix = (t + 1) % mix_every == 0
 

@@ -34,7 +34,7 @@ ALL_ARCHS = [
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
-            mode: str = "tp"):
+            mode: str = "tp", precision: str = None):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_label = "2x16x16" if multi_pod else "16x16"
     n_dev = 512 if multi_pod else 256
@@ -47,11 +47,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     if cfg is None:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
                 "status": "skip",
-                "reason": "full-attention enc-dec x 500k decode (DESIGN.md §4)"}
+                "reason": "full-attention enc-dec x 500k decode (DESIGN.md §5)"}
 
     # --- full config, scan-over-layers: proves lowering/sharding + memory ---
     t0 = time.time()
-    step_fn, sds, shardings, donate = build_step(cfg, shape_name, mesh)
+    step_fn, sds, shardings, donate = build_step(cfg, shape_name, mesh,
+                                                 precision=precision)
     with compat.set_mesh(mesh):
         jitted = jax.jit(step_fn, in_shardings=shardings,
                          donate_argnums=donate)
@@ -67,7 +68,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     costs = {}
     for r in (1, 2):
         tcfg = truncate(cfg, r)
-        tstep, tsds, tsh, tdon = build_step(tcfg, shape_name, mesh)
+        tstep, tsds, tsh, tdon = build_step(tcfg, shape_name, mesh,
+                                            precision=precision)
         with compat.set_mesh(mesh):
             tcomp = jax.jit(tstep, in_shardings=tsh,
                             donate_argnums=tdon).lower(*tsds).compile()
@@ -117,6 +119,11 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--out", default=None)
     ap.add_argument("--mode", default="tp", choices=["tp", "cp"])
+    ap.add_argument("--precision", default=None,
+                    choices=["f32", "bf16", "bf16-pure"],
+                    help="precision policy for the train step (None keeps "
+                         "the historical bf16-dtype lowering with no "
+                         "policy machinery)")
     args = ap.parse_args()
 
     pairs = []
@@ -130,7 +137,9 @@ def main():
     results = []
     for arch, shape in pairs:
         try:
-            results.append(run_one(arch, shape, args.multi_pod, mode=args.mode))
+            results.append(run_one(arch, shape, args.multi_pod,
+                                   mode=args.mode,
+                                   precision=args.precision))
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             traceback.print_exc()
             results.append({"arch": arch, "shape": shape,

@@ -1,6 +1,6 @@
 """Sharding rules: activation constraints + parameter partition specs.
 
-Conventions (DESIGN.md §5):
+Conventions (DESIGN.md §6):
   batch    → ("pod", "data")   (pure data parallel across pods — the tier the
                                 paper's partial-communication strategies target)
   heads/ffn/experts/vocab → "model"   (tensor parallel)

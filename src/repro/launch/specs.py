@@ -4,7 +4,7 @@
 device allocation) for each model input; the dry-run lowers against them.
 Decode shapes lower ``serve_step`` (ONE token against a seq_len cache);
 ``long_500k`` additionally requires sub-quadratic attention — full-attention
-archs get the explicitly-flagged sliding-window variant (DESIGN.md §4).
+archs get the explicitly-flagged sliding-window variant (DESIGN.md §5).
 """
 
 from __future__ import annotations
@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.precision import apply_policy, get_policy
 from repro.models import transformer as T
 from repro.optim.optimizers import adam, state_template
 from repro.train.loop import make_sharded_train_step
@@ -39,7 +40,7 @@ SHAPES = {
     "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
 }
 
-# the one genuine skip (DESIGN.md §4): full-attention enc-dec × 500k decode
+# the one genuine skip (DESIGN.md §5): full-attention enc-dec × 500k decode
 SKIPS = {("seamless-m4t-medium", "long_500k")}
 
 
@@ -183,11 +184,23 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
 # step builders — each returns (step_fn, arg_sds (tuple), arg_shardings, donate)
 # ---------------------------------------------------------------------------
 def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
-                     pod_compressor=None, partition_grads: bool = False):
+                     pod_compressor=None, partition_grads: bool = False,
+                     precision=None):
+    """``precision``: None keeps the pre-precision build exactly; a policy
+    name (``--precision {f32,bf16,bf16-pure}``) or PrecisionPolicy applies
+    its param/compute dtypes to the config and threads wire dtype, master
+    placement and loss-scale state through the step."""
+    policy = None
+    if precision is not None:
+        policy = get_policy(precision)
+        cfg = apply_policy(cfg, policy)
+        if policy.is_noop:
+            policy = None
     opt = adam(3e-4)
     step_fn = make_sharded_train_step(cfg, opt, remat=True,
                                       pod_compressor=pod_compressor,
-                                      partition_grads=partition_grads)
+                                      partition_grads=partition_grads,
+                                      policy=policy)
 
     params_sds = model_sds(cfg)
     comm_sds, comm_sh = {}, {}
@@ -200,7 +213,7 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
         from repro.launch.sharding import zero1_state_shardings
         from repro.train.loop import zero1_opt_template
         npods = dict(mesh.shape).get("pod", 1)
-        opt_sds = zero1_opt_template(params_sds, opt, npods)
+        opt_sds = zero1_opt_template(params_sds, opt, npods, policy=policy)
         opt_sh = zero1_state_shardings(opt_sds, mesh)
     else:
         opt_sds = state_template(opt, params_sds)
@@ -218,17 +231,33 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
         "comm_state": comm_sh,
         "step": NamedSharding(mesh, P()),
     }
+    if policy is not None and policy.uses_scaling:
+        state_sds["loss_scale"] = {
+            "scale": jax.ShapeDtypeStruct((), jnp.float32),
+            "good_steps": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_sh["loss_scale"] = {
+            "scale": NamedSharding(mesh, P()),
+            "good_steps": NamedSharding(mesh, P())}
+    if policy is not None and policy.keeps_master and not partition_grads:
+        # dense path: param-shaped f32 master in the train state (the
+        # ZeRO-1 path keeps its 1/W master inside the opt-state shard)
+        state_sds["master"] = jax.tree.map(
+            lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.float32),
+            params_sds)
+        state_sh["master"] = param_shardings_sds(
+            state_sds["master"], mesh, cfg.sharding_mode)
     batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
     return step_fn, (state_sds, batch_sds), (state_sh, batch_sh), (0,)
 
 
 def build_step(cfg: ModelConfig, shape_name: str, mesh, pod_compressor=None,
-               partition_grads: bool = False):
+               partition_grads: bool = False, precision=None):
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return build_train_step(cfg, shape, mesh,
                                 pod_compressor=pod_compressor,
-                                partition_grads=partition_grads)
+                                partition_grads=partition_grads,
+                                precision=precision)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, mesh)
     return build_serve_step(cfg, shape, mesh)

@@ -24,6 +24,7 @@ from repro.checkpoint import save_checkpoint
 from repro.configs import get_config
 from repro.core.comm import LocalComm
 from repro.core.compression import get_compressor
+from repro.core.precision import POLICIES, apply_policy, get_policy
 from repro.core.strategies import get_strategy
 from repro.data.pipeline import DataConfig, bayes_entropy, worker_batches
 from repro.models import transformer as T
@@ -42,6 +43,10 @@ def build_argparser():
                              "downpour", "gossip"])
     ap.add_argument("--compressor", default="none",
                     choices=["none", "onebit", "int8", "topk"])
+    ap.add_argument("--precision", default="f32", choices=sorted(POLICIES),
+                    help="precision policy (core/precision.py): f32 | "
+                         "bf16 (bf16 compute/wire, f32 master, dynamic "
+                         "loss scaling) | bf16-pure")
     ap.add_argument("--workers", type=int, default=4)
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch-per-worker", type=int, default=4)
@@ -55,7 +60,7 @@ def build_argparser():
     return ap
 
 
-def strategy_from_args(args):
+def strategy_from_args(args, policy=None):
     comp = None
     if args.compressor != "none":
         comp = get_compressor(args.compressor) if args.compressor != "topk" \
@@ -63,6 +68,8 @@ def strategy_from_args(args):
     kw = {}
     if args.strategy in ("sync", "ssp", "downpour"):
         kw["compressor"] = comp
+    if policy is not None:
+        kw["policy"] = policy
     return get_strategy(args.strategy, **kw)
 
 
@@ -74,9 +81,14 @@ def main(argv=None):
     if cfg.is_encoder_decoder or cfg.modality is not None:
         raise SystemExit("trainer CLI supports decoder-only text archs; "
                          "see examples/ for enc-dec and multimodal")
+    policy = get_policy(args.precision)
+    if policy.is_noop:
+        policy = None  # f32: the bitwise pre-precision path
+    else:
+        cfg = apply_policy(cfg, policy)
 
     comm = LocalComm(args.workers)
-    strategy = strategy_from_args(args)
+    strategy = strategy_from_args(args, policy)
     opt = (adam if args.optimizer == "adam" else sgd)(
         warmup_cosine(args.lr, warmup=max(1, args.steps // 20),
                       total_steps=args.steps))
@@ -85,18 +97,20 @@ def main(argv=None):
 
     key = jax.random.PRNGKey(args.seed)
     params = comm.replicate(T.init_model(key, cfg))
-    state = init_train_state(params, opt, strategy, comm)
+    state = init_train_state(params, opt, strategy, comm, policy=policy)
 
     loss_fn_single = make_loss_fn(cfg, remat=False)
 
     def loss_fn(p, toks):
         return loss_fn_single(p, {"tokens": toks, "labels": toks})
 
-    step_fn = make_replica_train_step(loss_fn, opt, strategy, comm)
+    step_fn = make_replica_train_step(loss_fn, opt, strategy, comm,
+                                      policy=policy)
 
     n_params = sum(x.size for x in jax.tree.leaves(params)) // args.workers
     print(f"arch={cfg.name} params={n_params:,} strategy={strategy.name} "
-          f"workers={args.workers} entropy_floor={bayes_entropy(dcfg):.3f}")
+          f"precision={args.precision} workers={args.workers} "
+          f"entropy_floor={bayes_entropy(dcfg):.3f}")
 
     history = []
     t0 = time.time()
@@ -108,14 +122,28 @@ def main(argv=None):
                    "divergence": float(m["replica_divergence"]),
                    "wire_bytes": float(m["wire_bytes"]),
                    "elapsed_s": round(time.time() - t0, 2)}
+            if "loss_scale" in m:
+                rec["loss_scale"] = float(m["loss_scale"])
             history.append(rec)
             print(f"step {t:5d} loss {rec['loss']:.4f} "
                   f"div {rec['divergence']:.2e} wireB {rec['wire_bytes']:.0f}")
 
     if args.ckpt_dir:
-        save_checkpoint(args.ckpt_dir, args.steps,
-                        {"params": comm.replica(state["params"], 0),
-                         "step": state["step"]})
+        tree = {"params": comm.replica(state["params"], 0),
+                "step": state["step"]}
+        kw = {}
+        if policy is not None:
+            kw["precision"] = policy.spec()
+            if "master" in state:  # dense f32 master rides the checkpoint
+                tree["master"] = comm.replica(state["master"], 0)
+        if args.strategy == "sync_zero1":
+            # shard-bucket opt state (incl. any f32 master shards) + the
+            # partition spec, so a restore can re-shard to another W
+            from repro.core.fabric import Fabric
+            tree["opt_state"] = state["opt_state"]
+            kw["partition"] = Fabric(comm).partitioned_layout(
+                state["params"]).spec()
+        save_checkpoint(args.ckpt_dir, args.steps, tree, **kw)
         print(f"checkpoint saved to {args.ckpt_dir}")
     if args.out:
         with open(args.out, "w") as f:

@@ -2,6 +2,15 @@
 bias / qk-norm / softcap / cross), SwiGLU MLP, and capacity-based MoE.
 
 All layers are pure functions over nested-dict parameter pytrees.
+
+Precision contract (core/precision.py, DESIGN.md §4): matmuls and
+activations run in whatever dtype the inputs carry (``cfg.compute_dtype``
+after the forward-boundary cast in models/transformer.py), but every
+numerically-sensitive reduction accumulates in f32 regardless —
+``rms_norm`` statistics, RoPE angles, attention logits + softmax (all
+four sdpa paths), and the MoE router logits/aux loss.  Keeping those
+invariants here is what lets the bf16 policy train within tolerance of
+f32 (tests/test_precision.py) without any per-layer dtype plumbing.
 """
 
 from __future__ import annotations

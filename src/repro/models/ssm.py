@@ -9,6 +9,15 @@ instead of the full (B, L, d_inner, N).  mLSTM uses the quadratic parallel
 form for training (it is attention-shaped, MXU-friendly) and the O(1)
 recurrent form for decode.  sLSTM is inherently sequential (recurrent weight
 matrix) and uses ``lax.scan`` over time.
+
+Precision contract (core/precision.py, DESIGN.md §4): recurrences are
+where low-precision error compounds, so every carried state is f32 by
+construction regardless of ``compute_dtype`` — the Mamba discretization
+(dA, B·u) and chunked scan, the mLSTM (C, n, m) matrix memory and its
+log-space gate stabilizers, and the sLSTM cell state all accumulate in
+f32; only the projections in and out run in the compute dtype.  Decode
+caches keep their recurrent leaves f32 even when the KV cache is bf16
+(``init_*_cache`` takes the narrow dtype for activations only).
 """
 
 from __future__ import annotations

@@ -220,12 +220,30 @@ def _embed(params, cfg, tokens=None, embeds=None):
     return shard(h, BATCH, seq_ax(cfg), None)
 
 
+def _cast_compute(params, cfg: ModelConfig):
+    """Weights → ``compute_dtype`` at the forward boundary (DESIGN.md §4).
+
+    Matmuls and activations run in the compute dtype; loss, softmax and
+    norm statistics still accumulate in f32 inside the layers.  A no-op
+    when ``param_dtype == compute_dtype`` (every preset policy), so the
+    f32 path is untouched; with f32 storage + bf16 compute this is the
+    classic AMP cast, and AD transposes it so gradients flow back in the
+    storage dtype."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if jnp.dtype(cfg.param_dtype) == cdt:
+        return params
+    return jax.tree.map(
+        lambda w: w.astype(cdt)
+        if jnp.issubdtype(w.dtype, jnp.floating) else w, params)
+
+
 # ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
             memory=None, remat=False):
     """Training/prefill forward pass. Returns (logits, aux_loss)."""
+    params = _cast_compute(params, cfg)
     h = _embed(params, cfg, tokens, embeds)
     b, l = h.shape[:2]
     if positions is None:
@@ -243,6 +261,7 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, memory=None,
     (inference prefill).  Returns (logits, cache); ``last_only`` projects
     only the final position (what a real prefill needs — avoids the
     (B, L, V) logits tensor)."""
+    params = _cast_compute(params, cfg)
     h = _embed(params, cfg, tokens, embeds)
     b, l = h.shape[:2]
     positions = jnp.broadcast_to(jnp.arange(l, dtype=jnp.int32), (b, l))
@@ -255,6 +274,7 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None, memory=None,
 
 def encode(params, cfg: ModelConfig, embeds=None, tokens=None):
     """Encoder pass (enc-dec models): bidirectional self-attention stack."""
+    params = _cast_compute(params, cfg)
     enc = params["encoder"]
     h = _embed(params, cfg, tokens, embeds)
     b, l = h.shape[:2]
@@ -291,6 +311,7 @@ def decode_step(params, cfg: ModelConfig, token=None, pos=None, cache=None,
     """One-token decode against a KV/state cache.  token: (B,) int32;
     pos: scalar int32 write position, or (B,) int32 for ragged slots
     (continuous batching). Returns (logits (B, V), new_cache)."""
+    params = _cast_compute(params, cfg)
     if embeds is None:
         h = _embed(params, cfg, tokens=token[:, None])
     else:

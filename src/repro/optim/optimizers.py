@@ -11,9 +11,23 @@ the same optimizer runs unchanged on the fabric's flat f32 *shard buckets*
 optimizer state, at 1/W of the dense per-worker footprint.  ``t`` (Adam
 bias correction) and the learning-rate schedule are replicated scalars, so
 shard updates agree exactly with the dense update on the same elements.
+
+Precision (core/precision.py, DESIGN.md §4): every update runs in f32
+against the (possibly wider "master") params it is handed — gradients and
+params are upcast, the arithmetic is f32, and only the final result is
+cast back to the incoming param dtype.  For f32 params this is the
+identical op sequence (bitwise-tested); for bf16 working params the
+f32 master shards of the ZeRO-1 path flow through unchanged.
 ``state_floats`` on each Optimizer records how many f32 state values it
-keeps per parameter (roofline memory accounting), and ``state_template``
-builds an allocation-free state skeleton for checkpoint re-sharding.
+keeps per parameter (roofline memory accounting — a kept master copy adds
+``master_floats`` on top, see roofline/analysis.py::opt_state_bytes), and
+``state_template`` builds an allocation-free, dtype-exact state skeleton
+for checkpoint re-sharding.
+
+``adam(..., fused=True)`` routes the elementwise update chain through the
+Pallas kernel in kernels/fused_adam.py (one VMEM pass per tile instead of
+10+ HLO ops; ref/interpret fallback on CPU) — parity-tested against the
+pure-JAX path in tests/test_kernels.py.
 """
 
 from __future__ import annotations
@@ -62,12 +76,17 @@ def state_template(opt: Optimizer, params):
     Works on ShapeDtypeStruct trees as well as real arrays — builds the
     dry-run state specs (launch/specs.py) and the global ZeRO-1
     shard-state template (train/loop.py::zero1_opt_template) without
-    materializing a dense state."""
+    materializing a dense state.  Dtype-aware: the skeleton's dtypes are
+    exactly what ``init`` would allocate for the given params."""
     return jax.eval_shape(opt.init, params)
 
 
 def _as_sched(lr):
     return lr if callable(lr) else constant_schedule(lr)
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
 
 
 def sgd(lr, weight_decay: float = 0.0) -> Optimizer:
@@ -78,10 +97,12 @@ def sgd(lr, weight_decay: float = 0.0) -> Optimizer:
 
     def update(grads, state, params, t):
         step = lr(t)
-        new = jax.tree.map(
-            lambda p, g: p - step * (g + weight_decay * p).astype(p.dtype),
-            params, grads)
-        return new, state
+
+        def one(p, g):
+            return (_f32(p) - step * (_f32(g) + weight_decay * _f32(p))
+                    ).astype(p.dtype)
+
+        return jax.tree.map(one, params, grads), state
 
     return Optimizer(init, update, state_floats=0)
 
@@ -95,24 +116,32 @@ def momentum(lr, beta: float = 0.9, nesterov: bool = False,
 
     def update(grads, state, params, t):
         step = lr(t)
-        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+        m = jax.tree.map(lambda m_, g: beta * m_ + _f32(g),
                          state["m"], grads)
         if nesterov:
-            upd = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
-                               m, grads)
+            upd = jax.tree.map(lambda m_, g: beta * m_ + _f32(g), m, grads)
         else:
             upd = m
-        new = jax.tree.map(
-            lambda p, u: p - step * (u + weight_decay * p).astype(p.dtype),
-            params, upd)
-        return new, {"m": m}
+
+        def one(p, u):
+            return (_f32(p) - step * (u + weight_decay * _f32(p))
+                    ).astype(p.dtype)
+
+        return jax.tree.map(one, params, upd), {"m": m}
 
     return Optimizer(init, update, state_floats=1)
 
 
 def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
-         weight_decay: float = 0.0) -> Optimizer:
+         weight_decay: float = 0.0, fused: bool = False) -> Optimizer:
+    """``fused=True`` runs the (p, m, v) read-modify-write chain through
+    the Pallas kernel (kernels/fused_adam.py) leaf-by-leaf on the
+    flattened view.  The kernel carries no weight-decay term, so fusion is
+    only offered for ``weight_decay=0``."""
     lr = _as_sched(lr)
+    if fused and weight_decay:
+        raise ValueError("fused adam does not implement weight_decay; "
+                         "use fused=False")
 
     def init(params):
         z = lambda p: jnp.zeros_like(p, jnp.float32)
@@ -120,20 +149,43 @@ def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
 
     def update(grads, state, params, t):
         tt = t.astype(jnp.float32) + 1.0 if hasattr(t, "astype") else float(t) + 1.0
-        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * _f32(g),
                          state["m"], grads)
-        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(_f32(g)),
                          state["v"], grads)
         mh = jax.tree.map(lambda m_: m_ / (1 - b1 ** tt), m)
         vh = jax.tree.map(lambda v_: v_ / (1 - b2 ** tt), v)
         step = lr(t)
-        new = jax.tree.map(
-            lambda p, m_, v_: p - step * (m_ / (jnp.sqrt(v_) + eps)
-                                          + weight_decay * p.astype(jnp.float32)).astype(p.dtype),
-            params, mh, vh)
-        return new, {"m": m, "v": v}
 
-    return Optimizer(init, update, state_floats=2)
+        def one(p, m_, v_):
+            return (_f32(p) - step * (m_ / (jnp.sqrt(v_) + eps)
+                                      + weight_decay * _f32(p))
+                    ).astype(p.dtype)
+
+        return jax.tree.map(one, params, mh, vh), {"m": m, "v": v}
+
+    def update_fused(grads, state, params, t):
+        from repro.kernels import ops
+
+        step = lr(t)
+        tt = t.astype(jnp.float32) + 1.0 if hasattr(t, "astype") else float(t) + 1.0
+        ps, tdef = jax.tree.flatten(params)
+        gs = jax.tree.leaves(grads)
+        ms = jax.tree.leaves(state["m"])
+        vs = jax.tree.leaves(state["v"])
+        new_p, new_m, new_v = [], [], []
+        for p, g, m_, v_ in zip(ps, gs, ms, vs):
+            p1, m1, v1 = ops.fused_adam(
+                p.reshape(-1), _f32(g).reshape(-1), m_.reshape(-1),
+                v_.reshape(-1), step, tt, b1=b1, b2=b2, eps=eps)
+            new_p.append(p1.reshape(p.shape))
+            new_m.append(m1.reshape(m_.shape))
+            new_v.append(v1.reshape(v_.shape))
+        return (jax.tree.unflatten(tdef, new_p),
+                {"m": jax.tree.unflatten(tdef, new_m),
+                 "v": jax.tree.unflatten(tdef, new_v)})
+
+    return Optimizer(init, update_fused if fused else update, state_floats=2)
 
 
 def delay_compensated_sgd(lr, lam: float = 0.04) -> Optimizer:
@@ -152,9 +204,9 @@ def delay_compensated_sgd(lr, lam: float = 0.04) -> Optimizer:
         step = lr(t)
 
         def comp(p, g, wb):
-            gf = g.astype(jnp.float32)
-            corr = gf + lam * gf * gf * (p.astype(jnp.float32) - wb)
-            return p - (step * corr).astype(p.dtype)
+            gf = _f32(g)
+            corr = gf + lam * gf * gf * (_f32(p) - wb)
+            return (_f32(p) - step * corr).astype(p.dtype)
 
         new = jax.tree.map(comp, params, grads, state["w_bak"])
         new_bak = jax.tree.map(lambda p: p.astype(jnp.float32), new)

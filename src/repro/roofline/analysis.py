@@ -100,10 +100,19 @@ def parse_collectives(hlo_text: str, loop_trip_counts=None) -> dict:
     return {"bytes": out, "counts": counts}
 
 
+def dtype_wire_bytes(n_elements: int, wire_dtype: str = "float32") -> float:
+    """Flat-buffer bytes to ship ``n_elements`` once at ``wire_dtype``
+    (PrecisionPolicy.wire_dtype) — the dtype-aware input to
+    ``exchange_wire_bytes``; a bf16 wire halves it."""
+    return float(n_elements) * _DTYPE_BYTES[
+        {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}[wire_dtype]]
+
+
 def exchange_wire_bytes(flat_bytes: float, w: int,
                         partitioned: bool = False) -> float:
-    """Ring bytes per worker to exchange one flat f32 buffer of
-    ``flat_bytes`` across ``w`` workers.
+    """Ring bytes per worker to exchange one flat buffer of
+    ``flat_bytes`` (already dtype-scaled: see ``dtype_wire_bytes``)
+    across ``w`` workers.
 
     ``partitioned`` documents call-site intent only: a dense all-reduce
     (2·(W−1)/W·N) and the ZeRO-1 reduce-scatter + all-gather
@@ -113,16 +122,27 @@ def exchange_wire_bytes(flat_bytes: float, w: int,
 
 
 def opt_state_bytes(n_params: int, state_floats: int, w: int = 1,
-                    partitioned: bool = False) -> float:
+                    partitioned: bool = False,
+                    master_floats: int = 0) -> float:
     """Per-worker optimizer-state footprint in bytes.
 
     Dense data parallelism replicates the full f32 state on every worker;
     ZeRO-1 (``sync_zero1`` / ``partition_grads``) partitions it so each
     worker holds 1/W — the redundancy the paper's memory-bound
     large-mini-batch regime (§2) pays for nothing.  ``state_floats`` is
-    ``Optimizer.state_floats`` (0 sgd, 1 momentum, 2 adam)."""
-    total = 4.0 * state_floats * n_params
+    ``Optimizer.state_floats`` (0 sgd, 1 momentum, 2 adam);
+    ``master_floats=1`` adds the f32 master copy a master-keeping
+    precision policy stores alongside the state (in the 1/W shard on the
+    ZeRO-1 path — core/precision.py, DESIGN.md §4)."""
+    total = 4.0 * (state_floats + master_floats) * n_params
     return total / w if partitioned else total
+
+
+def param_bytes(n_params: int, param_dtype: str = "float32") -> float:
+    """Replicated working-parameter bytes per worker at the policy's
+    ``param_dtype`` — bf16 working params halve this (while the f32
+    master rides the 1/W opt-state shard)."""
+    return dtype_wire_bytes(n_params, param_dtype)
 
 
 def collective_count(hlo_text: str, loop_trip_counts=None) -> int:

@@ -31,17 +31,25 @@ class Request:
 
 class DecodeEngine:
     def __init__(self, params, cfg: ModelConfig, batch_slots: int,
-                 max_seq: int, memory=None, pad_token: int = 0):
+                 max_seq: int, memory=None, pad_token: int = 0,
+                 cache_dtype=None):
+        """``cache_dtype``: dtype of the KV/activation decode cache
+        (defaults to ``cfg.compute_dtype``) — a bf16 cache halves the
+        dominant decode-memory term.  Recurrent state leaves (mamba/xlstm)
+        stay f32 regardless (models/ssm.py precision contract)."""
         self.params = params
         self.cfg = cfg
         self.b = batch_slots
         self.max_seq = max_seq
         self.memory = memory
         self.pad = pad_token
+        self.cache_dtype = jnp.dtype(cache_dtype if cache_dtype is not None
+                                     else cfg.compute_dtype)
         self.queue: List[Request] = []
         self.finished: List[Request] = []
         self.steps = 0
-        self.cache = T.init_cache(cfg, batch_slots, max_seq)
+        self.cache = T.init_cache(cfg, batch_slots, max_seq,
+                                  dtype=self.cache_dtype)
         self.pos = np.zeros(batch_slots, np.int32)  # per-slot write position
         self.slot: List[Optional[Request]] = [None] * batch_slots
         self.phase = ["idle"] * batch_slots  # idle | prompt | decode

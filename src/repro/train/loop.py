@@ -23,9 +23,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import jax_compat as compat
+from repro.core import precision as PR
 from repro.core.comm import Comm, LocalComm, ShardComm
 from repro.core.fabric import (BucketLayout, DEFAULT_BUCKET_BYTES, Fabric,
                                PartitionedLayout)
+from repro.core.precision import PrecisionPolicy
 from repro.core.strategies import Strategy
 from repro.models import transformer as T
 from repro.optim.optimizers import Optimizer, state_template
@@ -33,42 +35,108 @@ from repro.train.losses import lm_loss
 
 
 def init_train_state(params, optimizer: Optimizer, strategy: Strategy,
-                     comm: Comm):
+                     comm: Comm, policy: Optional[PrecisionPolicy] = None):
     # strategies that own the optimizer-state layout (ZeRO-1 shard buckets)
     # build it themselves; everyone else gets the dense param-shaped state
     init_opt = getattr(strategy, "init_opt", None)
     opt_state = (init_opt(params, optimizer, comm) if init_opt is not None
                  else optimizer.init(params))
-    return {
+    state = {
         "params": params,
         "opt_state": opt_state,
         "comm_state": strategy.init(params, comm),
         "step": jnp.zeros((), jnp.int32),
     }
+    if policy is not None and not policy.is_noop:
+        if policy.uses_scaling:
+            state["loss_scale"] = PR.init_scale_state(policy)
+        if policy.keeps_master and not getattr(strategy, "owns_master",
+                                               False):
+            # dense strategies: the wider master copy lives in the train
+            # state (the ZeRO-1 strategy keeps its own 1/W master shards
+            # inside opt_state instead — never both)
+            state["master"] = policy.cast_to_master(params)
+    return state
 
 
 # ---------------------------------------------------------------------------
 # replica simulator (LocalComm stacked layout)
 # ---------------------------------------------------------------------------
 def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
-                            comm: LocalComm, jit: bool = True):
+                            comm: LocalComm, jit: bool = True,
+                            policy: Optional[PrecisionPolicy] = None):
     """loss_fn(params, batch) -> scalar, defined for ONE replica.
 
     The returned step takes stacked state (leading dim W on every leaf of
-    params/opt_state) and per-worker batches (leading dim W)."""
+    params/opt_state) and per-worker batches (leading dim W).
 
-    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+    With a non-trivial precision ``policy`` (core/precision.py) the step
+    becomes cast-params → forward (scaled loss) → unscale → skip-or-apply:
+    the strategy/optimizer pipeline runs on the widest copy available (the
+    f32 master for dense strategies, the working params for the ZeRO-1
+    strategy whose master rides its opt-state shard), the fabric ships
+    wire-dtype buckets, and a step with non-finite gradients leaves
+    params, optimizer state and comm state untouched while the dynamic
+    loss scale backs off.  ``policy=None`` (or the f32 policy) takes the
+    exact pre-precision code path — bit-for-bit identical."""
+
+    if policy is None or policy.is_noop:
+        grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+
+        def step(state, batches):
+            loss, grads = grad_fn(state["params"], batches)
+            params, opt_state, comm_state, metrics = strategy.update(
+                state["params"], grads, state["opt_state"],
+                state["comm_state"], state["step"], optimizer, comm)
+            new_state = {"params": params, "opt_state": opt_state,
+                         "comm_state": comm_state, "step": state["step"] + 1}
+            metrics = dict(metrics)
+            metrics["loss"] = jnp.mean(loss)
+            metrics["replica_divergence"] = _stack_divergence(params)
+            return new_state, metrics
+
+        return jax.jit(step) if jit else step
 
     def step(state, batches):
-        loss, grads = grad_fn(state["params"], batches)
-        params, opt_state, comm_state, metrics = strategy.update(
-            state["params"], grads, state["opt_state"], state["comm_state"],
+        sstate = state.get("loss_scale")
+        scale = sstate["scale"] if sstate is not None else 1.0
+        src = state.get("master", state["params"])
+
+        def scaled_loss(p_src, batch):
+            # cast-params: forward consumes the param-dtype image of the
+            # (possibly wider) source-of-truth copy
+            return loss_fn(policy.cast_to_param(p_src), batch) * scale
+
+        loss, grads = jax.vmap(jax.value_and_grad(scaled_loss),
+                               in_axes=(0, 0))(src, batches)
+        grads = PR.unscale_grads(grads, scale)
+        finite = PR.tree_finite(grads) if sstate is not None \
+            else jnp.asarray(True)
+        new_src, opt_state, comm_state, metrics = strategy.update(
+            src, grads, state["opt_state"], state["comm_state"],
             state["step"], optimizer, comm)
-        new_state = {"params": params, "opt_state": opt_state,
-                     "comm_state": comm_state, "step": state["step"] + 1}
+        if sstate is not None:  # skip-or-apply
+            new_src = PR.select_tree(finite, new_src, src)
+            opt_state = PR.select_tree(finite, opt_state,
+                                       state["opt_state"])
+            comm_state = PR.select_tree(finite, comm_state,
+                                        state["comm_state"])
+        new_state = {"opt_state": opt_state, "comm_state": comm_state,
+                     "step": state["step"] + 1}
+        if "master" in state:
+            new_state["master"] = new_src
+            new_state["params"] = policy.cast_to_param(new_src)
+        else:
+            new_state["params"] = new_src
         metrics = dict(metrics)
-        metrics["loss"] = jnp.mean(loss)
-        metrics["replica_divergence"] = _stack_divergence(params)
+        metrics["loss"] = jnp.mean(loss) / scale
+        metrics["replica_divergence"] = _stack_divergence(
+            new_state["params"])
+        if sstate is not None:
+            new_state["loss_scale"] = PR.next_scale_state(policy, sstate,
+                                                          finite)
+            metrics["loss_scale"] = sstate["scale"]
+            metrics["overflow"] = 1.0 - finite.astype(jnp.float32)
         return new_state, metrics
 
     return jax.jit(step) if jit else step
@@ -104,20 +172,50 @@ def make_loss_fn(cfg, remat: bool = True):
 
 
 def zero1_opt_template(params, optimizer: Optimizer, n_parts: int,
-                       bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+                       bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                       policy: Optional[PrecisionPolicy] = None):
     """GLOBAL optimizer state for the partitioned production path: one
     padded flat f32 bucket per state leaf, to be sharded ``P("pod")`` over
     the data-parallel axis (per-device footprint 1/W).  Accepts arrays or
-    ShapeDtypeStructs; returns the same flavour."""
+    ShapeDtypeStructs; returns the same flavour.
+
+    Under a master-keeping policy the template grows the f32 master
+    buckets: ``{"opt": <inner>, "master": [...]}`` — matching
+    ``sync_zero1(policy=...)``'s opt-state layout.  A template built from
+    real arrays materializes the master FROM the params (zeros would
+    silently reset the model on the first step); use
+    ``zero1_master_buckets`` to fill a ShapeDtypeStruct template."""
     play = PartitionedLayout.build(
         BucketLayout.build(params, bucket_bytes, lead_axes=0), n_parts)
     sds = [jax.ShapeDtypeStruct((p,), jnp.float32)
            for p in play.padded_sizes]
     template = state_template(optimizer, sds)
+    keeps_master = policy is not None and policy.keeps_master
+    if keeps_master:
+        template = {"opt": template, "master": list(sds)}
     if all(isinstance(x, jax.ShapeDtypeStruct)
            for x in jax.tree.leaves(params)):
         return template
-    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), template)
+    zeros = lambda t: jax.tree.map(  # noqa: E731
+        lambda s: jnp.zeros(s.shape, s.dtype), t)
+    if keeps_master:  # master comes FROM the params, never from zeros
+        return {"opt": zeros(template["opt"]),
+                "master": zero1_master_buckets(params, n_parts,
+                                               bucket_bytes)}
+    return zeros(template)
+
+
+def zero1_master_buckets(params, n_parts: int,
+                         bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """The f32 master in GLOBAL (padded flat bucket) form, initialized
+    from the params — what the "master" entry of the production ZeRO-1
+    opt state must hold before the first step."""
+    lay = BucketLayout.build(params, bucket_bytes, lead_axes=0)
+    play = PartitionedLayout.build(lay, n_parts)
+    buckets = lay.bucketize(params)
+    return [b if b.shape[-1] == p else
+            jnp.pad(b, [(0, 0)] * (b.ndim - 1) + [(0, p - b.shape[-1])])
+            for b, p in zip(buckets, play.padded_sizes)]
 
 
 def make_sharded_train_step(cfg, optimizer: Optimizer,
@@ -126,7 +224,8 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                             remat: bool = True,
                             pod_compressor=None,
                             partition_grads: bool = False,
-                            bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+                            bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                            policy: Optional[PrecisionPolicy] = None):
     """Global-model train step.  With ``strategy=None`` this is pure
     synchronous data parallelism (gradients all-reduced by XLA across the
     batch sharding) — the paper's spectrum point 1 and the dry-run target.
@@ -156,19 +255,36 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                             or strategy is not None):
         raise ValueError("partition_grads composes with the plain sync "
                          "path only (no pod_compressor / strategy)")
+    if policy is not None and policy.is_noop:
+        policy = None  # f32 policy: take the pre-precision path bit-for-bit
+    scaling = policy is not None and policy.uses_scaling
+    keeps_master = policy is not None and policy.keeps_master
+    wire = policy.wire_dt if policy is not None else None
 
-    def sync_grads(params, batch):
-        return jax.value_and_grad(loss_fn)(params, batch)
+    def value_and_grad(params, batch, scale):
+        """cast-params → forward → scaled loss (the backward runs against
+        the scaled objective; callers unscale in f32)."""
+        def lfn(p):
+            p = policy.cast_to_param(p) if policy is not None else p
+            loss = loss_fn(p, batch)
+            return loss * scale if scaling else loss
+        return jax.value_and_grad(lfn)(params)
 
-    def pod_fabric_grads(params, batch, residual):
+    def sync_grads(params, batch, scale):
+        return value_and_grad(params, batch, scale)
+
+    def pod_fabric_grads(params, batch, residual, scale):
         from jax.sharding import PartitionSpec as P
 
         mesh = compat.get_abstract_mesh()
         npods = dict(mesh.shape).get("pod", 1)
 
-        def per_pod(params, batch, residual):
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            fab = Fabric(ShardComm("pod", npods), bucket_bytes)
+        def per_pod(params, batch, residual, scale):
+            loss, grads = value_and_grad(params, batch, scale)
+            if scaling:
+                grads = PR.unscale_grads(grads, scale)
+            fab = Fabric(ShardComm("pod", npods), bucket_bytes,
+                         wire_dtype=wire)
             grads, new_r, _ = fab.exchange(grads, residual, pod_compressor)
             return jax.lax.pmean(loss, "pod"), grads, new_r
 
@@ -177,61 +293,114 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
         rep_r = jax.tree.map(lambda _: P(), residual)
         return compat.shard_map(
             per_pod, mesh=mesh, axis_names={"pod"},
-            in_specs=(rep, batch_specs, rep_r),
+            in_specs=(rep, batch_specs, rep_r, P()),
             out_specs=(P(), rep, rep_r), check_vma=False,
-        )(params, batch, residual)
+        )(params, batch, residual, scale)
 
-    def zero1_step_body(params, batch, opt_state, t):
+    def zero1_step_body(params, batch, opt_state, t, scale):
         """shard_map body over "pod": grads → reduce-scatter → shard update
         → all-gather, one RS + one AG per bucket, NO full all-reduce of
-        gradients (the loss mean is the only scalar psum)."""
+        gradients (the loss mean is the only scalar psum).  Under a
+        master-keeping policy the f32 master shards live in
+        ``opt_state["master"]`` (1/W per device) and the all-gather ships
+        the wire-dtype image of the updated master."""
         from jax.sharding import PartitionSpec as P
 
         mesh = compat.get_abstract_mesh()
         npods = dict(mesh.shape).get("pod", 1)
 
-        def per_pod(params, batch, opt_state, t):
-            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-            fab = Fabric(ShardComm("pod", npods), bucket_bytes)
+        def per_pod(params, batch, opt_state, t, scale):
+            loss, grads = value_and_grad(params, batch, scale)
+            if scaling:
+                grads = PR.unscale_grads(grads, scale)
+            fab = Fabric(ShardComm("pod", npods), bucket_bytes,
+                         wire_dtype=wire)
             play = fab.partitioned_layout(params)
             g_shards, _ = fab.exchange_partitioned(grads, play)
-            p_shards = fab.shard_params(params, play)
-            p_shards, opt_state = optimizer.update(g_shards, opt_state,
-                                                   p_shards, t)
-            params = fab.unpartition(p_shards, play)
-            return jax.lax.pmean(loss, "pod"), params, opt_state
+            # every pod must take the same skip decision: the finite check
+            # runs on this pod's reduced shards, pmin'ed across pods
+            ok = PR.tree_finite(g_shards).astype(jnp.float32) if scaling \
+                else jnp.ones((), jnp.float32)
+            ok = jax.lax.pmin(ok, "pod") if scaling else ok
+            if keeps_master:
+                inner, p_shards = opt_state["opt"], opt_state["master"]
+            else:
+                inner, p_shards = opt_state, fab.shard_params(params, play)
+            p_shards, inner = optimizer.update(g_shards, inner, p_shards, t)
+            new_params = fab.unpartition(p_shards, play)
+            new_opt = {"opt": inner, "master": p_shards} if keeps_master \
+                else inner
+            return (jax.lax.pmean(loss, "pod"), new_params, new_opt, ok)
 
         batch_specs = jax.tree.map(lambda _: P("pod"), batch)
         rep = jax.tree.map(lambda _: P(), params)
         shard_specs = jax.tree.map(lambda _: P("pod"), opt_state)
         return compat.shard_map(
             per_pod, mesh=mesh, axis_names={"pod"},
-            in_specs=(rep, batch_specs, shard_specs, P()),
-            out_specs=(P(), rep, shard_specs), check_vma=False,
-        )(params, batch, opt_state, t)
+            in_specs=(rep, batch_specs, shard_specs, P(), P()),
+            out_specs=(P(), rep, shard_specs, P()), check_vma=False,
+        )(params, batch, opt_state, t, scale)
 
     def step(state, batch):
+        sstate = state.get("loss_scale")
+        scale = sstate["scale"] if scaling else jnp.ones((), jnp.float32)
         if partition_grads:
-            loss, params, opt_state = zero1_step_body(
-                state["params"], batch, state["opt_state"], state["step"])
-            return ({"params": params, "opt_state": opt_state,
-                     "comm_state": state["comm_state"],
-                     "step": state["step"] + 1}, loss)
+            loss, params, opt_state, ok = zero1_step_body(
+                state["params"], batch, state["opt_state"], state["step"],
+                scale)
+            finite = ok > 0.5
+            if scaling:  # skip-or-apply
+                params = PR.select_tree(finite, params, state["params"])
+                opt_state = PR.select_tree(finite, opt_state,
+                                           state["opt_state"])
+                loss = loss / scale
+            new_state = {"params": params, "opt_state": opt_state,
+                         "comm_state": state["comm_state"],
+                         "step": state["step"] + 1}
+            if scaling:
+                new_state["loss_scale"] = PR.next_scale_state(
+                    policy, sstate, finite)
+            return new_state, loss
+        # dense paths: the f32 master (when the policy keeps one) lives in
+        # state["master"] and is the source of truth — forward casts it to
+        # the param dtype inside value_and_grad, the optimizer/strategy
+        # update runs on it in full precision, and state["params"] is its
+        # param-dtype image
+        src = state.get("master", state["params"])
         if pod_compressor is not None:
             loss, grads, new_res = pod_fabric_grads(
-                state["params"], batch, state["comm_state"]["residual"])
+                src, batch, state["comm_state"]["residual"], scale)
             comm_state = {"residual": new_res}
         else:
-            loss, grads = sync_grads(state["params"], batch)
+            loss, grads = sync_grads(src, batch, scale)
+            if scaling:
+                grads = PR.unscale_grads(grads, scale)
             comm_state = state["comm_state"]
+        finite = PR.tree_finite(grads) if scaling else jnp.asarray(True)
         if strategy is not None:
-            params, opt_state, comm_state, _ = strategy.update(
-                state["params"], grads, state["opt_state"],
+            new_src, opt_state, comm_state, _ = strategy.update(
+                src, grads, state["opt_state"],
                 comm_state, state["step"], optimizer, comm)
         else:
-            params, opt_state = optimizer.update(
-                grads, state["opt_state"], state["params"], state["step"])
-        return ({"params": params, "opt_state": opt_state,
-                 "comm_state": comm_state, "step": state["step"] + 1}, loss)
+            new_src, opt_state = optimizer.update(
+                grads, state["opt_state"], src, state["step"])
+        if scaling:  # skip-or-apply
+            new_src = PR.select_tree(finite, new_src, src)
+            opt_state = PR.select_tree(finite, opt_state,
+                                       state["opt_state"])
+            comm_state = PR.select_tree(finite, comm_state,
+                                        state["comm_state"])
+            loss = loss / scale
+        new_state = {"opt_state": opt_state, "comm_state": comm_state,
+                     "step": state["step"] + 1}
+        if "master" in state:
+            new_state["master"] = new_src
+            new_state["params"] = policy.cast_to_param(new_src)
+        else:
+            new_state["params"] = new_src
+        if scaling:
+            new_state["loss_scale"] = PR.next_scale_state(policy, sstate,
+                                                          finite)
+        return new_state, loss
 
     return step

@@ -6,6 +6,14 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "bf16: strategy-equivalence sweep under the bf16 precision policy "
+        "(CI runs `pytest -m bf16` as its own job; the marks also run in "
+        "the plain tier-1 sweep)")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

@@ -155,6 +155,11 @@ def test_fused_adam_matches_optimizer(rng):
                                rtol=1e-5, atol=1e-6)
 
 
+# (The adam(fused=True) Optimizer-API parity tests live in
+# tests/test_precision.py, which runs without the hypothesis dependency
+# this module is gated on.)
+
+
 # ---------------------------------------------------------------------------
 # mamba selective scan
 # ---------------------------------------------------------------------------
