@@ -2,7 +2,11 @@
 (results_singlepod.json / results_multipod.json, produced by
 ``python -m repro.launch.dryrun --all [--multi-pod] --out ...``), plus the
 fabric fusion check: the lowered exchange HLO must contain at most
-n_buckets cross-worker collectives (one per leaf before core/fabric.py)."""
+n_buckets cross-worker collectives (one per leaf before core/fabric.py).
+
+Every check also contributes to ``BENCH_roofline.json`` at the repo root —
+the machine-readable perf trajectory (wire bytes, bytes/sample, collective
+counts, step-time estimates) tracked across PRs."""
 
 from __future__ import annotations
 
@@ -66,7 +70,7 @@ def check_fusion():
     if out.returncode != 0:
         emit("roofline/fusion", 0.0, "error=" + out.stderr[-200:].replace(
             "\n", " ").replace(",", ";"))
-        return
+        return None
     line = [l for l in out.stdout.splitlines() if l.startswith("FUSION ")][0]
     rows = json.loads(line[len("FUSION "):])
     n_leaves, n_buckets = rows.pop("n_leaves"), rows.pop("n_buckets")
@@ -78,6 +82,8 @@ def check_fusion():
              f"collectives={r['collectives']};fused={ok};"
              f"hlo_bytes={r['hlo_bytes']};fabric_bytes={r['fabric_bytes']};"
              f"compression_x={ratio:.1f}")
+    return {"n_leaves": n_leaves, "n_buckets": n_buckets,
+            "compressors": rows}
 
 
 _ZERO1_CHECK = """
@@ -146,7 +152,7 @@ def check_zero1():
     if out.returncode != 0:
         emit("roofline/zero1", 0.0, "error=" + out.stderr[-200:].replace(
             "\n", " ").replace(",", ";"))
-        return
+        return None
     line = [l for l in out.stdout.splitlines() if l.startswith("ZERO1 ")][0]
     rows = json.loads(line[len("ZERO1 "):])
     counts = rows["counts"]
@@ -160,6 +166,9 @@ def check_zero1():
          f"partitioned={ok};state_shrink_x={shrink:.2f};"
          f"model_shrink_x={rows['dense_state_bytes']/max(rows['zero1_model_bytes'],1):.2f};"
          f"wire_parity={rows['wire_zero1'] == rows['wire_dense']}")
+    rows["ok"] = ok
+    rows["state_shrink_x"] = shrink
+    return rows
 
 
 _PRECISION_CHECK = """
@@ -233,7 +242,7 @@ def check_precision():
     if out.returncode != 0:
         emit("roofline/precision", 0.0, "error=" + out.stderr[-200:].replace(
             "\n", " ").replace(",", ";"))
-        return
+        return None
     line = [l for l in out.stdout.splitlines()
             if l.startswith("PRECISION ")][0]
     rows = json.loads(line[len("PRECISION "):])
@@ -249,12 +258,136 @@ def check_precision():
          f"bf16_a2a={bf16['counts']['all-to-all']};"
          f"ag_bytes_f32={f32['hlo_bytes']['all-gather']};"
          f"ag_bytes_bf16={bf16['hlo_bytes']['all-gather']}")
+    rows["ok"] = ok
+    rows["wire_shrink_x"] = shrink
+    return rows
+
+
+_ACCUM_CHECK = """
+    import json
+    import jax, jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+    from repro.core.comm import ShardComm
+    from repro.core.fabric import BucketLayout, Fabric
+    from repro.core.jax_compat import make_mesh, set_mesh, shard_map
+    from repro.optim import adam
+    from repro.roofline.analysis import parse_collectives, wire_bytes_per_sample
+    from repro.train.loop import zero1_opt_template
+
+    PODS, LAYERS, B = 4, 8, 8  # B = per-pod samples per microbatch
+    mesh = make_mesh((PODS,), ("pod",))
+    bucket_bytes = 4 * 40_000
+    params = {f"l{i}": {"w": jnp.zeros((256, 64)), "b": jnp.zeros((64,))}
+              for i in range(LAYERS)}
+    lay = BucketLayout.build(params, bucket_bytes, lead_axes=0)
+    comm = ShardComm("pod", PODS)
+    opt = adam(1e-3)
+    opt_state = zero1_opt_template(params, opt, PODS, bucket_bytes)
+
+    def loss_fn(p, mb):
+        # toy but differentiable-in-every-leaf loss with a real batch dep
+        s = sum(jnp.vdot(l, l) for l in jax.tree.leaves(p))
+        return s * jnp.mean(mb ** 2)
+
+    def accum(fab, p, batch, k, play=None):
+        la = fab.layout(p)
+        def micro(carry, mb):
+            acc, ls = carry
+            l, g = jax.value_and_grad(loss_fn)(p, mb)
+            return (fab.accumulate(acc, g, la, play=play), ls + l), None
+        (acc, ls), _ = lax.scan(
+            micro, (fab.init_accum(la, play), jnp.zeros(())), batch)
+        return [a / k for a in acc], ls / k
+
+    def lower(path, k):
+        fab = Fabric(comm, bucket_bytes)
+        if path == "dense":
+            def body(p, batch):
+                acc, _ = accum(fab, p, batch, k)
+                g, _, _ = fab.exchange_accumulated(acc, lay)
+                return jax.tree.map(lambda x, gg: x - 0.1 * gg, p, g)
+            specs = (jax.tree.map(lambda _: P(), params), P(None, "pod"))
+            outs = jax.tree.map(lambda _: P(), params)
+            args = (params, jnp.zeros((k, PODS * B, 16)))
+        else:
+            play = fab.partitioned_layout(params)
+            def body(p, batch, s):
+                acc, _ = accum(fab, p, batch, k, play=play)
+                g_sh, _ = fab.exchange_partitioned_accumulated(acc, play)
+                p_sh, s = opt.update(g_sh, s, fab.shard_params(p, play), 0)
+                return fab.unpartition(p_sh, play), s
+            ssp = jax.tree.map(lambda _: P("pod"), opt_state)
+            specs = (jax.tree.map(lambda _: P(), params), P(None, "pod"), ssp)
+            outs = (jax.tree.map(lambda _: P(), params), ssp)
+            args = (params, jnp.zeros((k, PODS * B, 16)), opt_state)
+        fn = shard_map(body, mesh=mesh, axis_names={"pod"},
+                       in_specs=specs, out_specs=outs, check_vma=False)
+        with set_mesh(mesh):
+            c = jax.jit(fn).lower(*args).compile()
+        pc = parse_collectives(c.as_text())
+        n = sum(x.size for x in jax.tree.leaves(params))
+        return {"counts": pc["counts"],
+                "hlo_bytes": sum(pc["bytes"].values()),
+                "wire_bytes_per_sample": wire_bytes_per_sample(
+                    4 * n, PODS, B, accum_steps=k)}
+
+    rows = {"n_buckets": lay.n_buckets,
+            "dense": {k: lower("dense", k) for k in (1, 4)},
+            "zero1": {k: lower("zero1", k) for k in (1, 4)}}
+    print("ACCUM " + json.dumps(rows))
+"""
+
+
+def check_accum():
+    """Lower the microbatched boundary step (k=1 vs k=4) on both the dense
+    sync and ZeRO-1 paths and emit the accumulation proof: wire bytes per
+    SAMPLE shrink by exactly accum_steps while the step HLO still carries
+    one exchange's worth of collectives (≤ n_buckets, the fused-Fabric
+    bound) per boundary — the scan body is collective-free."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=4")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(_ACCUM_CHECK)],
+        capture_output=True, text=True, env=env, timeout=560)
+    if out.returncode != 0:
+        emit("roofline/accum", 0.0, "error=" + out.stderr[-200:].replace(
+            "\n", " ").replace(",", ";"))
+        return None
+    line = [l for l in out.stdout.splitlines() if l.startswith("ACCUM ")][0]
+    rows = json.loads(line[len("ACCUM "):])
+    nb = rows["n_buckets"]
+    oks = {}
+    for path in ("dense", "zero1"):
+        r1, r4 = rows[path]["1"], rows[path]["4"]
+        ratio = r1["wire_bytes_per_sample"] / r4["wire_bytes_per_sample"]
+        c1, c4 = r1["counts"], r4["counts"]
+        exchange_ops = (c4["all-reduce"] if path == "dense"
+                        else max(c4["reduce-scatter"], c4["all-gather"]))
+        ok = (abs(ratio - 4.0) < 1e-9          # 4x fewer bytes per sample
+              and c1 == c4                     # collectives don't scale in k
+              and r1["hlo_bytes"] == r4["hlo_bytes"]  # nor do wire bytes
+              and 0 < exchange_ops <= nb)      # one fused exchange/boundary
+        oks[path] = ok
+        emit(f"roofline/accum/{path}", ratio,
+             f"n_buckets={nb};bytes_per_sample_x={ratio:.1f};ok={ok};"
+             f"k4_counts=" + "/".join(f"{k}:{v}" for k, v in c4.items()
+                                      if v) + ";"
+             f"hlo_bytes_k1={r1['hlo_bytes']};hlo_bytes_k4={r4['hlo_bytes']}")
+    rows["ok"] = all(oks.values())
+    return rows
 
 
 def run():
-    check_fusion()
-    check_zero1()
-    check_precision()
+    report = {
+        "fusion": check_fusion(),
+        "zero1": check_zero1(),
+        "precision": check_precision(),
+        "accum": check_accum(),
+        "dryrun": {},
+    }
     for fname, mesh in (("results_singlepod.json", "16x16"),
                         ("results_multipod.json", "2x16x16")):
         path = os.path.join(ROOT, fname)
@@ -265,6 +398,17 @@ def run():
         ok = [r for r in rows if r["status"] == "ok"]
         for r in ok:
             ro = r["roofline"]
+            # step-time estimate: the binding roofline term
+            step_s = max(ro["compute_s"], ro["memory_s"],
+                         ro["collective_s"])
+            report["dryrun"].setdefault(mesh, []).append({
+                "arch": r["arch"], "shape": r["shape"],
+                "step_time_s_est": step_s, "dominant": ro["dominant"],
+                "collective_bytes": ro["collective_bytes"],
+                "collective_counts": ro["collective_counts"],
+                "peak_per_device_gb": r["memory"]["peak_per_device_gb"],
+                "accum_steps": r.get("accum_steps", 1),
+            })
             emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
                  ro["compute_s"] * 1e6,
                  f"dominant={ro['dominant']};compute_ms={ro['compute_s']*1e3:.2f};"
@@ -276,6 +420,11 @@ def run():
         nerr = sum(1 for r in rows if r["status"] == "error")
         emit(f"roofline/{mesh}/summary", 0.0,
              f"ok={len(ok)};skip={nskip};error={nerr}")
+    out = os.path.join(ROOT, "BENCH_roofline.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1)
+    emit("roofline/json", 0.0, f"wrote={os.path.basename(out)}")
+    return report
 
 
 if __name__ == "__main__":

@@ -451,22 +451,57 @@ class Fabric:
         (mean,) = self.comm.all_mean([dec_self])
         return mean, dec_self
 
+    # -- flat-bucket gradient accumulation ----------------------------------
+    # The microbatched train step (train/loop.py, DESIGN.md §8) keeps its
+    # gradient accumulator in BUCKET space: one flatten per microbatch
+    # (``accumulate``), no per-microbatch unflatten, and the boundary
+    # exchange consumes the accumulated buckets directly
+    # (``exchange_accumulated`` / ``exchange_partitioned_accumulated``) —
+    # compression, error feedback and the collective all compose at the
+    # boundary only.
+
+    def init_accum(self, lay: BucketLayout,
+                   play: Optional[PartitionedLayout] = None):
+        """Zeroed flat f32 accumulator buckets (padded when ``play`` is
+        given, so the boundary reduce-scatter needs no re-pad)."""
+        sizes = play.padded_sizes if play is not None else lay.bucket_sizes
+        return [jnp.zeros(lay.lead_shape + (n,), jnp.float32) for n in sizes]
+
+    def accumulate(self, acc, tree, lay: BucketLayout,
+                   play: Optional[PartitionedLayout] = None):
+        """acc + bucketize(tree): ONE flatten, elementwise adds — a scan
+        over microbatches carries only these buckets.  Under
+        ``donate_argnums`` the adds are in-place buffer reuse."""
+        gb = lay.bucketize(tree)
+        if play is not None:
+            gb = self._pad_buckets(gb, play)
+        return [a + g for a, g in zip(acc, gb)]
+
     # -- fused exchanges ----------------------------------------------------
     def exchange(self, grads, residual=None, compressor=None, events=1.0):
         """Fused all-mean of ``grads`` with optional compression + error
         feedback.  Returns (mean_tree, new_residual_tree, metrics)."""
         lay = self.layout(grads)
+        return self.exchange_accumulated(lay.bucketize(grads), lay,
+                                         residual=residual,
+                                         compressor=compressor, events=events)
+
+    def exchange_accumulated(self, buckets, lay: BucketLayout, residual=None,
+                             compressor=None, events=1.0):
+        """The exchange of ``exchange`` starting from flat f32 buckets
+        (e.g. a microbatch accumulator) instead of a tree.  Exactly one
+        collective per bucket fires here — the microbatch loop that built
+        ``buckets`` issued none.  Returns (mean_tree, new_residual_tree,
+        metrics)."""
         if compressor is None or compressor.name == "none":
-            gb = lay.bucketize(grads)
-            out = (self._reduce_narrow_sharded(gb, mean=True)
+            out = (self._reduce_narrow_sharded(buckets, mean=True)
                    if self._narrow_sharded
-                   else self.comm.all_mean(self._wire_cast(gb)))
+                   else self.comm.all_mean(self._wire_cast(buckets)))
             return (lay.debucketize(out), residual,
                     self.metrics(self.flat_bytes(lay), events))
-        gb = lay.bucketize(grads)
         rb = lay.bucketize(residual)
         g_out, r_out = [], []
-        for g, r in zip(gb, rb):
+        for g, r in zip(buckets, rb):
             t = g + r
             mean, dec_self = self._bucket_mean_compressed(t, compressor)
             g_out.append(mean)
@@ -530,6 +565,17 @@ class Fabric:
         dense all-reduce of ``exchange`` (2·N·(W−1)/W per worker)."""
         play = play or self.partitioned_layout(grads)
         gb = self._pad_buckets(play.layout.bucketize(grads), play)
+        return self.exchange_partitioned_accumulated(gb, play, events=events)
+
+    def exchange_partitioned_accumulated(self, buckets,
+                                         play: PartitionedLayout,
+                                         events=1.0):
+        """``exchange_partitioned`` starting from PADDED flat f32 buckets
+        (the microbatch accumulator built with ``init_accum(lay, play)`` /
+        ``accumulate(..., play=play)``): one reduce-scatter per bucket at
+        the boundary, nothing per microbatch.  Returns (shard_buckets,
+        metrics)."""
+        gb = buckets
         if self._narrow_sharded:
             # narrow wire with f32 ring accumulation, HLO-provably: the
             # reduction is decomposed into ONE all-to-all of the narrowed

@@ -59,6 +59,19 @@ class Strategy:
     owns_master: bool = False  # the wider master copy of the params lives
     #                 INSIDE this strategy's opt_state (ZeRO-1 shard
     #                 buckets) — the train loop must NOT keep its own.
+    exchange_at_boundary: bool = True  # DECLARATIVE metadata (read by
+    #                 tests/tooling, not by the train loop — boundary-only
+    #                 behavior is structural: the loop calls ``update``
+    #                 exactly once per accumulation boundary with the
+    #                 OPTIMIZER step ``t``, whatever this says).  True:
+    #                 every ``update`` ships the gradient exchange of its
+    #                 call exactly once, so under microbatch accumulation
+    #                 (DESIGN.md §8) wire bytes per sample shrink by
+    #                 accum_steps.  False: a local-step strategy
+    #                 (local_sgd / easgd / ssp / downpour / gossip) whose
+    #                 own ``sync_every``-style schedule — counted in
+    #                 optimizer steps, never microbatches — decides when
+    #                 to communicate.
 
     # Contract: ``update`` must treat ``comm_state`` as immutable and
     # return a FRESH mapping — callers re-step from saved state (resume,
@@ -193,7 +206,8 @@ def local_sgd(sync_every: int = 8,
         m = fab.metrics(fab.flat_bytes(params), events=_events(do_avg))
         return params, opt_state, cstate, m
 
-    return Strategy("local_sgd", 2, True, init, update)
+    return Strategy("local_sgd", 2, True, init, update,
+                    exchange_at_boundary=False)
 
 
 # ---------------------------------------------------------------------------
@@ -261,7 +275,8 @@ def easgd(alpha: float = 0.1, sync_every: int = 4,
         m = fab.metrics(fab.flat_bytes(params), events=_events(do))
         return params, opt_state, {"center": center}, m
 
-    return Strategy("easgd", 2, True, init, update)
+    return Strategy("easgd", 2, True, init, update,
+                    exchange_at_boundary=False)
 
 
 # ---------------------------------------------------------------------------
@@ -307,7 +322,8 @@ def ssp(staleness: int = 4, compressor: Optional[Compressor] = None,
             cstate["buf"], grads)
         return params, opt_state, new_c, fab.metrics(nbytes)
 
-    return Strategy("ssp", 2, True, init, update)
+    return Strategy("ssp", 2, True, init, update,
+                    exchange_at_boundary=False)
 
 
 # ---------------------------------------------------------------------------
@@ -362,7 +378,8 @@ def downpour(push_every: int = 4,
         ev = jnp.mean(sched.astype(jnp.float32))
         return params, opt_state, new_c, fab.metrics(nbytes, events=ev)
 
-    return Strategy("downpour", 3, True, init, update)
+    return Strategy("downpour", 3, True, init, update,
+                    exchange_at_boundary=False)
 
 
 # ---------------------------------------------------------------------------
@@ -405,7 +422,8 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
         m = fab.metrics(fab.flat_bytes(params), events=ev)
         return params, opt_state, cstate, m
 
-    return Strategy("gossip", 4, False, init, update)
+    return Strategy("gossip", 4, False, init, update,
+                    exchange_at_boundary=False)
 
 
 # ---------------------------------------------------------------------------
@@ -434,7 +452,9 @@ def hierarchical(inner: Strategy, outer: Strategy) -> Strategy:
 
     return Strategy(f"hier({inner.name}x{outer.name})",
                     4 if not outer.complete else inner.spectrum_point,
-                    inner.complete and outer.complete, init, update)
+                    inner.complete and outer.complete, init, update,
+                    exchange_at_boundary=(inner.exchange_at_boundary
+                                          and outer.exchange_at_boundary))
 
 
 REGISTRY = {

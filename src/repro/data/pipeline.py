@@ -15,7 +15,9 @@ which is exactly what the paper's §3 experiments need.
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -45,8 +47,8 @@ def _successor(x, cfg: DataConfig):
     return (cfg.a * x + cfg.b) % cfg.v_act
 
 
-def sample_batch(cfg: DataConfig, worker: int, step: int):
-    """(batch_per_worker, seq_len) int32, deterministic in (seed, worker, step)."""
+def _sample_batch(cfg: DataConfig, worker, step):
+    """Traceable core of ``sample_batch`` (worker/step may be traced)."""
     key = jax.random.fold_in(
         jax.random.fold_in(jax.random.PRNGKey(cfg.seed), worker), step)
     k0, k1, k2 = jax.random.split(key, 3)
@@ -65,9 +67,37 @@ def sample_batch(cfg: DataConfig, worker: int, step: int):
     return toks.swapaxes(0, 1).astype(jnp.int32)  # (b, l)
 
 
-def worker_batches(cfg: DataConfig, n_workers: int, step: int):
-    """Stacked (W, batch_per_worker, seq_len) — LocalComm layout."""
-    return jnp.stack([sample_batch(cfg, w, step) for w in range(n_workers)])
+@partial(jax.jit, static_argnames=("cfg",))
+def sample_batch(cfg: DataConfig, worker, step):
+    """(batch_per_worker, seq_len) int32, deterministic in (seed, worker,
+    step).  Jitted ONCE per (hashable, frozen) config: ``worker`` and
+    ``step`` are traced operands, so per-step synthesis neither retraces
+    nor re-dispatches op-by-op — and its dispatch is async, which is what
+    lets ``prefetch_batches`` synthesize batch t+1 while step t runs."""
+    return _sample_batch(cfg, worker, step)
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_workers"))
+def worker_batches(cfg: DataConfig, n_workers: int, step):
+    """Stacked (W, batch_per_worker, seq_len) — LocalComm layout.  One
+    trace per (cfg, W); the per-worker streams are vmapped, not looped."""
+    return jax.vmap(lambda w: _sample_batch(cfg, w, step))(
+        jnp.arange(n_workers))
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_workers", "accum_steps"))
+def microbatch_stack(cfg: DataConfig, n_workers: int, opt_step,
+                     accum_steps: int):
+    """(accum_steps, W, batch_per_worker, seq_len): the microbatch input of
+    one accumulation boundary (train/loop.py, DESIGN.md §8).
+
+    Microbatch j of optimizer step T draws the data of plain step
+    ``T*accum_steps + j`` — the token stream is IDENTICAL to running
+    ``accum_steps`` unaccumulated steps, which is what the equivalence
+    sweep in tests/test_accum.py relies on."""
+    steps = opt_step * accum_steps + jnp.arange(accum_steps)
+    return jax.vmap(lambda s: jax.vmap(
+        lambda w: _sample_batch(cfg, w, s))(jnp.arange(n_workers)))(steps)
 
 
 def global_batch(cfg: DataConfig, step: int, global_batch_size: int):
@@ -75,6 +105,36 @@ def global_batch(cfg: DataConfig, step: int, global_batch_size: int):
     n = global_batch_size // cfg.batch_per_worker
     ws = worker_batches(cfg, n, step)
     return ws.reshape(global_batch_size, cfg.seq_len)
+
+
+def prefetch_batches(cfg: DataConfig, n_workers: int, steps: int,
+                     accum_steps: int = 1, depth: int = 2):
+    """Double-buffered device prefetch: yields ``(t, batch)`` for ``steps``
+    optimizer steps, keeping up to ``depth`` batches in flight.
+
+    Batch synthesis is a jitted on-device program whose dispatch is async,
+    so enqueueing batch t+1 BEFORE the consumer blocks on step t's result
+    overlaps host-side synthesis/dispatch with device compute — the
+    classic double buffer at ``depth=2``.  ``jax.device_put`` makes the
+    device placement explicit (and covers host-resident arrays if a
+    caller swaps in a host pipeline).  ``depth=1`` degrades to the old
+    synchronous order."""
+    depth = max(1, depth)
+    q: deque = deque()
+
+    def synth(t):
+        if accum_steps > 1:
+            b = microbatch_stack(cfg, n_workers, t, accum_steps)
+        else:
+            b = worker_batches(cfg, n_workers, t)
+        return jax.device_put(b)
+
+    for t in range(steps):
+        q.append((t, synth(t)))
+        while len(q) >= depth:
+            yield q.popleft()
+    while q:
+        yield q.popleft()
 
 
 def bayes_entropy(cfg: DataConfig) -> float:

@@ -34,7 +34,8 @@ ALL_ARCHS = [
 
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
-            mode: str = "tp", precision: str = None):
+            mode: str = "tp", precision: str = None,
+            accum_steps: int = 1):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_label = "2x16x16" if multi_pod else "16x16"
     n_dev = 512 if multi_pod else 256
@@ -52,7 +53,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     # --- full config, scan-over-layers: proves lowering/sharding + memory ---
     t0 = time.time()
     step_fn, sds, shardings, donate = build_step(cfg, shape_name, mesh,
-                                                 precision=precision)
+                                                 precision=precision,
+                                                 accum_steps=accum_steps)
     with compat.set_mesh(mesh):
         jitted = jax.jit(step_fn, in_shardings=shardings,
                          donate_argnums=donate)
@@ -69,7 +71,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     for r in (1, 2):
         tcfg = truncate(cfg, r)
         tstep, tsds, tsh, tdon = build_step(tcfg, shape_name, mesh,
-                                            precision=precision)
+                                            precision=precision,
+                                            accum_steps=accum_steps)
         with compat.set_mesh(mesh):
             tcomp = jax.jit(tstep, in_shardings=tsh,
                             donate_argnums=tdon).lower(*tsds).compile()
@@ -77,11 +80,20 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
                     "hlo": tcomp.as_text()}
         del tcomp
     cost, coll = extrapolate_cost(costs[1], costs[2], repeat_full)
+    if accum_steps > 1 and shape.kind == "train":
+        # XLA's cost_analysis counts the microbatch lax.scan body ONCE
+        # (same trip-count blindness the depth extrapolation corrects), so
+        # the compute/memory-traffic terms of a boundary step scale by
+        # accum_steps.  Collective bytes stay as parsed: the boundary
+        # fires one exchange regardless of accum_steps — that asymmetry
+        # IS the accumulation win the roofline should show.
+        cost = {k: v * accum_steps for k, v in cost.items()}
     roof = analyse(arch, shape, mesh_label, n_dev, cost, coll, cfg, mem)
 
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_label,
         "status": "ok", "variant": cfg.name,
+        "accum_steps": accum_steps if shape.kind == "train" else 1,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
         "memory": {
             "argument_bytes": mem.argument_size_in_bytes,
@@ -124,6 +136,10 @@ def main():
                     help="precision policy for the train step (None keeps "
                          "the historical bf16-dtype lowering with no "
                          "policy machinery)")
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="microbatch accumulation per optimizer step "
+                         "(DESIGN.md \u00a78): train shapes gain a leading "
+                         "scan axis and fire one exchange per boundary")
     args = ap.parse_args()
 
     pairs = []
@@ -139,7 +155,8 @@ def main():
         try:
             results.append(run_one(arch, shape, args.multi_pod,
                                    mode=args.mode,
-                                   precision=args.precision))
+                                   precision=args.precision,
+                                   accum_steps=args.accum_steps))
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             traceback.print_exc()
             results.append({"arch": arch, "shape": shape,

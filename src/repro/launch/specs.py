@@ -161,22 +161,35 @@ def _emb_dtype(cfg):
     return jnp.dtype(cfg.compute_dtype)
 
 
-def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh,
+                      accum_steps: int = 1):
+    """``accum_steps > 1`` prepends a microbatch axis: every batch leaf is
+    ``(accum_steps, global_batch, ...)`` — axis 0 is scanned by the
+    microbatched train step (never sharded), the batch axis keeps its
+    ``BD`` sharding.  ``global_batch`` stays the PER-MICROBATCH size, so
+    the effective optimizer batch is ``accum_steps × global_batch``."""
     b, l = shape.global_batch, shape.seq_len
+
+    def _spec(shape_tail, spec: P):
+        if accum_steps == 1:
+            return shape_tail, spec
+        return (accum_steps,) + shape_tail, P(*((None,) + tuple(spec)))
+
     sds, sh = {}, {}
+
+    def add(name, shape_tail, dtype, spec):
+        full, sp = _spec(shape_tail, spec)
+        sds[name] = jax.ShapeDtypeStruct(full, dtype)
+        sh[name] = fit_sharding(sds[name], sp, mesh)
+
     if cfg.modality in ("vision",):  # decoder consumes patch+text embeddings
-        sds["embeds"] = jax.ShapeDtypeStruct((b, l, cfg.d_model), _emb_dtype(cfg))
-        sh["embeds"] = fit_sharding(sds["embeds"], P(BD, None, None), mesh)
+        add("embeds", (b, l, cfg.d_model), _emb_dtype(cfg), P(BD, None, None))
     else:
-        sds["tokens"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
-        sh["tokens"] = fit_sharding(sds["tokens"], P(BD, None), mesh)
-    sds["labels"] = jax.ShapeDtypeStruct((b, l), jnp.int32)
-    sh["labels"] = fit_sharding(sds["labels"], P(BD, None), mesh)
+        add("tokens", (b, l), jnp.int32, P(BD, None))
+    add("labels", (b, l), jnp.int32, P(BD, None))
     if cfg.is_encoder_decoder:  # audio frontend stub: frame embeddings
-        sds["source_embeds"] = jax.ShapeDtypeStruct(
-            (b, cfg.encoder_seq_len, cfg.d_model), _emb_dtype(cfg))
-        sh["source_embeds"] = fit_sharding(
-            sds["source_embeds"], P(BD, None, None), mesh)
+        add("source_embeds", (b, cfg.encoder_seq_len, cfg.d_model),
+            _emb_dtype(cfg), P(BD, None, None))
     return sds, sh
 
 
@@ -185,11 +198,16 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh):
 # ---------------------------------------------------------------------------
 def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
                      pod_compressor=None, partition_grads: bool = False,
-                     precision=None):
+                     precision=None, accum_steps: int = 1):
     """``precision``: None keeps the pre-precision build exactly; a policy
     name (``--precision {f32,bf16,bf16-pure}``) or PrecisionPolicy applies
     its param/compute dtypes to the config and threads wire dtype, master
-    placement and loss-scale state through the step."""
+    placement and loss-scale state through the step.
+
+    ``accum_steps``: microbatched boundary step (DESIGN.md §8) — the batch
+    specs gain a leading scan axis and the lowered step fires one exchange
+    per boundary.  The state stays donated (``donate_argnums=(0,)``), so
+    params/opt-state/accumulator buffers alias across steps."""
     policy = None
     if precision is not None:
         policy = get_policy(precision)
@@ -200,7 +218,8 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
     step_fn = make_sharded_train_step(cfg, opt, remat=True,
                                       pod_compressor=pod_compressor,
                                       partition_grads=partition_grads,
-                                      policy=policy)
+                                      policy=policy,
+                                      accum_steps=accum_steps)
 
     params_sds = model_sds(cfg)
     comm_sds, comm_sh = {}, {}
@@ -246,18 +265,21 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
             params_sds)
         state_sh["master"] = param_shardings_sds(
             state_sds["master"], mesh, cfg.sharding_mode)
-    batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
+    batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh,
+                                            accum_steps=accum_steps)
     return step_fn, (state_sds, batch_sds), (state_sh, batch_sh), (0,)
 
 
 def build_step(cfg: ModelConfig, shape_name: str, mesh, pod_compressor=None,
-               partition_grads: bool = False, precision=None):
+               partition_grads: bool = False, precision=None,
+               accum_steps: int = 1):
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return build_train_step(cfg, shape, mesh,
                                 pod_compressor=pod_compressor,
                                 partition_grads=partition_grads,
-                                precision=precision)
+                                precision=precision,
+                                accum_steps=accum_steps)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, mesh)
     return build_serve_step(cfg, shape, mesh)

@@ -26,7 +26,7 @@ from repro.core.comm import LocalComm
 from repro.core.compression import get_compressor
 from repro.core.precision import POLICIES, apply_policy, get_policy
 from repro.core.strategies import get_strategy
-from repro.data.pipeline import DataConfig, bayes_entropy, worker_batches
+from repro.data.pipeline import DataConfig, bayes_entropy, prefetch_batches
 from repro.models import transformer as T
 from repro.optim import adam, sgd, warmup_cosine
 from repro.train.loop import (init_train_state, make_loss_fn,
@@ -48,8 +48,18 @@ def build_argparser():
                          "bf16 (bf16 compute/wire, f32 master, dynamic "
                          "loss scaling) | bf16-pure")
     ap.add_argument("--workers", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--steps", type=int, default=100,
+                    help="OPTIMIZER steps (accumulation boundaries)")
     ap.add_argument("--batch-per-worker", type=int, default=4)
+    ap.add_argument("--accum-steps", type=int, default=1,
+                    help="microbatches accumulated per optimizer step "
+                         "(DESIGN.md §8): the exchange fires once per "
+                         "boundary, so wire bytes per sample shrink by "
+                         "this factor; effective global batch = workers x "
+                         "batch-per-worker x accum-steps")
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="batches kept in flight by the double-buffered "
+                         "device prefetch (1 = synchronous)")
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
@@ -105,28 +115,40 @@ def main(argv=None):
         return loss_fn_single(p, {"tokens": toks, "labels": toks})
 
     step_fn = make_replica_train_step(loss_fn, opt, strategy, comm,
-                                      policy=policy)
+                                      policy=policy,
+                                      accum_steps=args.accum_steps)
 
     n_params = sum(x.size for x in jax.tree.leaves(params)) // args.workers
+    # global-batch accounting: one optimizer step consumes accum_steps
+    # microbatches of workers x batch_per_worker samples each, but ships
+    # the wire bytes of ONE exchange
+    samples_per_step = args.workers * args.batch_per_worker * args.accum_steps
     print(f"arch={cfg.name} params={n_params:,} strategy={strategy.name} "
           f"precision={args.precision} workers={args.workers} "
+          f"accum_steps={args.accum_steps} "
+          f"global_batch={samples_per_step} "
+          f"prefetch_depth={args.prefetch_depth} "
           f"entropy_floor={bayes_entropy(dcfg):.3f}")
 
     history = []
     t0 = time.time()
-    for t in range(args.steps):
-        batches = worker_batches(dcfg, args.workers, t)
+    for t, batches in prefetch_batches(dcfg, args.workers, args.steps,
+                                       accum_steps=args.accum_steps,
+                                       depth=args.prefetch_depth):
         state, m = step_fn(state, batches)
         if t % args.log_every == 0 or t == args.steps - 1:
             rec = {"step": t, "loss": float(m["loss"]),
                    "divergence": float(m["replica_divergence"]),
                    "wire_bytes": float(m["wire_bytes"]),
+                   "wire_bytes_per_sample":
+                       float(m["wire_bytes"]) / samples_per_step,
                    "elapsed_s": round(time.time() - t0, 2)}
             if "loss_scale" in m:
                 rec["loss_scale"] = float(m["loss_scale"])
             history.append(rec)
             print(f"step {t:5d} loss {rec['loss']:.4f} "
-                  f"div {rec['divergence']:.2e} wireB {rec['wire_bytes']:.0f}")
+                  f"div {rec['divergence']:.2e} wireB {rec['wire_bytes']:.0f}"
+                  f" wireB/sample {rec['wire_bytes_per_sample']:.1f}")
 
     if args.ckpt_dir:
         tree = {"params": comm.replica(state["params"], 0),

@@ -145,6 +145,45 @@ def param_bytes(n_params: int, param_dtype: str = "float32") -> float:
     return dtype_wire_bytes(n_params, param_dtype)
 
 
+def wire_bytes_per_sample(flat_bytes: float, w: int,
+                          samples_per_microbatch: int,
+                          accum_steps: int = 1) -> float:
+    """Ring bytes per worker per SAMPLE under microbatch accumulation
+    (train/loop.py, DESIGN.md §8): one exchange per boundary is amortized
+    over ``accum_steps x samples_per_microbatch`` samples, so the
+    per-sample wire cost shrinks by exactly ``accum_steps`` — the
+    gradient-accumulation lever of Nichols et al. (2021), on every
+    strategy including the ZeRO-1 partitioned path (whose RS+AG move the
+    same ring bytes as the dense all-reduce)."""
+    return exchange_wire_bytes(flat_bytes, w) \
+        / float(samples_per_microbatch * accum_steps)
+
+
+def accum_state_bytes(n_params: int, accum_steps: int = 1) -> float:
+    """Resident bytes of the microbatch gradient accumulator: the flat f32
+    bucket image of the gradients (4·N per worker) lives across the scan
+    while ``accum_steps > 1``; the unaccumulated step keeps no
+    accumulator.  (Bucket padding on the partitioned path adds < W
+    elements per bucket — ignored here.)"""
+    return 4.0 * float(n_params) if accum_steps > 1 else 0.0
+
+
+def step_state_peak_bytes(param_nbytes: float, opt_nbytes: float,
+                          n_params: int, accum_steps: int = 1,
+                          donated: bool = True) -> float:
+    """Peak per-worker TRAIN-STATE bytes across one step.
+
+    With buffer donation (``donate_argnums=(0,)`` on every step jit —
+    train/loop.py, launch/specs.py) the consumed state aliases the
+    produced one (the dry-run's ``memory_analysis().alias_size_in_bytes``)
+    so old and new params/opt-state are never both resident; without
+    donation every state leaf is double-buffered.  Accumulation adds the
+    f32 accumulator buckets on top."""
+    state = float(param_nbytes) + float(opt_nbytes)
+    return (state if donated else 2.0 * state) \
+        + accum_state_bytes(n_params, accum_steps)
+
+
 def collective_count(hlo_text: str, loop_trip_counts=None) -> int:
     """Total cross-worker collective ops in an optimized HLO module.
 

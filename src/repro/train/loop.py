@@ -21,10 +21,11 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 from repro.core import jax_compat as compat
 from repro.core import precision as PR
-from repro.core.comm import Comm, LocalComm, ShardComm
+from repro.core.comm import Comm, HierComm, LocalComm, ShardComm
 from repro.core.fabric import (BucketLayout, DEFAULT_BUCKET_BYTES, Fabric,
                                PartitionedLayout)
 from repro.core.precision import PrecisionPolicy
@@ -64,11 +65,31 @@ def init_train_state(params, optimizer: Optimizer, strategy: Strategy,
 # ---------------------------------------------------------------------------
 def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
                             comm: LocalComm, jit: bool = True,
-                            policy: Optional[PrecisionPolicy] = None):
+                            policy: Optional[PrecisionPolicy] = None,
+                            accum_steps: int = 1,
+                            bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                            donate: bool = True):
     """loss_fn(params, batch) -> scalar, defined for ONE replica.
 
     The returned step takes stacked state (leading dim W on every leaf of
-    params/opt_state) and per-worker batches (leading dim W).
+    params/opt_state) and per-worker batches (leading dim W), and is jitted
+    with ``donate_argnums=(0,)`` (``donate=False`` opts out): the consumed
+    train state aliases the produced one, so params / optimizer state /
+    master / accumulator buffers are updated in place instead of
+    re-allocated every step.  Callers must not touch a donated input state
+    after stepping — re-step from a state you intend to keep only with
+    ``donate=False``.
+
+    ``accum_steps > 1`` turns the step into a MICROBATCHED boundary step
+    (DESIGN.md §8): batches carry a leading ``(accum_steps, W, ...)`` axis,
+    a ``lax.scan`` accumulates per-microbatch gradients directly into the
+    Fabric's flat f32 buckets (one flatten per microbatch, no per-microbatch
+    tree unflatten), and the strategy — hence the exchange, and with it any
+    compression / error-feedback state — runs ONCE per boundary on the
+    microbatch-mean gradients.  ``state["step"]`` counts optimizer steps
+    (boundaries), so ``sync_every``-style schedules of local-step
+    strategies (``Strategy.exchange_at_boundary=False``) are unchanged by
+    accumulation.  Wire bytes per sample shrink by ``accum_steps``.
 
     With a non-trivial precision ``policy`` (core/precision.py) the step
     becomes cast-params → forward (scaled loss) → unscale → skip-or-apply:
@@ -77,25 +98,65 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
     strategy whose master rides its opt-state shard), the fabric ships
     wire-dtype buckets, and a step with non-finite gradients leaves
     params, optimizer state and comm state untouched while the dynamic
-    loss scale backs off.  ``policy=None`` (or the f32 policy) takes the
-    exact pre-precision code path — bit-for-bit identical."""
+    loss scale backs off.  Under accumulation the finite check and the
+    skip decision apply to the whole boundary.  ``policy=None`` (or the
+    f32 policy) takes the exact pre-precision code path — bit-for-bit
+    identical (the gradient of each microbatch is accumulated in f32 in
+    the same order a per-microbatch reference would sum trees)."""
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+
+    def _jit(fn):
+        if not jit:
+            return fn
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
+
+    def accum_grads(src, batches, vgrad_fn):
+        """scan over the leading microbatch axis, accumulating gradients
+        into flat f32 buckets — zero collectives in here; the boundary
+        exchange consumes the SUM (callers divide by accum_steps, and by
+        the loss scale, exactly once)."""
+        # the accumulator is purely local: it only needs the replica-axis
+        # layout, which a two-tier HierComm delegates to its inner comm
+        # (both tiers declare the same lead_axes)
+        acc_comm = comm.inner if isinstance(comm, HierComm) else comm
+        fab = Fabric(acc_comm, bucket_bytes)
+        lay = fab.layout(src)
+
+        def micro(carry, mb):
+            acc, loss_sum = carry
+            loss, grads = vgrad_fn(src, mb)
+            return (fab.accumulate(acc, grads, lay),
+                    loss_sum + jnp.mean(loss)), None
+
+        (acc, loss_sum), _ = lax.scan(
+            micro, (fab.init_accum(lay), jnp.zeros((), jnp.float32)),
+            batches)
+        return acc, lay, loss_sum
 
     if policy is None or policy.is_noop:
         grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
         def step(state, batches):
-            loss, grads = grad_fn(state["params"], batches)
+            if accum_steps == 1:
+                loss, grads = grad_fn(state["params"], batches)
+                mean_loss = jnp.mean(loss)
+            else:
+                acc, lay, loss_sum = accum_grads(state["params"], batches,
+                                                 grad_fn)
+                grads = lay.debucketize([a / accum_steps for a in acc])
+                mean_loss = loss_sum / accum_steps
             params, opt_state, comm_state, metrics = strategy.update(
                 state["params"], grads, state["opt_state"],
                 state["comm_state"], state["step"], optimizer, comm)
             new_state = {"params": params, "opt_state": opt_state,
                          "comm_state": comm_state, "step": state["step"] + 1}
             metrics = dict(metrics)
-            metrics["loss"] = jnp.mean(loss)
+            metrics["loss"] = mean_loss
             metrics["replica_divergence"] = _stack_divergence(params)
             return new_state, metrics
 
-        return jax.jit(step) if jit else step
+        return _jit(step)
 
     def step(state, batches):
         sstate = state.get("loss_scale")
@@ -107,9 +168,19 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
             # (possibly wider) source-of-truth copy
             return loss_fn(policy.cast_to_param(p_src), batch) * scale
 
-        loss, grads = jax.vmap(jax.value_and_grad(scaled_loss),
-                               in_axes=(0, 0))(src, batches)
-        grads = PR.unscale_grads(grads, scale)
+        vgrad = jax.vmap(jax.value_and_grad(scaled_loss), in_axes=(0, 0))
+        if accum_steps == 1:
+            loss, grads = vgrad(src, batches)
+            grads = PR.unscale_grads(grads, scale)
+            mean_loss = jnp.mean(loss)
+        else:
+            acc, lay, loss_sum = accum_grads(src, batches, vgrad)
+            # one division at the boundary: microbatch mean AND unscale
+            # (the accumulator keeps f32 — cast=False — so the boundary
+            # gradients are at least as wide as the legacy per-step path)
+            grads = lay.debucketize([a / (accum_steps * scale) for a in acc],
+                                    cast=False)
+            mean_loss = loss_sum / accum_steps
         finite = PR.tree_finite(grads) if sstate is not None \
             else jnp.asarray(True)
         new_src, opt_state, comm_state, metrics = strategy.update(
@@ -129,7 +200,7 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
         else:
             new_state["params"] = new_src
         metrics = dict(metrics)
-        metrics["loss"] = jnp.mean(loss) / scale
+        metrics["loss"] = mean_loss / scale
         metrics["replica_divergence"] = _stack_divergence(
             new_state["params"])
         if sstate is not None:
@@ -139,7 +210,7 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
             metrics["overflow"] = 1.0 - finite.astype(jnp.float32)
         return new_state, metrics
 
-    return jax.jit(step) if jit else step
+    return _jit(step)
 
 
 def _stack_divergence(params):
@@ -225,7 +296,8 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                             pod_compressor=None,
                             partition_grads: bool = False,
                             bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                            policy: Optional[PrecisionPolicy] = None):
+                            policy: Optional[PrecisionPolicy] = None,
+                            accum_steps: int = 1):
     """Global-model train step.  With ``strategy=None`` this is pure
     synchronous data parallelism (gradients all-reduced by XLA across the
     batch sharding) — the paper's spectrum point 1 and the dry-run target.
@@ -248,13 +320,28 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
     be the flat shard buckets from ``zero1_opt_template``, sharded
     ``P("pod")``) and the updated shards are all-gathered back.  Same wire
     bytes as the all-reduce, O(W) less optimizer-state memory per device.
-    Mutually exclusive with ``pod_compressor`` and ``strategy``."""
+    Mutually exclusive with ``pod_compressor`` and ``strategy``.
+
+    ``accum_steps > 1`` (DESIGN.md §8): the batch carries a leading
+    ``accum_steps`` axis and the step becomes a microbatched BOUNDARY
+    step.  On the restructured paths (plain sync, ZeRO-1, pod compressor)
+    a ``lax.scan`` inside the "pod" shard_map accumulates per-microbatch
+    per-pod gradients directly into the Fabric's flat f32 buckets — the
+    scan body issues ZERO cross-pod collectives — and exactly one
+    exchange's worth of collectives (≤ n_buckets all-reduces, or one
+    reduce-scatter + all-gather pair per bucket on the ZeRO-1 path) fires
+    per boundary, so wire bytes per sample shrink by ``accum_steps``.
+    Compression / error-feedback state advances once per boundary.  The
+    legacy strategy-over-ShardComm path falls back to tree-space
+    accumulation (strategy semantics preserved; no HLO fusion claim)."""
 
     loss_fn = make_loss_fn(cfg, remat=remat)
     if partition_grads and (pod_compressor is not None
                             or strategy is not None):
         raise ValueError("partition_grads composes with the plain sync "
                          "path only (no pod_compressor / strategy)")
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
     if policy is not None and policy.is_noop:
         policy = None  # f32 policy: take the pre-precision path bit-for-bit
     scaling = policy is not None and policy.uses_scaling
@@ -273,6 +360,88 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
     def sync_grads(params, batch, scale):
         return value_and_grad(params, batch, scale)
 
+    def accum_buckets(params, batch, scale, fab, lay, play=None):
+        """``lax.scan`` over the leading microbatch axis of ``batch``,
+        accumulating per-microbatch gradients directly into flat f32
+        buckets (padded shard layout when ``play`` is given).  The scan
+        body issues NO collective; the boundary divides ONCE by
+        ``accum_steps`` (and the loss scale) before the single exchange.
+        Returns (mean_buckets, mean_scaled_loss)."""
+
+        def micro(carry, mb):
+            acc, loss_sum = carry
+            loss, grads = value_and_grad(params, mb, scale)
+            return (fab.accumulate(acc, grads, lay, play=play),
+                    loss_sum + loss), None
+
+        (acc, loss_sum), _ = lax.scan(
+            micro, (fab.init_accum(lay, play), jnp.zeros((), jnp.float32)),
+            batch)
+        denom = accum_steps * (scale if scaling else 1.0)
+        return [a / denom for a in acc], loss_sum / accum_steps
+
+    def tree_accum_grads(params, batch, scale):
+        """Tree-space microbatch accumulation for the strategy-over-
+        ShardComm path (the strategy owns its own exchange; no bucket-
+        fusion claim here).  Returns (mean_scaled_loss, mean_grads)."""
+
+        def micro(carry, mb):
+            acc, loss_sum = carry
+            loss, grads = value_and_grad(params, mb, scale)
+            acc = jax.tree.map(lambda a, g: a + g.astype(jnp.float32),
+                               acc, grads)
+            return (acc, loss_sum + loss), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (acc, loss_sum), _ = lax.scan(
+            micro, (zeros, jnp.zeros((), jnp.float32)), batch)
+        denom = accum_steps * (scale if scaling else 1.0)
+        return (loss_sum / accum_steps,
+                jax.tree.map(lambda a: a / denom, acc))
+
+    def sync_fabric_accum_body(params, batch, scale):
+        """Microbatched plain-sync boundary step: shard_map over the batch
+        axes, scan-accumulate each shard's gradients into flat buckets,
+        then ONE fused all-mean per bucket at the boundary — the HLO
+        carries at most n_buckets cross-worker collectives per boundary
+        regardless of accum_steps (proven in bench_roofline/check_accum
+        and tests/test_accum.py).
+
+        Like the ZeRO-1 production body above, the shard_map declares
+        replicated (P()) param specs, so on the old-jax full-manual
+        lowering (DESIGN.md §7) model-axis sharding is gathered at the
+        body boundary — the same memory tradeoff the partition_grads path
+        already makes; accum_steps=1 keeps the pjit auto-sharded path
+        untouched."""
+        from jax.sharding import PartitionSpec as P
+
+        mesh = compat.get_abstract_mesh()
+        sizes = dict(mesh.shape) if mesh is not None else {}
+        axes = tuple(a for a in ("pod", "data") if a in sizes)
+        if not axes:  # no batch axis to exchange over (single device)
+            return tree_accum_grads(params, batch, scale)
+        w = 1
+        for a in axes:
+            w *= sizes[a]
+        axis_name = axes if len(axes) > 1 else axes[0]
+
+        def per_shard(params, batch, scale):
+            fab = Fabric(ShardComm(axis_name, w), bucket_bytes,
+                         wire_dtype=wire)
+            lay = fab.layout(params)
+            acc, loss = accum_buckets(params, batch, scale, fab, lay)
+            grads, _, _ = fab.exchange_accumulated(acc, lay)
+            return jax.lax.pmean(loss, axis_name), grads
+
+        batch_specs = jax.tree.map(lambda _: P(None, axes), batch)
+        rep = jax.tree.map(lambda _: P(), params)
+        return compat.shard_map(
+            per_shard, mesh=mesh, axis_names=set(axes),
+            in_specs=(rep, batch_specs, P()),
+            out_specs=(P(), rep), check_vma=False,
+        )(params, batch, scale)
+
     def pod_fabric_grads(params, batch, residual, scale):
         from jax.sharding import PartitionSpec as P
 
@@ -280,15 +449,25 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
         npods = dict(mesh.shape).get("pod", 1)
 
         def per_pod(params, batch, residual, scale):
-            loss, grads = value_and_grad(params, batch, scale)
-            if scaling:
-                grads = PR.unscale_grads(grads, scale)
             fab = Fabric(ShardComm("pod", npods), bucket_bytes,
                          wire_dtype=wire)
-            grads, new_r, _ = fab.exchange(grads, residual, pod_compressor)
+            if accum_steps == 1:
+                loss, grads = value_and_grad(params, batch, scale)
+                if scaling:
+                    grads = PR.unscale_grads(grads, scale)
+                grads, new_r, _ = fab.exchange(grads, residual,
+                                               pod_compressor)
+            else:
+                # boundary-only compression: the error-feedback residual
+                # sees ONE exchange of the microbatch-mean gradients
+                lay = fab.layout(params)
+                acc, loss = accum_buckets(params, batch, scale, fab, lay)
+                grads, new_r, _ = fab.exchange_accumulated(
+                    acc, lay, residual, pod_compressor)
             return jax.lax.pmean(loss, "pod"), grads, new_r
 
-        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        bspec = P("pod") if accum_steps == 1 else P(None, "pod")
+        batch_specs = jax.tree.map(lambda _: bspec, batch)
         rep = jax.tree.map(lambda _: P(), params)
         rep_r = jax.tree.map(lambda _: P(), residual)
         return compat.shard_map(
@@ -303,20 +482,28 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
         gradients (the loss mean is the only scalar psum).  Under a
         master-keeping policy the f32 master shards live in
         ``opt_state["master"]`` (1/W per device) and the all-gather ships
-        the wire-dtype image of the updated master."""
+        the wire-dtype image of the updated master.  With ``accum_steps >
+        1`` the scan accumulates straight into the PADDED shard-bucket
+        layout, so the boundary reduce-scatter consumes the accumulator
+        with no re-pad — still one RS + one AG per bucket per boundary."""
         from jax.sharding import PartitionSpec as P
 
         mesh = compat.get_abstract_mesh()
         npods = dict(mesh.shape).get("pod", 1)
 
         def per_pod(params, batch, opt_state, t, scale):
-            loss, grads = value_and_grad(params, batch, scale)
-            if scaling:
-                grads = PR.unscale_grads(grads, scale)
             fab = Fabric(ShardComm("pod", npods), bucket_bytes,
                          wire_dtype=wire)
             play = fab.partitioned_layout(params)
-            g_shards, _ = fab.exchange_partitioned(grads, play)
+            if accum_steps == 1:
+                loss, grads = value_and_grad(params, batch, scale)
+                if scaling:
+                    grads = PR.unscale_grads(grads, scale)
+                g_shards, _ = fab.exchange_partitioned(grads, play)
+            else:
+                acc, loss = accum_buckets(params, batch, scale, fab,
+                                          play.layout, play=play)
+                g_shards, _ = fab.exchange_partitioned_accumulated(acc, play)
             # every pod must take the same skip decision: the finite check
             # runs on this pod's reduced shards, pmin'ed across pods
             ok = PR.tree_finite(g_shards).astype(jnp.float32) if scaling \
@@ -332,7 +519,8 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                 else inner
             return (jax.lax.pmean(loss, "pod"), new_params, new_opt, ok)
 
-        batch_specs = jax.tree.map(lambda _: P("pod"), batch)
+        bspec = P("pod") if accum_steps == 1 else P(None, "pod")
+        batch_specs = jax.tree.map(lambda _: bspec, batch)
         rep = jax.tree.map(lambda _: P(), params)
         shard_specs = jax.tree.map(lambda _: P("pod"), opt_state)
         return compat.shard_map(
@@ -371,6 +559,12 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
             loss, grads, new_res = pod_fabric_grads(
                 src, batch, state["comm_state"]["residual"], scale)
             comm_state = {"residual": new_res}
+        elif accum_steps > 1 and strategy is None:
+            loss, grads = sync_fabric_accum_body(src, batch, scale)
+            comm_state = state["comm_state"]
+        elif accum_steps > 1:
+            loss, grads = tree_accum_grads(src, batch, scale)
+            comm_state = state["comm_state"]
         else:
             loss, grads = sync_grads(src, batch, scale)
             if scaling:

@@ -12,6 +12,11 @@ def pytest_configure(config):
         "bf16: strategy-equivalence sweep under the bf16 precision policy "
         "(CI runs `pytest -m bf16` as its own job; the marks also run in "
         "the plain tier-1 sweep)")
+    config.addinivalue_line(
+        "markers",
+        "accum: microbatched-train-step sweep (gradient accumulation, "
+        "donation, prefetch — DESIGN.md §8); CI runs `pytest -m accum` as "
+        "its own matrix entry, and the marks also run in plain tier-1")
 
 
 @pytest.fixture(scope="session")

@@ -260,8 +260,13 @@ def test_loss_scale_skip_step_leaves_state_untouched():
 
     state, m = step(state, ok_batch)  # one good step to move off init
     scale0 = float(state["loss_scale"]["scale"])
-    snap = jax.tree.map(np.asarray, {k: state[k] for k in
-                                     ("params", "master", "opt_state")})
+    # np.array, not np.asarray: the step donates its input state
+    # (DESIGN.md §8), and np.asarray of a CPU jax array is a zero-copy
+    # VIEW — a donated-and-reused buffer would silently mutate the
+    # snapshot and make the untouched-state assertion tautological
+    snap = jax.tree.map(lambda x: np.array(x),
+                        {k: state[k] for k in
+                         ("params", "master", "opt_state")})
     state, m = step(state, bad_batch)  # overflow: must be a no-op + backoff
     assert float(m["overflow"]) == 1.0
     for k in snap:

@@ -324,9 +324,12 @@ def test_gating_static_and_traced_agree(mlp_problem):
         opt = sgd(0.05)
         params = comm.replicate(base)
         strat = strat_fn()
-        # traced t (jitted step: lax.cond path)
+        # traced t (jitted step: lax.cond path).  donate=False: this test
+        # re-uses ``params`` to seed the eager run below, so the jitted
+        # step must not consume it (DESIGN.md §8 donation rules).
         state = init_train_state(params, opt, strat, comm)
-        step = make_replica_train_step(loss_fn, opt, strat, comm)
+        step = make_replica_train_step(loss_fn, opt, strat, comm,
+                                       donate=False)
         for _ in range(6):
             state, _ = step(state, batches)
         # static t (eager update: pruned-branch path)
