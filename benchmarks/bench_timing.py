@@ -1,0 +1,383 @@
+"""Measured wall-clock benchmark tier (ROADMAP item 3, DESIGN.md §9).
+
+Where ``bench_roofline`` is HLO-static (collective counts, byte totals),
+this tier times REAL jitted work and commits the numbers to
+``BENCH_timing.json`` at the repo root so regressions are visible across
+PRs, next to the analytic roofline:
+
+  * train step — per strategy × precision × accum_steps on the LocalComm
+    replica simulator (the full strategy/optimizer/exchange pipeline);
+  * kernels — every Pallas kernel against its pure-jnp ``kernels/ref.py``
+    oracle at matched shapes (plus the fused wire-format variants);
+  * exchange — Fabric exchange per compressor, fused vs. jnp dispatch,
+    and the compression BREAKEVEN table: the link bandwidth below which
+    the measured encode overhead pays for the bytes it saves;
+  * optimizer — fused vs. unfused Adam on flat ZeRO-1-style buckets.
+
+Methodology (the §9 rules): every timed callable is jit-compiled, warmed
+up (compilation + ``WARMUP`` steady-state calls), then timed over
+``ITERS`` calls, each blocking on the FULL output pytree via
+``jax.block_until_ready``; we record median/min/max ms.  Train states are
+built with ``donate=False`` — a donated buffer cannot be re-fed on the
+next timed call.  ``meta.backend`` records where the numbers came from;
+off-TPU/GPU the Pallas kernels run in interpret mode (kernels/ops.py), so
+absolute kernel numbers are only comparable within a backend.
+
+Smoke mode (``BENCH_TIMING_SMOKE=1`` or ``--smoke``) shrinks shapes and
+iteration counts so CI can regenerate and re-validate the file in minutes;
+``--validate`` checks the committed file against the schema and exits
+non-zero on violations.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from functools import partial
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:  # script invocation: benchmarks/ is sys.path[0]
+    sys.path.insert(0, ROOT)
+
+from benchmarks.common import emit, time_stats  # noqa: E402
+OUT = os.path.join(ROOT, "BENCH_timing.json")
+
+KERNELS = ("flash_attention", "onebit_quant", "topk_sparsify",
+           "fused_adam", "mamba_scan")
+
+
+def _stats_ms(fn, *args, iters, warmup):
+    med, lo, hi = time_stats(fn, *args, iters=iters, warmup=warmup)
+    return {"median_ms": med / 1e3, "min_ms": lo / 1e3, "max_ms": hi / 1e3}
+
+
+# ---------------------------------------------------------------------------
+# train step: strategy × precision × accum_steps
+# ---------------------------------------------------------------------------
+def _mlp_setup(rng, w, d, h, batch):
+    import jax
+    import jax.numpy as jnp
+
+    k1, k2, k3 = jax.random.split(rng, 3)
+    params = {"w1": jax.random.normal(k1, (d, h)) * 0.02,
+              "w2": jax.random.normal(k2, (h, d)) * 0.02}
+    x = jax.random.normal(k3, (w, batch, d))
+
+    def loss_fn(p, xb):
+        y = jnp.tanh(xb @ p["w1"]) @ p["w2"]
+        return jnp.mean((y - xb) ** 2)
+
+    return params, x, loss_fn
+
+
+def bench_train_step(smoke: bool, iters: int, warmup: int):
+    import jax
+    import jax.numpy as jnp
+    from repro.core import precision as PR
+    from repro.core.comm import LocalComm
+    from repro.core.compression import get_compressor
+    from repro.core.strategies import get_strategy
+    from repro.optim import adam
+    from repro.train.loop import init_train_state, make_replica_train_step
+
+    w = 2
+    d, h, batch = (64, 64, 8) if smoke else (256, 512, 32)
+    comm = LocalComm(w)
+    rows = []
+
+    def strategies(policy):
+        out = [("sync", get_strategy("sync", policy=policy)),
+               ("sync_zero1", get_strategy("sync_zero1", policy=policy)),
+               ("local_sgd", get_strategy("local_sgd", policy=policy))]
+        if not smoke:
+            out += [("sync_onebit",
+                     get_strategy("sync", policy=policy,
+                                  compressor=get_compressor("onebit"))),
+                    ("sync_topk",
+                     get_strategy("sync", policy=policy,
+                                  compressor=get_compressor(
+                                      "topk", ratio=0.01, block=1024)))]
+        return out
+
+    for prec in ("f32", "bf16"):
+        policy = None if prec == "f32" else PR.get_policy("bf16")
+        for accum in (1,) if smoke else (1, 4):
+            for sname, strat in strategies(policy):
+                if accum > 1 and sname != "sync":
+                    continue  # accumulation axis: one strategy suffices
+                params, x, loss_fn = _mlp_setup(
+                    jax.random.PRNGKey(0), w, d, h, batch)
+                params = comm.replicate(params)
+                opt = adam(1e-3)
+                state = init_train_state(params, opt, strat, comm,
+                                         policy=policy)
+                step = make_replica_train_step(
+                    loss_fn, opt, strat, comm, policy=policy,
+                    accum_steps=accum, donate=False)
+                xb = x if accum == 1 else jnp.stack([x] * accum)
+                st = _stats_ms(step, state, xb, iters=iters, warmup=warmup)
+                n_params = sum(p.size for p in jax.tree.leaves(params)) // w
+                rows.append({"strategy": sname, "precision": prec,
+                             "accum_steps": accum, "workers": w,
+                             "n_params": int(n_params),
+                             "batch_per_worker": batch, **st})
+                emit(f"timing/train_step/{sname}/{prec}/accum{accum}",
+                     st["median_ms"] * 1e3, f"workers={w}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# kernels vs kernels/ref.py
+# ---------------------------------------------------------------------------
+def bench_kernels(smoke: bool, iters: int, warmup: int):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.compression import pack_signs
+    from repro.kernels import ops, ref
+
+    rng = jax.random.PRNGKey(0)
+    rows = {}
+
+    def record(name, shape, kfn, rfn, *args):
+        ks = _stats_ms(kfn, *args, iters=iters, warmup=warmup)
+        rs = _stats_ms(rfn, *args, iters=iters, warmup=warmup)
+        rows[name] = {"shape": list(shape),
+                      "kernel_ms": ks["median_ms"], "ref_ms": rs["median_ms"],
+                      "speedup": rs["median_ms"] / max(ks["median_ms"], 1e-9)}
+        emit(f"timing/kernels/{name}", ks["median_ms"] * 1e3,
+             f"ref_ms={rs['median_ms']:.3f};speedup={rows[name]['speedup']:.2f}")
+
+    # flash attention
+    b, hh, l, dd = (1, 1, 64, 64) if smoke else (1, 2, 256, 64)
+    q, k, v = (jax.random.normal(jax.random.fold_in(rng, i), (b, hh, l, dd))
+               for i in range(3))
+    record("flash_attention", (b, hh, l, dd),
+           ops.flash_attention, jax.jit(ref.flash_attention_ref), q, k, v)
+
+    # onebit quant (+ the packed wire-format variant vs ref + pack_signs)
+    nb, block = (16, 64) if smoke else (256, 256)
+    g = jax.random.normal(rng, (nb, block))
+    r = jax.random.normal(jax.random.fold_in(rng, 1), (nb, block)) * 0.1
+    record("onebit_quant", (nb, block),
+           ops.onebit_quant, jax.jit(ref.onebit_quant_ref), g, r)
+
+    @jax.jit
+    def onebit_packed_ref(g, r):
+        s, sc, nr = ref.onebit_quant_ref(g, r)
+        return pack_signs(s.reshape(-1)), sc.astype(jnp.bfloat16), nr
+
+    record("onebit_quant_packed", (nb, block),
+           ops.onebit_quant_packed, onebit_packed_ref, g, r)
+
+    # topk (+ the fused encode+error-feedback variant)
+    kk = 4 if smoke else 8
+    x = jax.random.normal(rng, (nb, block))
+    record("topk_sparsify", (nb, block),
+           partial(ops.topk_sparsify, k=kk),
+           jax.jit(partial(ref.topk_sparsify_ref, k=kk)), x)
+
+    @jax.jit
+    def topk_ef_ref(g, r):
+        vals, idx, dense = ref.topk_sparsify_ref(g + r, kk)
+        return vals, idx, (g + r) - dense
+
+    record("topk_encode_ef", (nb, block),
+           partial(ops.topk_encode_ef, k=kk), topk_ef_ref, g, r)
+
+    # fused adam
+    n = 4096 if smoke else 1 << 18
+    p, gg, m = (jax.random.normal(jax.random.fold_in(rng, i), (n,))
+                for i in range(3))
+    vv = jnp.abs(jax.random.normal(jax.random.fold_in(rng, 3), (n,)))
+    record("fused_adam", (n,),
+           lambda p, g, m, v: ops.fused_adam(p, g, m, v, 1e-3, 1),
+           jax.jit(lambda p, g, m, v: ref.fused_adam_ref(p, g, m, v, 1e-3)),
+           p, gg, m, vv)
+
+    # mamba scan
+    b, l, dch, ns = (1, 16, 32, 8) if smoke else (2, 64, 128, 16)
+    u = jax.random.normal(rng, (b, l, dch)) * 0.5
+    delta = jax.nn.softplus(jax.random.normal(jax.random.fold_in(rng, 1),
+                                              (b, l, dch)))
+    a = -jnp.abs(jax.random.normal(jax.random.fold_in(rng, 2), (dch, ns)))
+    bb = jax.random.normal(jax.random.fold_in(rng, 3), (b, l, ns)) * 0.5
+    cc = jax.random.normal(jax.random.fold_in(rng, 4), (b, l, ns)) * 0.5
+    ds = jax.random.normal(jax.random.fold_in(rng, 5), (dch,))
+    record("mamba_scan", (b, l, dch, ns),
+           partial(ops.mamba_scan, d_block=32 if smoke else 64),
+           jax.jit(ref.mamba_scan_ref), u, delta, a, bb, cc, ds)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fabric exchange + compression breakeven
+# ---------------------------------------------------------------------------
+def bench_exchange(smoke: bool, iters: int, warmup: int):
+    import jax
+    import jax.numpy as jnp
+    from repro.core.comm import LocalComm
+    from repro.core.compression import get_compressor
+    from repro.core.fabric import Fabric
+
+    w = 4
+    comm = LocalComm(w)
+    sizes = [1 << 14] if smoke else [1 << 16, 1 << 20]
+    comps = [("none", None),
+             ("onebit", get_compressor("onebit")),
+             ("int8", get_compressor("int8")),
+             ("topk", get_compressor("topk", ratio=0.01, block=1024))]
+    rng = jax.random.PRNGKey(0)
+    rows, breakeven = [], []
+    for n in sizes:
+        tree = {"g": jax.random.normal(rng, (w, n))}
+        res = {"g": jnp.zeros((w, n), jnp.float32)}
+        t_none = bytes_none = None
+        for cname, comp in comps:
+            fused_modes = [True] if comp is None or comp.fused_encode is None \
+                else [True, False]
+            for fused in fused_modes:
+                fab = Fabric(comm, fused=fused)
+                step = jax.jit(lambda t, r, fab=fab, comp=comp:
+                               fab.exchange(t, r, comp))
+                st = _stats_ms(step, tree, res, iters=iters, warmup=warmup)
+                nbytes = fab.wire_bytes(tree, comp)
+                rows.append({"compressor": cname, "n": n, "fused": fused,
+                             "wire_bytes": nbytes, **st})
+                emit(f"timing/exchange/{cname}/n{n}/"
+                     + ("fused" if fused else "jnp"),
+                     st["median_ms"] * 1e3, f"wire_bytes={nbytes:.0f}")
+                if cname == "none":
+                    t_none, bytes_none = st["median_ms"], nbytes
+                elif fused:
+                    over = st["median_ms"] - t_none
+                    saved = bytes_none - nbytes
+                    bw = (saved / (over / 1e3)) / 1e9 if over > 0 \
+                        else float("inf")
+                    breakeven.append({
+                        "compressor": cname, "n": n,
+                        "bytes_none": bytes_none, "bytes_comp": nbytes,
+                        "t_none_ms": t_none, "t_comp_ms": st["median_ms"],
+                        "encode_overhead_ms": over,
+                        "breakeven_gbps": bw})
+                    emit(f"timing/breakeven/{cname}/n{n}", over * 1e3,
+                         f"breakeven_gbps={bw:.3f}")
+    return rows, breakeven
+
+
+# ---------------------------------------------------------------------------
+# fused vs unfused Adam on flat buckets (the ZeRO-1 update boundary)
+# ---------------------------------------------------------------------------
+def bench_optimizer(smoke: bool, iters: int, warmup: int):
+    import jax
+    from repro.optim import adam
+
+    n = (1 << 12) if smoke else (1 << 18)
+    rng = jax.random.PRNGKey(0)
+    buckets = {"b0": jax.random.normal(rng, (n,)),
+               "b1": jax.random.normal(jax.random.fold_in(rng, 1), (n,))}
+    grads = jax.tree.map(
+        lambda p: jax.random.normal(jax.random.fold_in(rng, 2), p.shape),
+        buckets)
+    rows = []
+    for impl, fused in (("adam", False), ("adam_fused", True)):
+        opt = adam(1e-3, fused=fused)
+        st0 = opt.init(buckets)
+        step = jax.jit(lambda g, s, p: opt.update(g, s, p, 0))
+        st = _stats_ms(step, grads, st0, buckets, iters=iters, warmup=warmup)
+        rows.append({"impl": impl, "n_per_bucket": n, "buckets": 2, **st})
+        emit(f"timing/optimizer/{impl}", st["median_ms"] * 1e3,
+             f"n_per_bucket={n}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# driver + schema validation
+# ---------------------------------------------------------------------------
+def run(smoke=None):
+    import jax
+
+    if smoke is None:
+        smoke = os.environ.get("BENCH_TIMING_SMOKE", "") not in ("", "0")
+    iters, warmup = (3, 1) if smoke else (20, 3)
+    report = {
+        "meta": {
+            "schema": 1,
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0].device_kind),
+            "jax": jax.__version__,
+            "smoke": bool(smoke),
+            "iters": iters,
+            "warmup": warmup,
+            "note": ("off-TPU/GPU the Pallas kernels run in interpret "
+                     "mode; compare numbers within a backend only"),
+        },
+        "train_step": bench_train_step(smoke, iters, warmup),
+        "kernels": bench_kernels(smoke, iters, warmup),
+        "optimizer": bench_optimizer(smoke, iters, warmup),
+    }
+    report["exchange"], report["breakeven"] = \
+        bench_exchange(smoke, iters, warmup)
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+    emit("timing/report", 0.0, f"out={os.path.basename(OUT)};smoke={smoke}")
+    return report
+
+
+def validate(path=OUT):
+    """Schema check for BENCH_timing.json; raises ValueError on violation
+    (CI runs this against both the committed and the regenerated file)."""
+    if not os.path.exists(path):
+        raise ValueError(f"{path} is missing — run "
+                         "`python -m benchmarks.run timing`")
+    with open(path) as f:
+        report = json.load(f)
+    for key in ("meta", "train_step", "kernels", "exchange", "breakeven",
+                "optimizer"):
+        if key not in report:
+            raise ValueError(f"BENCH_timing.json: missing section {key!r}")
+    if "backend" not in report["meta"]:
+        raise ValueError("meta.backend missing")
+    by_strategy = {}
+    for row in report["train_step"]:
+        for field in ("strategy", "precision", "median_ms"):
+            if field not in row:
+                raise ValueError(f"train_step row missing {field!r}: {row}")
+        if not row["median_ms"] > 0:
+            raise ValueError(f"non-positive train_step timing: {row}")
+        by_strategy.setdefault(row["strategy"], set()).add(row["precision"])
+    full = [s for s, precs in by_strategy.items()
+            if {"f32", "bf16"} <= precs]
+    if len(full) < 3:
+        raise ValueError("need >= 3 strategies timed at both precisions, "
+                         f"got {sorted(full)}")
+    for name in KERNELS:
+        row = report["kernels"].get(name)
+        if row is None:
+            raise ValueError(f"kernels section missing {name!r}")
+        if not (row.get("kernel_ms", 0) > 0 and row.get("ref_ms", 0) > 0):
+            raise ValueError(f"non-positive kernel timing for {name!r}")
+    comps = {r["compressor"] for r in report["breakeven"]}
+    if not {"onebit", "topk"} <= comps:
+        raise ValueError(f"breakeven table incomplete: {sorted(comps)}")
+    fused = {r["compressor"] for r in report["exchange"] if r.get("fused")}
+    if not {"onebit", "topk"} <= fused:
+        raise ValueError("exchange section missing fused onebit/topk rows")
+    return report
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--validate" in argv:
+        report = validate()
+        n = len(report["train_step"])
+        print(f"BENCH_timing.json OK: {n} train-step rows, "
+              f"{len(report['kernels'])} kernels, "
+              f"{len(report['breakeven'])} breakeven rows "
+              f"(smoke={report['meta']['smoke']})")
+        return
+    run(smoke=True if "--smoke" in argv else None)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,5 +22,22 @@ def time_fn(fn, *args, iters: int = 20, warmup: int = 3):
     return times[len(times) // 2] * 1e6
 
 
+def time_stats(fn, *args, iters: int = 20, warmup: int = 3):
+    """(median, min, max) wall µs per call — same protocol as ``time_fn``
+    (warmup calls cover compilation, every timed call blocks on the full
+    output pytree) but keeping the spread for BENCH_timing.json."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return (times[len(times) // 2] * 1e6, times[0] * 1e6, times[-1] * 1e6)
+
+
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")

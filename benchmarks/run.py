@@ -8,35 +8,42 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_staleness    — §3 staleness ⇒ implicit momentum (Mitliagkas)
   bench_scaling      — §2.2.4 gradient-set sizes / wire volumes per arch
   bench_roofline     — dry-run roofline table (deliverable g)
+  bench_timing       — measured wall-clock tier (DESIGN.md §9)
 """
 
 from __future__ import annotations
 
+import importlib
+import os
 import sys
 import traceback
 
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) at
+# sys.path[0]; the benchmarks package needs the root
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+# run order; each entry is benchmarks/bench_<name>.py
+MODULES = ("strategies", "compression", "consistency", "staleness",
+           "scaling", "ablation", "roofline", "timing")
+
 
 def main() -> None:
-    from benchmarks import (bench_ablation, bench_compression,
-                            bench_consistency, bench_roofline, bench_scaling,
-                            bench_staleness, bench_strategies)
-
-    print("name,us_per_call,derived")
-    mods = [
-        ("strategies", bench_strategies),
-        ("compression", bench_compression),
-        ("consistency", bench_consistency),
-        ("staleness", bench_staleness),
-        ("scaling", bench_scaling),
-        ("ablation", bench_ablation),
-        ("roofline", bench_roofline),
-    ]
     only = sys.argv[1] if len(sys.argv) > 1 else None
+    if only is not None and only not in MODULES:
+        print(f"unknown benchmark {only!r}; valid names: "
+              + ", ".join(MODULES), file=sys.stderr)
+        raise SystemExit(2)
+    print("name,us_per_call,derived")
     failed = 0
-    for name, mod in mods:
+    for name in MODULES:
         if only and only != name:
             continue
         try:
+            # import inside the loop: one module failing to IMPORT still
+            # gets its ERROR row and the sweep continues
+            mod = importlib.import_module(f"benchmarks.bench_{name}")
             mod.run()
         except Exception:  # noqa: BLE001 — keep the harness sweeping
             failed += 1

@@ -15,9 +15,14 @@ The communicated object is ``decode(encode(·))`` — strategies communicate
 the *decompressed* tensor (wire format is an implementation detail of the
 transport; the wire-size accounting lives in ``wire_bytes``).
 
-The hot loops have Pallas TPU kernels in ``repro/kernels`` (onebit_quant,
-topk_sparsify); this module dispatches to the pure-jnp reference, which is
-numerically identical (kernels are validated against it in tests).
+The hot loops have Pallas kernels in ``repro/kernels`` (onebit_quant,
+topk_sparsify).  ``compress``/``decompress`` are the pure-jnp reference;
+``fused_encode`` (when present) is the production encode+error-feedback
+round dispatched to the fused kernel — one VMEM pass computing
+``t = g + r``, the narrowed wire arrays (packed sign bytes / top-k
+values+indices) and the residual update, bitwise identical to the jnp
+path (tests/test_fused_compression.py).  ``core/fabric.py`` dispatches
+to it by default.
 """
 
 from __future__ import annotations
@@ -28,6 +33,7 @@ from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+from jax import lax
 
 
 @dataclass(frozen=True)
@@ -35,7 +41,13 @@ class Compressor:
     name: str
     compress: Callable  # (x) -> (wire, meta)  [wire: what's transmitted]
     decompress: Callable  # (wire, meta, shape, dtype) -> x_hat
-    wire_bits_per_element: float  # accounting for benchmarks
+    wire_bits_per_element: float  # analytic bits/elem (see wire_bytes)
+    # (g, r) flat f32 arrays of shape lead + (n,) -> (narrow_arrs, widen,
+    # new_residual): the fused kernel encode+error-feedback round.
+    # ``narrow_arrs`` match the _narrow_wire output for compress(g + r)
+    # byte-for-byte; ``widen(arrs)`` maps ONE replica's narrow arrays back
+    # to what ``decompress`` expects.  None -> no fused path (jnp only).
+    fused_encode: Optional[Callable] = None
 
 
 # ---------------------------------------------------------------------------
@@ -74,7 +86,9 @@ def onebit_compressor(block: int = 256) -> Compressor:
 
     # 1 bit per element + one fp32 scale per block
     return Compressor("onebit", compress, decompress,
-                      wire_bits_per_element=1.0 + 32.0 / block)
+                      wire_bits_per_element=1.0 + 32.0 / block,
+                      fused_encode=(_fused_onebit(block)
+                                    if block % 8 == 0 else None))
 
 
 # ---------------------------------------------------------------------------
@@ -131,7 +145,80 @@ def topk_compressor(ratio: float = 0.01, block: int = 1024) -> Compressor:
 
     # k values (32b) + k indices (16b suffices for block≤64k) per block
     return Compressor(f"topk{ratio}", compress, decompress,
-                      wire_bits_per_element=ratio * (32.0 + 16.0))
+                      wire_bits_per_element=ratio * (32.0 + 16.0),
+                      fused_encode=_fused_topk(k, block))
+
+
+# ---------------------------------------------------------------------------
+# fused kernel encode+error-feedback rounds (the production Fabric path)
+# ---------------------------------------------------------------------------
+def _kernel_rows(rows: int) -> int:
+    """rows_per_step for the block-row kernels: interpret mode unrolls the
+    Pallas grid at trace time, so cap the grid at ~64 steps while keeping
+    the (8, 128) sublane alignment."""
+    per_step = -(-rows // 64)  # ceil: grid ≤ 64
+    return max(8, -(-per_step // 8) * 8)  # round up to sublane multiple
+
+
+def _fold_blocks(g, r, block: int):
+    """lead + (n,) f32 pair → (rows, block) kernel inputs.  Replica lead
+    axes fold into kernel rows AFTER per-replica zero-padding to a block
+    multiple, so a compression block never mixes values from two
+    replicas (the same guarantee as the vmapped jnp path)."""
+    n = g.shape[-1]
+    pad = (-n) % block
+    g2 = g.astype(jnp.float32).reshape((-1, n))
+    r2 = r.astype(jnp.float32).reshape((-1, n))
+    if pad:
+        g2 = jnp.pad(g2, ((0, 0), (0, pad)))
+        r2 = jnp.pad(r2, ((0, 0), (0, pad)))
+    nb = (n + pad) // block
+    rows = g2.shape[0] * nb
+    return g2.reshape(rows, block), r2.reshape(rows, block), nb, pad
+
+
+def _unfold_residual(newr, lead, n: int, pad: int):
+    """Kernel residual rows → lead + (n,) (padded tail dropped — the jnp
+    path never materializes it either)."""
+    return newr.reshape((-1, n + pad))[:, :n].reshape(lead + (n,))
+
+
+def _fused_onebit(block: int):
+    def fused_encode(g, r):
+        from repro.kernels import ops
+        lead, n = g.shape[:-1], g.shape[-1]
+        gb, rb, nb, pad = _fold_blocks(g, r, block)
+        packed, scale, newr = ops.onebit_quant_packed(
+            gb, rb, rows_per_step=_kernel_rows(gb.shape[0]))
+        arrs = [packed.reshape(lead + (nb * (block // 8),)),
+                scale.reshape(lead + (nb, 1))]
+
+        def widen(a):  # one replica's narrow arrays → decompress wire
+            p, s = a
+            sign = unpack_signs(p.reshape(-1), nb * block)
+            return sign.reshape(nb, block), s.astype(jnp.float32)
+
+        return arrs, widen, _unfold_residual(newr, lead, n, pad)
+
+    return fused_encode
+
+
+def _fused_topk(k: int, block: int):
+    def fused_encode(g, r):
+        from repro.kernels import ops
+        lead, n = g.shape[:-1], g.shape[-1]
+        gb, rb, nb, pad = _fold_blocks(g, r, block)
+        vals, idx, newr = ops.topk_encode_ef(
+            gb, rb, k, rows_per_step=_kernel_rows(gb.shape[0]))
+        arrs = [vals.reshape(lead + (nb, k)),
+                idx.astype(jnp.uint16).reshape(lead + (nb, k))]
+
+        def widen(a):
+            return a[0], a[1].astype(jnp.int32)
+
+        return arrs, widen, _unfold_residual(newr, lead, n, pad)
+
+    return fused_encode
 
 
 REGISTRY = {
@@ -176,9 +263,15 @@ def ef_compress_tree(comp: Compressor, grads, residual):
 
 
 def wire_bytes(comp: Compressor, tree) -> float:
-    """Bytes on the wire to ship ``tree`` once under ``comp``."""
-    n = sum(x.size for x in jax.tree.leaves(tree))
-    return n * comp.wire_bits_per_element / 8.0
+    """EXACT bytes on the wire to ship ``tree`` once under ``comp``:
+    each leaf is compressed independently (the leaf-wise contract of
+    ``ef_compress_tree``/``dgc_compress_tree``), so padded tail blocks
+    ship their full scale/index payloads and are charged here.  Derived
+    from the actual packing code (``packed_nbytes``), matching
+    ``fabric.wire_nbytes`` by construction; ``wire_bits_per_element``
+    remains the analytic (padding-free) figure for scaling models."""
+    return float(sum(packed_nbytes(comp, x.size)
+                     for x in jax.tree.leaves(tree)))
 
 
 # ---------------------------------------------------------------------------
@@ -218,8 +311,10 @@ def dgc_compress_tree(comp: Compressor, grads, state, momentum: float = 0.9):
 
 
 def pack_signs(sign_int8):
-    """True 1-bit wire format: pack 8 int8 signs into one uint8 (the step
-    the Pallas kernel leaves to XLA; DESIGN.md §2 table)."""
+    """True 1-bit wire format: pack 8 int8 signs into one uint8.  This is
+    the jnp reference codec; the fused kernel (onebit_quant_packed) emits
+    the same bytes from inside VMEM — no separate XLA pack op on the
+    fused Fabric path (DESIGN.md §2 table)."""
     bits = (sign_int8 > 0).astype(jnp.uint8).reshape(-1, 8)
     weights = jnp.asarray([1, 2, 4, 8, 16, 32, 64, 128], jnp.uint8)
     return jnp.sum(bits * weights, axis=-1).astype(jnp.uint8)
@@ -230,3 +325,99 @@ def unpack_signs(packed, n):
     bits = (packed[:, None] & weights) > 0
     sign = jnp.where(bits.reshape(-1)[:n], 1, -1).astype(jnp.int8)
     return sign
+
+
+# ---------------------------------------------------------------------------
+# wire codecs: compressor wire tuple ↔ one packed uint8 buffer.
+# The narrowing IS the wire format (packed sign bits, bf16 scales, uint16
+# top-k indices); core/fabric.py ships exactly these bytes per bucket.
+# ---------------------------------------------------------------------------
+def _to_bytes(x):
+    """Any array → flat uint8 view."""
+    if x.dtype == jnp.uint8:
+        return x.reshape(-1)
+    return lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
+
+
+def _from_bytes(buf, shape, dtype):
+    dtype = jnp.dtype(dtype)
+    if dtype.itemsize == 1:
+        seg = buf.reshape(shape)
+        return seg if dtype == jnp.uint8 \
+            else lax.bitcast_convert_type(seg, dtype)
+    return lax.bitcast_convert_type(
+        buf.reshape(tuple(shape) + (dtype.itemsize,)), dtype)
+
+
+def _narrow_wire(name: str, wire):
+    """Narrow a compressor's wire tuple to its true on-the-wire dtypes.
+
+    Returns (arrays, widen) where ``widen`` maps the narrowed arrays back
+    to the structure ``Compressor.decompress`` expects.  Unknown
+    compressors fall through to an identity codec."""
+    if name == "onebit":
+        sign, scale = wire
+        n = sign.size
+        flat = sign.reshape(-1)
+        pad = (-n) % 8
+        if pad:
+            flat = jnp.concatenate([flat, jnp.ones((pad,), flat.dtype)])
+        packed = pack_signs(flat)
+
+        def widen(arrs):
+            p, s = arrs
+            return (unpack_signs(p, n).reshape(sign.shape),
+                    s.astype(jnp.float32))
+
+        return [packed, scale.astype(jnp.bfloat16)], widen
+    if name == "int8":
+        q, scale = wire
+
+        def widen(arrs):
+            return (arrs[0], arrs[1].astype(jnp.float32))
+
+        return [q, scale.astype(jnp.bfloat16)], widen
+    if name.startswith("topk"):
+        taken, idx = wire  # blocks ≤ 64k ⇒ uint16 indices
+
+        def widen(arrs):
+            return (arrs[0], arrs[1].astype(jnp.int32))
+
+        return [taken, idx.astype(jnp.uint16)], widen
+    arrs, tdef = jax.tree.flatten(wire)
+    return arrs, lambda a: jax.tree.unflatten(tdef, list(a))
+
+
+def _pack(arrs):
+    """Arrays → (uint8 buffer, static segment specs)."""
+    bufs = [_to_bytes(a) for a in arrs]
+    specs = [(a.shape, a.dtype, b.shape[-1]) for a, b in zip(arrs, bufs)]
+    buf = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs, axis=-1)
+    return buf, specs
+
+
+def _unpack(buf, specs):
+    out, off = [], 0
+    for shape, dtype, nb in specs:
+        seg = lax.slice_in_dim(buf, off, off + nb, axis=buf.ndim - 1)
+        out.append(_from_bytes(seg, shape, dtype))
+        off += nb
+    return out
+
+
+def packed_nbytes(comp: Optional[Compressor], n: int) -> int:
+    """Exact packed-wire bytes to ship ``n`` f32 elements once under
+    ``comp`` — derived from the actual packing code via eval_shape, so it
+    equals the size of the uint8 buffer an exchange really gathers
+    (padded tail blocks included)."""
+    if comp is None or comp.name == "none":
+        return 4 * n
+
+    def f(t):
+        wire, _ = comp.compress(t)
+        arrs, _ = _narrow_wire(comp.name, wire)
+        buf, _ = _pack(arrs)
+        return buf
+
+    return int(jax.eval_shape(
+        f, jax.ShapeDtypeStruct((n,), jnp.float32)).shape[0])

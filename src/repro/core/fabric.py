@@ -36,7 +36,9 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core.comm import Comm, ShardComm
-from repro.core.compression import Compressor, pack_signs, unpack_signs
+from repro.core.compression import (Compressor, _from_bytes,  # noqa: F401
+                                    _narrow_wire, _pack, _to_bytes, _unpack,
+                                    pack_signs, packed_nbytes, unpack_signs)
 
 DEFAULT_BUCKET_BYTES = 4 << 20  # 4 MiB of f32 per bucket
 
@@ -176,102 +178,21 @@ class PartitionedLayout:
 
 
 # ---------------------------------------------------------------------------
-# wire codecs: compressor wire tuple ↔ one packed uint8 buffer
+# wire accounting (codec itself lives in core/compression.py)
 # ---------------------------------------------------------------------------
-def _to_bytes(x):
-    """Any array → flat uint8 view."""
-    if x.dtype == jnp.uint8:
-        return x.reshape(-1)
-    return lax.bitcast_convert_type(x, jnp.uint8).reshape(-1)
-
-
-def _from_bytes(buf, shape, dtype):
-    dtype = jnp.dtype(dtype)
-    if dtype.itemsize == 1:
-        seg = buf.reshape(shape)
-        return seg if dtype == jnp.uint8 \
-            else lax.bitcast_convert_type(seg, dtype)
-    return lax.bitcast_convert_type(
-        buf.reshape(tuple(shape) + (dtype.itemsize,)), dtype)
-
-
-def _narrow_wire(name: str, wire):
-    """Narrow a compressor's wire tuple to its true on-the-wire dtypes.
-
-    Returns (arrays, widen) where ``widen`` maps the narrowed arrays back
-    to the structure ``Compressor.decompress`` expects.  The narrowing is
-    the wire format: packed sign bits, bf16 scales, uint16 top-k indices.
-    Unknown compressors fall through to an identity codec."""
-    if name == "onebit":
-        sign, scale = wire
-        n = sign.size
-        flat = sign.reshape(-1)
-        pad = (-n) % 8
-        if pad:
-            flat = jnp.concatenate([flat, jnp.ones((pad,), flat.dtype)])
-        packed = pack_signs(flat)
-
-        def widen(arrs):
-            p, s = arrs
-            return (unpack_signs(p, n).reshape(sign.shape),
-                    s.astype(jnp.float32))
-
-        return [packed, scale.astype(jnp.bfloat16)], widen
-    if name == "int8":
-        q, scale = wire
-
-        def widen(arrs):
-            return (arrs[0], arrs[1].astype(jnp.float32))
-
-        return [q, scale.astype(jnp.bfloat16)], widen
-    if name.startswith("topk"):
-        taken, idx = wire  # blocks ≤ 64k ⇒ uint16 indices
-
-        def widen(arrs):
-            return (arrs[0], arrs[1].astype(jnp.int32))
-
-        return [taken, idx.astype(jnp.uint16)], widen
-    arrs, tdef = jax.tree.flatten(wire)
-    return arrs, lambda a: jax.tree.unflatten(tdef, list(a))
-
-
-def _pack(arrs):
-    """Arrays → (uint8 buffer, static segment specs)."""
-    bufs = [_to_bytes(a) for a in arrs]
-    specs = [(a.shape, a.dtype, b.shape[-1]) for a, b in zip(arrs, bufs)]
-    buf = bufs[0] if len(bufs) == 1 else jnp.concatenate(bufs, axis=-1)
-    return buf, specs
-
-
-def _unpack(buf, specs):
-    out, off = [], 0
-    for shape, dtype, nb in specs:
-        seg = lax.slice_in_dim(buf, off, off + nb, axis=buf.ndim - 1)
-        out.append(_from_bytes(seg, shape, dtype))
-        off += nb
-    return out
-
-
 def wire_nbytes(compressor: Optional[Compressor], n: int,
                 wire_dtype=jnp.float32) -> int:
     """Exact packed-wire size (bytes) to ship ``n`` f32 elements once.
 
-    Derived from the actual packing code via eval_shape, so it equals the
-    size of the uint8 buffer a ShardComm exchange really gathers.  An
-    uncompressed exchange ships raw ``wire_dtype`` buckets (2 bytes/elem
-    under the bf16 policy); compressors own their packed format and ignore
+    Derived from the actual packing code via eval_shape
+    (``compression.packed_nbytes``), so it equals the size of the uint8
+    buffer a ShardComm exchange really gathers.  An uncompressed exchange
+    ships raw ``wire_dtype`` buckets (2 bytes/elem under the bf16
+    policy); compressors own their packed format and ignore
     ``wire_dtype``."""
     if compressor is None or compressor.name == "none":
         return jnp.dtype(wire_dtype).itemsize * n
-
-    def f(t):
-        wire, _ = compressor.compress(t)
-        arrs, _ = _narrow_wire(compressor.name, wire)
-        buf, _ = _pack(arrs)
-        return buf
-
-    return int(jax.eval_shape(
-        f, jax.ShapeDtypeStruct((n,), jnp.float32)).shape[0])
+    return packed_nbytes(compressor, n)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +207,7 @@ class Fabric:
     checkpoint and sharding-spec machinery is untouched."""
 
     def __init__(self, comm: Comm, bucket_bytes: int = DEFAULT_BUCKET_BYTES,
-                 wire_dtype=None):
+                 wire_dtype=None, fused: bool = True):
         self.comm = comm
         self.bucket_bytes = bucket_bytes
         # dtype of the UNCOMPRESSED wire (PrecisionPolicy.wire_dtype):
@@ -294,6 +215,10 @@ class Fabric:
         # default) leaves every path bit-for-bit unchanged.
         self.wire_dtype = (jnp.dtype(wire_dtype) if wire_dtype is not None
                            else jnp.dtype(jnp.float32))
+        # dispatch compressed exchanges through the fused Pallas
+        # encode+error-feedback kernels when the compressor has one
+        # (Compressor.fused_encode) — bitwise identical to the jnp path
+        self.fused = fused
 
     def _wire_cast(self, buckets):
         """Round flat f32 buckets to the wire dtype.  On the stacked
@@ -451,6 +376,36 @@ class Fabric:
         (mean,) = self.comm.all_mean([dec_self])
         return mean, dec_self
 
+    def _bucket_ef_round(self, g, r, compressor):
+        """One full compressed error-feedback round for a flat bucket:
+        (mean of per-replica decodes, own decode, new residual).
+
+        Fused path (the default): ``compressor.fused_encode`` runs the
+        whole encode — t = g + r, narrow wire arrays, residual update —
+        as ONE Pallas kernel pass; the packed byte buffer shipped is
+        byte-identical to the jnp path's, so both realizations stay
+        bitwise equal (tests/test_fused_compression.py)."""
+        fe = compressor.fused_encode if self.fused else None
+        if fe is None:
+            t = g + r
+            mean, dec_self = self._bucket_mean_compressed(t, compressor)
+            return mean, dec_self, t - dec_self
+        arrs, widen, new_r = fe(g, r)
+        n = g.shape[-1]
+
+        def dec(a):  # one replica's narrow arrays → decoded flat bucket
+            return compressor.decompress(widen(a), None, (n,), jnp.float32)
+
+        if isinstance(self.comm, ShardComm):
+            buf, specs = _pack(arrs)
+            (gathered,) = self.comm.all_gather([buf])
+            decs = [dec(_unpack(gathered[i], specs))
+                    for i in range(self.comm.size)]
+            return sum(decs) / self.comm.size, dec(arrs), new_r
+        dec_self = self._vmap_replicas(dec)(arrs)
+        (mean,) = self.comm.all_mean([dec_self])
+        return mean, dec_self, new_r
+
     # -- flat-bucket gradient accumulation ----------------------------------
     # The microbatched train step (train/loop.py, DESIGN.md §8) keeps its
     # gradient accumulator in BUCKET space: one flatten per microbatch
@@ -502,10 +457,9 @@ class Fabric:
         rb = lay.bucketize(residual)
         g_out, r_out = [], []
         for g, r in zip(buckets, rb):
-            t = g + r
-            mean, dec_self = self._bucket_mean_compressed(t, compressor)
+            mean, _, new_r = self._bucket_ef_round(g, r, compressor)
             g_out.append(mean)
-            r_out.append(t - dec_self)
+            r_out.append(new_r)
         return (lay.debucketize(g_out),
                 lay.debucketize(r_out, cast=False),
                 self.metrics(self.wire_bytes(lay, compressor), events))
@@ -523,12 +477,11 @@ class Fabric:
         g_out, u_out, r_out = [], [], []
         for g, u, r in zip(gb, ub, rb):
             u1 = momentum * u + g
-            t = r + u1
-            mean, sent = self._bucket_mean_compressed(t, compressor)
+            mean, sent, new_r = self._bucket_ef_round(u1, r, compressor)
             mask = (sent != 0).astype(jnp.float32)
             g_out.append(mean)
             u_out.append(u1 * (1 - mask))
-            r_out.append(t - sent)
+            r_out.append(new_r)
         new_state = {"velocity": lay.debucketize(u_out, cast=False),
                      "residual": lay.debucketize(r_out, cast=False)}
         return (lay.debucketize(g_out), new_state,
@@ -627,10 +580,20 @@ class Fabric:
         rb = lay.bucketize(residual)
         g_out, r_out = [], []
         for g, r in zip(gb, rb):
-            t = g + r
-            dec = self._self_decode(t, compressor)
+            fe = compressor.fused_encode if self.fused else None
+            if fe is None:
+                t = g + r
+                dec = self._self_decode(t, compressor)
+                g_out.append(dec)
+                r_out.append(t - dec)
+                continue
+            arrs, widen, new_r = fe(g, r)
+            n = g.shape[-1]
+            dec = self._vmap_replicas(
+                lambda a, widen=widen, n=n: compressor.decompress(
+                    widen(a), None, (n,), jnp.float32))(arrs)
             g_out.append(dec)
-            r_out.append(t - dec)
+            r_out.append(new_r)
         return (lay.debucketize(g_out),
                 lay.debucketize(r_out, cast=False),
                 self.wire_bytes(lay, compressor))

@@ -13,6 +13,7 @@ the window, the sub-quadratic property the long-context shapes need).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -83,8 +84,10 @@ def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
                                              "block_k", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = -1,
                     block_q: int = 128, block_k: int = 128,
-                    interpret: bool = True):
+                    interpret: Optional[bool] = None):
     """q,k,v: (B, H, L, D) → (B, H, L, D)."""
+    from repro.kernels.ops import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
     b, h, l, d = q.shape
     lk = k.shape[2]
     block_q = min(block_q, l)

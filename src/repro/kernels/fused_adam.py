@@ -9,6 +9,7 @@ factors are precomputed on the host side of the call (scalar prefetch).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +33,10 @@ def _adam_kernel(c_ref, p_ref, g_ref, m_ref, v_ref,
 @functools.partial(jax.jit,
                    static_argnames=("b1", "b2", "eps", "block", "interpret"))
 def fused_adam(p, g, m, v, lr, t, b1=0.9, b2=0.999, eps=1e-8,
-               block: int = 4096, interpret: bool = True):
+               block: int = 4096, interpret: Optional[bool] = None):
     """p,g,m,v: (N,) flat; lr scalar; t: 1-based step. → (p', m', v')."""
+    from repro.kernels.ops import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
     n = p.shape[0]
     pad = (-n) % block
     if pad:

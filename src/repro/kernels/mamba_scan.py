@@ -18,6 +18,7 @@ Grid: (batch, D/d_blk); block shapes keep the working set
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,9 +49,11 @@ def _scan_kernel(u_ref, delta_ref, a_ref, b_ref, c_ref, dskip_ref,
 
 @functools.partial(jax.jit, static_argnames=("d_block", "interpret"))
 def mamba_scan(u, delta, a, b, c, d_skip, d_block: int = 128,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
     """u, delta: (B, L, D); a: (D, N); b, c: (B, L, N); d_skip: (D,).
     Returns (y (B, L, D), h_last (B, D, N))."""
+    from repro.kernels.ops import default_interpret
+    interpret = default_interpret() if interpret is None else interpret
     bsz, l, d = u.shape
     n = a.shape[1]
     d_block = min(d_block, d)

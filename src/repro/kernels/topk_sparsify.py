@@ -13,12 +13,20 @@ with no data-dependent control flow.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG = -1.0
+
+
+def _resolve(interpret):
+    if interpret is not None:
+        return interpret
+    from repro.kernels.ops import default_interpret
+    return default_interpret()
 
 
 def _topk_kernel(x_ref, vals_ref, idx_ref, dense_ref, *, k: int, block: int):
@@ -45,8 +53,10 @@ def _topk_kernel(x_ref, vals_ref, idx_ref, dense_ref, *, k: int, block: int):
 
 
 @functools.partial(jax.jit, static_argnames=("k", "rows_per_step", "interpret"))
-def topk_sparsify(x, k: int, rows_per_step: int = 8, interpret: bool = True):
+def topk_sparsify(x, k: int, rows_per_step: int = 8,
+                  interpret: Optional[bool] = None):
     """x: (nblocks, block) → (vals (nb,k), idx (nb,k) int32, dense (nb,block))."""
+    interpret = _resolve(interpret)
     nb, block = x.shape
     pad = (-nb) % rows_per_step
     if pad:
@@ -71,3 +81,65 @@ def topk_sparsify(x, k: int, rows_per_step: int = 8, interpret: bool = True):
         interpret=interpret,
     )(x)
     return vals[:nb], idx[:nb], dense[:nb]
+
+
+def _topk_ef_kernel(g_ref, r_ref, vals_ref, idx_ref, newr_ref,
+                    *, k: int, block: int):
+    """Fused DGC round: t = g + r, block-local top-k of |t| (same
+    (max, lowest-index, mask) iteration as ``_topk_kernel``), and the
+    error-feedback residual t − dense(sent) — one VMEM pass."""
+    t = g_ref[...].astype(jnp.float32) + r_ref[...]
+    mag = jnp.abs(t)
+    dense = jnp.zeros_like(t)
+    cols = jax.lax.broadcasted_iota(jnp.int32, mag.shape, 1)
+
+    def body(i, carry):
+        mag_c, dense_c = carry
+        m = jnp.max(mag_c, axis=-1, keepdims=True)  # (rows,1)
+        hit = mag_c == m
+        first = jnp.min(jnp.where(hit, cols, block), axis=-1, keepdims=True)
+        sel = cols == first
+        vals_ref[:, i] = jnp.sum(jnp.where(sel, t, 0.0), axis=-1)
+        idx_ref[:, i] = first[:, 0]
+        dense_c = jnp.where(sel, t, dense_c)
+        mag_c = jnp.where(sel, NEG, mag_c)
+        return mag_c, dense_c
+
+    mag, dense = jax.lax.fori_loop(0, k, body, (mag, dense))
+    newr_ref[...] = t - dense
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rows_per_step", "interpret"))
+def topk_encode_ef(g, r, k: int, rows_per_step: int = 8,
+                   interpret: Optional[bool] = None):
+    """g, r: (nblocks, block) → (vals (nb,k) f32, idx (nb,k) int32,
+    new_r (nb,block) f32).  The production Fabric-path variant of
+    ``topk_sparsify``: the target t = g + r and the residual update
+    happen inside the kernel, so the whole encode+error-feedback round
+    is one pass over VMEM."""
+    interpret = _resolve(interpret)
+    nb, block = g.shape
+    pad = (-nb) % rows_per_step
+    if pad:
+        g = jnp.pad(g, ((0, pad), (0, 0)))
+        r = jnp.pad(r, ((0, pad), (0, 0)))
+    nbp = nb + pad
+    grid = (nbp // rows_per_step,)
+    kernel = functools.partial(_topk_ef_kernel, k=k, block=block)
+    vals, idx, newr = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((rows_per_step, block), lambda i: (i, 0))] * 2,
+        out_specs=[
+            pl.BlockSpec((rows_per_step, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_step, k), lambda i: (i, 0)),
+            pl.BlockSpec((rows_per_step, block), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nbp, k), jnp.float32),
+            jax.ShapeDtypeStruct((nbp, k), jnp.int32),
+            jax.ShapeDtypeStruct((nbp, block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, r)
+    return vals[:nb], idx[:nb], newr[:nb]

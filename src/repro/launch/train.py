@@ -63,6 +63,10 @@ def build_argparser():
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--optimizer", default="adam", choices=["adam", "sgd"])
+    ap.add_argument("--fused-adam", action="store_true",
+                    help="route the Adam update through the fused Pallas "
+                         "kernel (one VMEM pass per flat bucket — pairs "
+                         "with the ZeRO-1 shard-bucket update boundary)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--log-every", type=int, default=10)
@@ -99,9 +103,10 @@ def main(argv=None):
 
     comm = LocalComm(args.workers)
     strategy = strategy_from_args(args, policy)
-    opt = (adam if args.optimizer == "adam" else sgd)(
-        warmup_cosine(args.lr, warmup=max(1, args.steps // 20),
-                      total_steps=args.steps))
+    sched = warmup_cosine(args.lr, warmup=max(1, args.steps // 20),
+                          total_steps=args.steps)
+    opt = (adam(sched, fused=args.fused_adam) if args.optimizer == "adam"
+           else sgd(sched))
     dcfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq_len,
                       batch_per_worker=args.batch_per_worker, seed=args.seed)
 

@@ -27,6 +27,7 @@ class Request:
     generated: list = field(default_factory=list)
     done: bool = False
     truncated: bool = False  # prompt tail-clipped to the engine's max_seq
+    preempted: bool = False  # evicted in-flight by run(max_steps=...)
 
 
 class DecodeEngine:
@@ -69,6 +70,13 @@ class DecodeEngine:
         # prompt; keep one token and let the cache-full check finish the
         # slot after its single generated token
         limit = max(1, self.max_seq - 1)
+        if len(req.prompt) == 0:
+            # nothing to condition on and no first token to feed _admit
+            # (req.prompt[0] would raise): complete immediately with an
+            # empty generation instead of crashing the whole batch
+            req.done = True
+            self.finished.append(req)
+            return
         if len(req.prompt) > limit:
             req.prompt = np.asarray(req.prompt[-limit:])
             req.truncated = True
@@ -130,9 +138,22 @@ class DecodeEngine:
                 self.phase[i] = "idle"
 
     def run(self, max_steps: int = 100_000) -> List[Request]:
+        """Serve until the queue and all slots drain, or ``max_steps``
+        decode steps have run.  On early exit every in-flight slot is
+        DRAINED, not dropped: its request lands in ``finished`` with
+        ``preempted=True`` / ``done=False`` and whatever partial
+        generation it accumulated; the slot is freed so the engine stays
+        usable for fresh submissions."""
         while (self.queue or any(p != "idle" for p in self.phase)) \
                 and self.steps < max_steps:
             self.step()
+        for i in range(self.b):
+            req = self.slot[i]
+            if req is not None:
+                req.preempted = True
+                self.finished.append(req)
+                self.slot[i] = None
+                self.phase[i] = "idle"
         return self.finished
 
 

@@ -1,0 +1,59 @@
+"""Benchmark harness: run.py name filtering / import resilience, and the
+committed measured-timing artifact (DESIGN.md §9 schema)."""
+
+import json
+import os
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)  # the benchmarks/ package lives at repo root
+
+from benchmarks import run as bench_run  # noqa: E402
+from benchmarks.bench_timing import validate  # noqa: E402
+
+
+def test_run_unknown_name_exits_2_listing_valid_names(monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv", ["run.py", "bogus"])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 2
+    err = capsys.readouterr().err
+    assert "unknown benchmark" in err
+    for name in bench_run.MODULES:
+        assert name in err
+
+
+def test_run_import_failure_emits_error_row(monkeypatch, capsys):
+    """A module that fails at IMPORT still yields its ERROR CSV row and the
+    sweep exits 1 — the harness never dies mid-table."""
+    monkeypatch.setattr(bench_run, "MODULES", ("zzz_missing",))
+    monkeypatch.setattr(sys, "argv", ["run.py"])
+    with pytest.raises(SystemExit) as exc:
+        bench_run.main()
+    assert exc.value.code == 1
+    out = capsys.readouterr().out
+    assert "zzz_missing/ERROR,0,failed" in out
+    assert out.startswith("name,us_per_call,derived")
+
+
+def test_committed_timing_artifact_validates():
+    """The BENCH_timing.json checked into the repo satisfies the §9
+    schema: ≥3 strategies x both precisions, every kernel vs its
+    reference, and the compression breakeven table."""
+    validate()
+
+
+def test_timing_validate_rejects_malformed(tmp_path):
+    missing = tmp_path / "nope.json"
+    with pytest.raises(ValueError):
+        validate(str(missing))
+    bad = tmp_path / "BENCH_timing.json"
+    bad.write_text(json.dumps({"meta": {"backend": "cpu"}}))
+    with pytest.raises(ValueError):
+        validate(str(bad))
+    bad.write_text("not json{")
+    with pytest.raises(ValueError):
+        validate(str(bad))

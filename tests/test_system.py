@@ -143,3 +143,44 @@ def test_engine_matches_single_sequence():
     eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=5))
     out = eng.run()[0].generated
     assert out == ref
+
+
+def test_engine_empty_prompt_completes_immediately():
+    """A zero-length prompt has nothing to condition on and no first token
+    to feed the admit path — it must complete at submit, not IndexError."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_seq=32)
+    eng.submit(Request(rid=0, prompt=np.array([], np.int32),
+                       max_new_tokens=4))
+    eng.submit(Request(rid=1, prompt=np.array([1, 2], np.int32),
+                       max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 2
+    r0 = next(r for r in done if r.rid == 0)
+    assert r0.done and r0.generated == [] and not r0.preempted
+    r1 = next(r for r in done if r.rid == 1)
+    assert r1.done and len(r1.generated) == 3
+
+
+def test_engine_max_steps_drains_in_flight():
+    """run(max_steps=) must hand back in-flight requests (preempted, with
+    their partial generations) instead of silently dropping them, and
+    leave the engine usable."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(params, cfg, batch_slots=2, max_seq=64)
+    for i in range(2):
+        eng.submit(Request(rid=i, prompt=np.array([1 + i, 2, 3], np.int32),
+                           max_new_tokens=40))
+    done = eng.run(max_steps=6)
+    assert len(done) == 2  # nothing dropped
+    assert all(r.preempted and not r.done for r in done)
+    assert all(p == "idle" for p in eng.phase)
+    assert all(s is None for s in eng.slot)
+    # drained slots leave the engine serviceable for fresh work
+    eng.submit(Request(rid=9, prompt=np.array([5], np.int32),
+                       max_new_tokens=2))
+    done2 = eng.run()
+    r9 = next(r for r in done2 if r.rid == 9)
+    assert r9.done and not r9.preempted and len(r9.generated) == 2
