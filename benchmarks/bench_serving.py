@@ -1,0 +1,385 @@
+"""Closed-loop serving load benchmark (DESIGN.md §10).
+
+Commits ``BENCH_serving.json`` at the repo root so serving performance is
+machine-readable per PR, following the ``bench_timing`` methodology
+(jit + warmup + block_until_ready medians via ``common.time_stats``; a
+``meta.backend`` stamp; smoke mode for CI regeneration).
+
+Three sections:
+
+  * ``paged_vs_dense`` — offline throughput at EQUAL slot count: the
+    paged chunked-prefill engine vs the dense token-by-token seed engine
+    on the same request batch, per prompt-length mix.  The acceptance
+    bar (validated for committed non-smoke files) is paged ≥ 2× dense —
+    the win is structural: a prompt of length Lp costs ceil(Lp/chunk)
+    prefill steps instead of Lp decode steps.
+  * ``load`` — a closed-loop load generator sweeping offered QPS ×
+    prompt-length mix against the paged engine: seeded-exponential
+    arrivals, per-token stamps from the engine.  Reports throughput,
+    TTFT / per-output-token / end-to-end p50+p99 latency, cache
+    utilization, and eviction counts.
+  * ``kernels`` — ``common.time_stats`` medians: the Pallas paged-
+    attention kernel vs its jnp gather oracle, and a paged vs dense
+    jitted decode step at matched batch/context.
+
+Off-accelerator the Pallas kernel runs in interpret mode (slow, python
+loop), so the ENGINE defaults to the jnp gather path on CPU (see
+``PagedDecodeEngine.use_kernel``) and the kernel is timed separately
+here; absolute numbers are comparable within a backend only.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:  # script invocation: benchmarks/ is sys.path[0]
+    sys.path.insert(0, ROOT)
+
+from benchmarks.common import emit, time_stats  # noqa: E402
+
+OUT = os.path.join(ROOT, "BENCH_serving.json")
+
+SLOTS = 4
+MAX_SEQ = 64
+PAGE_SIZE = 8
+CHUNK = 16
+MIXES = {"short": (4, 16), "long": (24, 48)}  # prompt-length ranges
+
+
+def _cfg():
+    import dataclasses
+
+    from repro.configs.base import get_config
+
+    return dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=64)
+
+
+def _requests(seed, n, lo, hi, max_new):
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=np.asarray(rng.integers(1, 64, size=int(l)),
+                                      np.int32),
+                    max_new_tokens=max_new)
+            for i, l in enumerate(rng.integers(lo, hi, size=n))]
+
+
+def _warmup(eng, lo):
+    """Compile both phases (prefill chunk + decode) outside the timed
+    region — one request that spans a chunk boundary does it."""
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    eng.submit(Request(rid=-1, prompt=np.full((lo,), 1, np.int32),
+                       max_new_tokens=2))
+    eng.run()
+    eng.finished.clear()
+    eng.steps = 0
+
+
+def _drain(eng):
+    t0 = time.perf_counter()
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def _pct(xs, q):
+    import numpy as np
+
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+# ---------------------------------------------------------------------------
+# offline throughput: paged chunked-prefill vs dense token-by-token
+# ---------------------------------------------------------------------------
+def bench_paged_vs_dense(params, cfg, smoke):
+    from repro.serve.engine import DecodeEngine, PagedDecodeEngine
+
+    n = 4 if smoke else 16
+    max_new = 4 if smoke else 8
+    rows = []
+    for mix, (lo, hi) in MIXES.items():
+        dense = DecodeEngine(params, cfg, batch_slots=SLOTS, max_seq=MAX_SEQ)
+        paged = PagedDecodeEngine(params, cfg, batch_slots=SLOTS,
+                                  max_seq=MAX_SEQ, page_size=PAGE_SIZE,
+                                  chunk_size=CHUNK)
+        _warmup(dense, lo)
+        _warmup(paged, lo)
+        for r in _requests(100, n, lo, hi, max_new):
+            dense.submit(r)
+        for r in _requests(100, n, lo, hi, max_new):
+            paged.submit(r)
+        t_dense = _drain(dense)
+        t_paged = _drain(paged)
+        toks_d = sum(len(r.generated) for r in dense.finished)
+        toks_p = sum(len(r.generated) for r in paged.finished)
+        assert toks_d == toks_p, "engines disagree on token counts"
+        row = {
+            "mix": mix, "prompt_len": [lo, hi], "n_requests": n,
+            "max_new_tokens": max_new, "slots": SLOTS,
+            "dense_s": t_dense, "paged_s": t_paged,
+            "dense_steps": dense.steps, "paged_steps": paged.steps,
+            "dense_tok_s": toks_d / t_dense, "paged_tok_s": toks_p / t_paged,
+            "speedup": t_dense / t_paged,
+        }
+        rows.append(row)
+        emit(f"serving/paged_vs_dense/{mix}", t_paged * 1e6,
+             f"dense_s={t_dense:.3f};speedup={row['speedup']:.2f}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# closed-loop load generator: offered QPS × prompt mix
+# ---------------------------------------------------------------------------
+def _closed_loop(eng, reqs, arrivals):
+    """Submit each request at its arrival offset (closed loop: the wall
+    clock gates admission, the engine steps as fast as it can)."""
+    util = []
+    t0 = time.perf_counter()
+    i, n = 0, len(reqs)
+    while i < n or eng.queue or any(p != "idle" for p in eng.phase):
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            eng.submit(reqs[i])
+            i += 1
+        if eng.queue or any(p != "idle" for p in eng.phase):
+            eng.step()
+            util.append(eng.utilization())
+        elif i < n:
+            time.sleep(min(arrivals[i] - now, 0.02))
+    return time.perf_counter() - t0, util
+
+
+def bench_load(params, cfg, smoke):
+    import numpy as np
+
+    from repro.serve.engine import PagedDecodeEngine
+
+    qps_sweep = (8.0,) if smoke else (2.0, 8.0, 32.0)
+    n = 6 if smoke else 24
+    max_new = 4 if smoke else 8
+    rows = []
+    for mix, (lo, hi) in MIXES.items():
+        for qps in qps_sweep:
+            eng = PagedDecodeEngine(params, cfg, batch_slots=SLOTS,
+                                    max_seq=MAX_SEQ, page_size=PAGE_SIZE,
+                                    chunk_size=CHUNK)
+            _warmup(eng, lo)
+            reqs = _requests(int(qps * 100) + sum(map(ord, mix)), n, lo, hi,
+                             max_new)
+            arrivals = np.random.default_rng(17).exponential(
+                1.0 / qps, size=n).cumsum()
+            wall, util = _closed_loop(eng, reqs, list(arrivals))
+            done = [r for r in eng.finished if r.token_times]
+            ttft = [r.token_times[0] - r.t_submit for r in done]
+            tpot = [dt for r in done
+                    for dt in np.diff(np.asarray(r.token_times))]
+            e2e = [r.token_times[-1] - r.t_submit for r in done]
+            toks = sum(len(r.generated) for r in eng.finished)
+            row = {
+                "mix": mix, "prompt_len": [lo, hi],
+                "offered_qps": qps, "n_requests": n,
+                "completed": len(done), "max_new_tokens": max_new,
+                "wall_s": wall, "throughput_tok_s": toks / wall,
+                "ttft_p50_ms": _pct(ttft, 50) * 1e3,
+                "ttft_p99_ms": _pct(ttft, 99) * 1e3,
+                "tpot_p50_ms": _pct(tpot, 50) * 1e3,
+                "tpot_p99_ms": _pct(tpot, 99) * 1e3,
+                "e2e_p50_ms": _pct(e2e, 50) * 1e3,
+                "e2e_p99_ms": _pct(e2e, 99) * 1e3,
+                "cache_util_mean": float(np.mean(util)) if util else 0.0,
+                "cache_util_max": float(np.max(util)) if util else 0.0,
+                "evictions": sum(r.evictions for r in eng.finished),
+            }
+            rows.append(row)
+            emit(f"serving/load/{mix}/qps{qps:g}",
+                 row["tpot_p50_ms"] * 1e3,
+                 f"tok_s={row['throughput_tok_s']:.1f};"
+                 f"e2e_p99_ms={row['e2e_p99_ms']:.1f}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# kernel medians (common.time_stats protocol)
+# ---------------------------------------------------------------------------
+def bench_kernels(params, cfg, smoke, iters, warmup):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels import ref
+    from repro.kernels.paged_attention import paged_attention
+    from repro.models import transformer as T
+
+    def stats_ms(fn, *args):
+        med, lo, hi = time_stats(fn, *args, iters=iters, warmup=warmup)
+        return med / 1e3
+
+    rows = {}
+    # paged_attention kernel vs jnp gather oracle
+    b, kv, g, dh = (2, 1, 2, 32) if smoke else (4, 2, 4, 64)
+    mb = 2 if smoke else 4
+    n_pages = 1 + b * mb
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kv, g, dh))
+    kp = jax.random.normal(ks[1], (n_pages, PAGE_SIZE, kv, dh))
+    vp = jax.random.normal(ks[2], (n_pages, PAGE_SIZE, kv, dh))
+    bt = jnp.asarray(np.arange(1, n_pages).reshape(b, mb).astype(np.int32))
+    ctx = jnp.full((b,), mb * PAGE_SIZE, jnp.int32)
+    k_ms = stats_ms(paged_attention, q, kp, vp, bt, ctx)
+    r_ms = stats_ms(jax.jit(ref.paged_attention_ref), q, kp, vp, bt, ctx)
+    rows["paged_attention"] = {
+        "shape": [b, kv, g, dh], "pages": [n_pages, PAGE_SIZE],
+        "kernel_ms": k_ms, "ref_ms": r_ms,
+        "speedup": r_ms / max(k_ms, 1e-9)}
+    emit("serving/kernels/paged_attention", k_ms * 1e3,
+         f"ref_ms={r_ms:.3f}")
+
+    # paged vs dense jitted decode step at matched batch/context
+    bsz = SLOTS
+    dense_cache = T.init_cache(cfg, bsz, MAX_SEQ)
+    pages_per_seq = math.ceil(MAX_SEQ / PAGE_SIZE)
+    paged_cache = T.init_paged_cache(cfg, 1 + bsz * pages_per_seq, PAGE_SIZE)
+    btab = jnp.asarray(
+        (1 + np.arange(bsz * pages_per_seq))
+        .reshape(bsz, pages_per_seq).astype(np.int32))
+    tok = jnp.ones((bsz,), jnp.int32)
+    pos = jnp.full((bsz,), MAX_SEQ // 2, jnp.int32)
+    d_step = jax.jit(lambda p, t, ps, c: T.decode_step(
+        p, cfg, token=t, pos=ps, cache=c))
+    p_step = jax.jit(lambda p, t, ps, c, b_: T.decode_step_paged(
+        p, cfg, t, ps, c, b_, use_kernel=False))
+    d_ms = stats_ms(d_step, params, tok, pos, dense_cache)
+    p_ms = stats_ms(p_step, params, tok, pos, paged_cache, btab)
+    rows["decode_step"] = {
+        "batch": bsz, "max_seq": MAX_SEQ,
+        "dense_ms": d_ms, "paged_ms": p_ms,
+        "paged_over_dense": p_ms / max(d_ms, 1e-9)}
+    emit("serving/kernels/decode_step", p_ms * 1e3,
+         f"dense_ms={d_ms:.3f}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# driver + schema validation
+# ---------------------------------------------------------------------------
+def run(smoke=None):
+    import jax
+
+    from repro.models import transformer as T
+
+    if smoke is None:
+        smoke = os.environ.get("BENCH_SERVING_SMOKE", "") not in ("", "0")
+    iters, warmup = (3, 1) if smoke else (20, 3)
+    cfg = _cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    report = {
+        "meta": {
+            "schema": 1,
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0].device_kind),
+            "jax": jax.__version__,
+            "smoke": bool(smoke),
+            "engine": {"arch": "qwen2-1.5b (reduced tiny)", "slots": SLOTS,
+                       "max_seq": MAX_SEQ, "page_size": PAGE_SIZE,
+                       "chunk_size": CHUNK},
+            "note": ("engine decode uses the jnp gather path off-TPU/GPU "
+                     "(interpret-mode Pallas is a python loop); the kernel "
+                     "is timed separately in `kernels`.  Compare numbers "
+                     "within a backend only."),
+        },
+        "paged_vs_dense": bench_paged_vs_dense(params, cfg, smoke),
+        "load": bench_load(params, cfg, smoke),
+        "kernels": bench_kernels(params, cfg, smoke, iters, warmup),
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+    emit("serving/report", 0.0, f"out={os.path.basename(OUT)};smoke={smoke}")
+    return report
+
+
+def validate(path=OUT):
+    """Schema + acceptance check for BENCH_serving.json; raises ValueError
+    on violation.  Non-smoke (committed) files must additionally show the
+    paged engine ≥ 2× the dense engine on at least one prompt mix."""
+    if not os.path.exists(path):
+        raise ValueError(f"{path} is missing — run "
+                         "`python -m benchmarks.run serving`")
+    with open(path) as f:
+        report = json.load(f)
+    for key in ("meta", "paged_vs_dense", "load", "kernels"):
+        if key not in report:
+            raise ValueError(f"BENCH_serving.json: missing section {key!r}")
+    if "backend" not in report["meta"]:
+        raise ValueError("meta.backend missing")
+    pvd = report["paged_vs_dense"]
+    if {r["mix"] for r in pvd} != set(MIXES):
+        raise ValueError(f"paged_vs_dense must cover mixes {sorted(MIXES)}")
+    for r in pvd:
+        for f_ in ("dense_s", "paged_s", "speedup", "dense_tok_s",
+                   "paged_tok_s"):
+            if not r.get(f_, 0) > 0:
+                raise ValueError(f"paged_vs_dense row bad {f_!r}: {r}")
+    if not report["meta"]["smoke"]:
+        best = max(r["speedup"] for r in pvd)
+        if best < 2.0:
+            raise ValueError(
+                f"acceptance: paged must be >= 2x dense, best {best:.2f}x")
+    if not report["load"]:
+        raise ValueError("load section empty")
+    mixes_seen, qps_seen = set(), set()
+    for r in report["load"]:
+        mixes_seen.add(r["mix"])
+        qps_seen.add(r["offered_qps"])
+        for f_ in ("throughput_tok_s", "ttft_p50_ms", "tpot_p50_ms",
+                   "e2e_p50_ms"):
+            if not r.get(f_, 0) > 0:
+                raise ValueError(f"load row bad {f_!r}: {r}")
+        for p50, p99 in (("ttft_p50_ms", "ttft_p99_ms"),
+                         ("tpot_p50_ms", "tpot_p99_ms"),
+                         ("e2e_p50_ms", "e2e_p99_ms")):
+            if r[p99] + 1e-9 < r[p50]:
+                raise ValueError(f"percentile order violated in {r}")
+        if not 0.0 <= r["cache_util_max"] <= 1.0:
+            raise ValueError(f"cache utilization out of range: {r}")
+    if mixes_seen != set(MIXES):
+        raise ValueError(f"load must cover mixes {sorted(MIXES)}")
+    if not report["meta"]["smoke"] and len(qps_seen) < 3:
+        raise ValueError("non-smoke load sweep needs >= 3 offered QPS points")
+    kr = report["kernels"]
+    if not (kr.get("paged_attention", {}).get("kernel_ms", 0) > 0
+            and kr.get("paged_attention", {}).get("ref_ms", 0) > 0):
+        raise ValueError("kernels.paged_attention timings missing")
+    if not (kr.get("decode_step", {}).get("dense_ms", 0) > 0
+            and kr.get("decode_step", {}).get("paged_ms", 0) > 0):
+        raise ValueError("kernels.decode_step timings missing")
+    return report
+
+
+def main(argv=None):
+    argv = sys.argv[1:] if argv is None else argv
+    if "--validate" in argv:
+        report = validate()
+        best = max(r["speedup"] for r in report["paged_vs_dense"])
+        print(f"BENCH_serving.json OK: {len(report['load'])} load rows, "
+              f"best paged-vs-dense speedup {best:.2f}x "
+              f"(smoke={report['meta']['smoke']})")
+        return
+    run(smoke=True if "--smoke" in argv else None)
+
+
+if __name__ == "__main__":
+    main()

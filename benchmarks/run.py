@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_scaling      — §2.2.4 gradient-set sizes / wire volumes per arch
   bench_roofline     — dry-run roofline table (deliverable g)
   bench_timing       — measured wall-clock tier (DESIGN.md §9)
+  bench_serving      — paged-KV serving load benchmark (DESIGN.md §10)
 """
 
 from __future__ import annotations
@@ -26,7 +27,7 @@ if _ROOT not in sys.path:
 
 # run order; each entry is benchmarks/bench_<name>.py
 MODULES = ("strategies", "compression", "consistency", "staleness",
-           "scaling", "ablation", "roofline", "timing")
+           "scaling", "ablation", "roofline", "timing", "serving")
 
 
 def main() -> None:

@@ -15,6 +15,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_adam import fused_adam as _adam
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.onebit_quant import onebit_quant as _onebit
 from repro.kernels.onebit_quant import onebit_quant_packed as _onebit_packed
@@ -38,6 +39,12 @@ def flash_attention(q, k, v, *, causal=True, window=-1,
                     block_q=128, block_k=128):
     return _flash(q, k, v, causal=causal, window=window,
                   block_q=block_q, block_k=block_k)
+
+
+def paged_attention(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                    window=None, softcap=None):
+    return _paged(q, k_pages, v_pages, block_tables, ctx_lens,
+                  window=window, softcap=softcap)
 
 
 def topk_sparsify(x, k, rows_per_step=8):

@@ -32,6 +32,38 @@ def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = -1):
 
 
 # ---------------------------------------------------------------------------
+# paged attention (decode over a block KV cache)
+# ---------------------------------------------------------------------------
+def paged_attention_ref(q, k_pages, v_pages, block_tables, ctx_lens, *,
+                        window=None, softcap=None):
+    """q: (B, KV, G, Dh); k_pages/v_pages: (num_pages, page_size, KV, Dh);
+    block_tables: (B, MB) int32; ctx_lens: (B,) int32.  The jnp gather
+    oracle for kernels/paged_attention.py: pages are gathered into a dense
+    (B, MB*page_size, KV, Dh) view and masked by ``j < ctx`` (causal — the
+    query sits at ctx-1) and the sliding window.  Returns (B, KV, G, Dh)."""
+    b, kv, g, dh = q.shape
+    n_pages, ps, _, _ = k_pages.shape
+    ks = k_pages[block_tables].reshape(b, -1, kv, dh)  # (B, S, KV, Dh)
+    vs = v_pages[block_tables].reshape(b, -1, kv, dh)
+    s_max = ks.shape[1]
+    logits = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32),
+                        ks.astype(jnp.float32)) * (dh ** -0.5)
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    j = jnp.arange(s_max, dtype=jnp.int32)[None, None, None, :]
+    pos = (ctx_lens.astype(jnp.int32) - 1)[:, None, None, None]
+    mask = j <= pos
+    if window is not None:
+        w = jnp.asarray(window, jnp.int32)
+        wide = jnp.iinfo(jnp.int32).max
+        mask = mask & ((pos - j) < jnp.where(w > 0, w, wide))
+    logits = jnp.where(mask, logits, -2.0e38)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", probs, vs.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # block-local top-k sparsification (DGC)
 # ---------------------------------------------------------------------------
 def topk_sparsify_ref(x, k: int):

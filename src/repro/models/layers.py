@@ -289,6 +289,123 @@ def init_attn_cache(cfg: ModelConfig, batch, max_seq, dtype):
 
 
 # ---------------------------------------------------------------------------
+# paged attention (serving tier — block KV cache, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+def init_paged_attn_cache(cfg: ModelConfig, num_pages, page_size, dtype):
+    """Block KV cache: ``(num_pages, page_size, KV, Dh)`` k/v page pools.
+    Physical page 0 is RESERVED as the trash page (never allocated — idle
+    or padded token writes are routed there and no block table ever
+    references it for a live position).  ``int8`` pages add per-token-
+    per-head f32 scale pools for symmetric quantization."""
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    c = {
+        "k_pages": jnp.zeros((num_pages, page_size, kv, dh), dtype),
+        "v_pages": jnp.zeros((num_pages, page_size, kv, dh), dtype),
+    }
+    if jnp.dtype(dtype) == jnp.int8:
+        c["k_scale"] = jnp.zeros((num_pages, page_size, kv), jnp.float32)
+        c["v_scale"] = jnp.zeros((num_pages, page_size, kv), jnp.float32)
+    return c
+
+
+def _quant_kv_int8(x):
+    """Per-token-per-head symmetric int8: x (..., Dh) → (int8, f32 scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _paged_write(cache, block_tables, positions, k, v):
+    """Scatter a chunk's KV (B, C, KV, Dh) into the pages.  positions:
+    (B, C) int32 with -1 ⇒ pad/idle — those writes land in trash page 0."""
+    bs = cache["k_pages"].shape[1]
+    rows = jnp.arange(positions.shape[0])[:, None]
+    valid = positions >= 0
+    pc = jnp.maximum(positions, 0)
+    blk = jnp.where(valid, block_tables[rows, pc // bs], 0)
+    off = jnp.where(valid, pc % bs, 0)
+    new = dict(cache)
+    if cache["k_pages"].dtype == jnp.int8:
+        kq, ksc = _quant_kv_int8(k)
+        vq, vsc = _quant_kv_int8(v)
+        new["k_pages"] = cache["k_pages"].at[blk, off].set(kq)
+        new["v_pages"] = cache["v_pages"].at[blk, off].set(vq)
+        new["k_scale"] = cache["k_scale"].at[blk, off].set(ksc)
+        new["v_scale"] = cache["v_scale"].at[blk, off].set(vsc)
+    else:
+        dt = cache["k_pages"].dtype
+        new["k_pages"] = cache["k_pages"].at[blk, off].set(k.astype(dt))
+        new["v_pages"] = cache["v_pages"].at[blk, off].set(v.astype(dt))
+    return new
+
+
+def _paged_gather(cache, block_tables, dtype):
+    """Dense (B, MB·page_size, KV, Dh) view of each sequence's pages.
+    f32/bf16 pages keep their stored dtype (bitwise-identical numerics to
+    the dense decode cache); int8 pages dequantize through the scale
+    pools into ``dtype``."""
+    ks = cache["k_pages"][block_tables]  # (B, MB, bs, KV, Dh)
+    vs = cache["v_pages"][block_tables]
+    if cache["k_pages"].dtype == jnp.int8:
+        ks = (ks.astype(jnp.float32)
+              * cache["k_scale"][block_tables][..., None]).astype(dtype)
+        vs = (vs.astype(jnp.float32)
+              * cache["v_scale"][block_tables][..., None]).astype(dtype)
+    b = block_tables.shape[0]
+    kv, dh = ks.shape[-2:]
+    return ks.reshape(b, -1, kv, dh), vs.reshape(b, -1, kv, dh)
+
+
+def attention_paged(p, cfg: ModelConfig, x, positions, window, theta,
+                    cache, block_tables, use_kernel=False):
+    """Attention over a paged KV cache — decode (C=1) and chunked prefill
+    (C>1) through ONE code path.
+
+    x: (B, C, D); positions: (B, C) int32 token positions (-1 ⇒ pad/idle:
+    the KV write is routed to trash page 0 and the output row is garbage —
+    callers mask it); block_tables: (B, pages_per_seq) int32.
+
+    Write-then-attend: the chunk's roped KV is scattered into the pages
+    FIRST, then attention reads the updated pages with mask ``j <= pos``,
+    so each token sees itself and its whole prefix without a separate
+    dense prefill pass.  Decode single tokens take the Pallas kernel when
+    ``use_kernel`` (f32/bf16 pages); prefill chunks and int8 pages take
+    the jnp gather path (same oracle as kernels/ref.py).
+    """
+    q, k, v = _qkv(p, cfg, x, x)
+    b, c = x.shape[0], x.shape[1]
+    pc = jnp.maximum(positions, 0)
+    q = rope(q, pc, theta)
+    k = rope(k, pc, theta)
+    new_cache = _paged_write(cache, block_tables, positions, k, v)
+
+    h, dh = q.shape[2], q.shape[3]
+    kvh = cfg.num_kv_heads
+    int8 = cache["k_pages"].dtype == jnp.int8
+    if use_kernel and c == 1 and not int8:
+        from repro.kernels import ops
+        qg = q[:, 0].reshape(b, kvh, h // kvh, dh)  # grouped, (kv, g) order
+        ctx = pc[:, 0] + 1
+        out = ops.paged_attention(
+            qg, new_cache["k_pages"], new_cache["v_pages"], block_tables,
+            ctx, window=window, softcap=cfg.attn_logit_softcap)
+        out = out.reshape(b, 1, h, dh)
+    else:
+        ks, vs = _paged_gather(new_cache, block_tables, x.dtype)
+        s = ks.shape[1]
+        i = pc[:, :, None]                                    # (B, C, 1)
+        j = jnp.arange(s, dtype=jnp.int32)[None, None, :]     # (1, 1, S)
+        w = jnp.where(window == FULL_ATTENTION,
+                      jnp.iinfo(jnp.int32).max, window)
+        mask = (j <= i) & (i - j < w)                         # (B, C, S)
+        out = _sdpa_decode(cfg, q, ks, vs, mask[:, None])
+    out = jnp.einsum("blhk,hkd->bld", out, p["wo"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
 # dense MLP (SwiGLU)
 # ---------------------------------------------------------------------------
 def init_mlp(key, cfg: ModelConfig, d_ff=None):

@@ -51,14 +51,21 @@ def _init_layer(key, cfg: ModelConfig, spec: LayerSpec, cross: bool):
 
 
 def _apply_layer(p, cfg, spec, h, positions, window, theta, cache, cache_pos,
-                 memory, causal=True, collect_cache=False):
+                 memory, causal=True, collect_cache=False, block_tables=None,
+                 paged_kernel=False):
     """One (mixer → [cross] → ffn) layer. Returns (h, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     x = L.rms_norm(h, p["pre_norm"], cfg.norm_eps)
     if spec.mixer == "attn":
-        out, new_cache = L.attention(p["attn"], cfg, x, positions, window,
-                                     theta, cache=cache, cache_pos=cache_pos,
-                                     causal=causal, collect_cache=collect_cache)
+        if block_tables is not None:
+            out, new_cache = L.attention_paged(
+                p["attn"], cfg, x, positions, window, theta, cache,
+                block_tables, use_kernel=paged_kernel)
+        else:
+            out, new_cache = L.attention(
+                p["attn"], cfg, x, positions, window, theta, cache=cache,
+                cache_pos=cache_pos, causal=causal,
+                collect_cache=collect_cache)
     elif spec.mixer == "mamba":
         out, new_cache = S.mamba(p["mamba"], cfg, x, cache=cache,
                                  collect_cache=collect_cache)
@@ -138,7 +145,8 @@ def init_model(key, cfg: ModelConfig):
 # stack traversal (shared by training forward and decode)
 # ---------------------------------------------------------------------------
 def _run_stack(params, cfg: ModelConfig, h, positions, cache, cache_pos,
-               memory, remat=False, collect_cache=False):
+               memory, remat=False, collect_cache=False, block_tables=None,
+               paged_kernel=False):
     specs, repeat = cfg.superblock()
     np_windows, np_thetas = cfg.layer_windows()  # (repeat, S) numpy arrays
     windows = jnp.asarray(np_windows)
@@ -152,7 +160,8 @@ def _run_stack(params, cfg: ModelConfig, h, positions, cache, cache_pos,
             c_i = cache_sb[str(i)] if cache_sb is not None else None
             h, nc, aux = _apply_layer(
                 p_sb[str(i)], cfg, spec, h, positions, win_sb[i], th_sb[i],
-                c_i, cache_pos, memory, collect_cache=collect_cache)
+                c_i, cache_pos, memory, collect_cache=collect_cache,
+                block_tables=block_tables, paged_kernel=paged_kernel)
             new_cache_sb[str(i)] = nc if nc is not None else {}
         return (h, aux_acc + aux), new_cache_sb
 
@@ -304,6 +313,87 @@ def init_cache(cfg: ModelConfig, batch, max_seq, dtype=None):
     sb = {str(i): one(spec) for i, spec in enumerate(specs)}
     return jax.tree.map(lambda x: jnp.broadcast_to(x, (repeat,) + x.shape).copy()
                         if hasattr(x, "shape") else x, sb)
+
+
+def pad_prefill_cache(cfg: ModelConfig, cache, total):
+    """Grow a ``prefill``-collected cache (attention S = prompt length) to
+    ``total`` sequence slots.  The pad is keyed off the cache LAYOUT — only
+    attention layers' k/v leaves get padded, along their sequence axis
+    (axis 2 of the stacked (repeat, B, S, KV, Dh)) — never off shape
+    coincidence, so a recurrent leaf whose trailing dim happens to equal
+    the prompt length is left alone."""
+    specs, _ = cfg.superblock()
+    out = dict(cache)
+    for i, spec in enumerate(specs):
+        if spec.mixer != "attn":
+            continue
+
+        def pad(x):
+            lp = x.shape[2]
+            if lp >= total:
+                return x
+            w = [(0, 0)] * x.ndim
+            w[2] = (0, total - lp)
+            return jnp.pad(x, w)
+
+        out[str(i)] = jax.tree.map(pad, cache[str(i)])
+    return out
+
+
+def init_paged_cache(cfg: ModelConfig, num_pages, page_size, dtype=None):
+    """Paged decode cache (serving tier): per-layer k/v page pools, stacked
+    (repeat, ...) to ride the same layer scan as ``init_cache``.  Physical
+    page 0 is the reserved trash page.  Attention-only decoder stacks —
+    recurrent mixers keep per-slot dense state and stay on the dense
+    engine."""
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    specs, repeat = cfg.superblock()
+    if cfg.is_encoder_decoder:
+        raise ValueError("paged cache does not support encoder-decoder models")
+    for spec in specs:
+        if spec.mixer not in ("attn", "none"):
+            raise ValueError(
+                f"paged cache supports attention-only stacks; got mixer "
+                f"{spec.mixer!r} (use the dense DecodeEngine)")
+    sb = {str(i): L.init_paged_attn_cache(cfg, num_pages, page_size, dtype)
+          for i in range(len(specs))}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (repeat,) + x.shape).copy(), sb)
+
+
+def decode_step_paged(params, cfg: ModelConfig, token, pos, cache,
+                      block_tables, use_kernel=False):
+    """One decode token per slot against the paged cache.  token: (B,)
+    int32; pos: (B,) int32 token position per slot, -1 ⇒ idle (the write
+    goes to trash page 0, the logits row is garbage — caller masks it);
+    block_tables: (B, pages_per_seq) int32.  ``use_kernel`` (static)
+    routes attention through the Pallas paged kernel; off, the jnp gather
+    path.  Returns (logits (B, V) f32, new_cache)."""
+    params = _cast_compute(params, cfg)
+    h = _embed(params, cfg, tokens=jnp.maximum(token, 0)[:, None])
+    positions = pos[:, None].astype(jnp.int32)
+    h, _, new_cache = _run_stack(params, cfg, h, positions, cache, None,
+                                 None, block_tables=block_tables,
+                                 paged_kernel=use_kernel)
+    return _logits(params, cfg, h)[:, 0], new_cache
+
+
+def prefill_chunk_paged(params, cfg: ModelConfig, tokens, positions, cache,
+                        block_tables, last_idx):
+    """Chunked batched prefill: consume a whole (B, C) chunk of prompt
+    tokens per step, writing KV straight into the pages (write-then-
+    attend, so in-chunk causality needs no dense pass).  positions: (B, C)
+    int32, -1 ⇒ pad; last_idx: (B,) int32 index of each row's last REAL
+    token in the chunk (clamped for idle rows).  Returns (logits (B, V)
+    f32 — next-token logits at last_idx, new_cache)."""
+    params = _cast_compute(params, cfg)
+    h = _embed(params, cfg, tokens=jnp.maximum(tokens, 0))
+    h, _, new_cache = _run_stack(params, cfg, h,
+                                 positions.astype(jnp.int32), cache, None,
+                                 None, block_tables=block_tables)
+    b = tokens.shape[0]
+    hl = h[jnp.arange(b), jnp.maximum(last_idx, 0)][:, None]
+    return _logits(params, cfg, hl)[:, 0], new_cache
 
 
 def decode_step(params, cfg: ModelConfig, token=None, pos=None, cache=None,

@@ -1,15 +1,27 @@
-"""Batched decode engine with TRUE continuous batching.
+"""Batched decode engines with TRUE continuous batching.
 
-Every slot carries its own position (ragged (B,) write positions in the
-cache — models/layers.py decode path): a freed slot is refilled from the
-queue immediately and ingests its prompt token-by-token while neighbouring
-slots keep generating.  One jitted decode step serves both phases.
+``DecodeEngine`` (dense): every slot carries its own position (ragged
+(B,) write positions in the cache — models/layers.py decode path); a
+freed slot is refilled from the queue immediately and ingests its prompt
+token-by-token while neighbouring slots keep generating.  One jitted
+decode step serves both phases.  Works for EVERY stack, including
+recurrent mixers (mamba/xlstm).
+
+``PagedDecodeEngine`` (serving production path, DESIGN.md §10): the KV
+cache is a pool of fixed-size token pages (serve/kv_cache.py) instead of
+a dense (B, max_seq) arena — memory follows LIVE context, admission is
+gated on free pages (evict-to-queue on exhaustion), and prefill is
+CHUNKED: whole (B, chunk) prompt windows per step instead of one token
+per slot per step.  Attention-only decoder stacks.
 """
 
 from __future__ import annotations
 
+import math
+import time
+from collections import deque
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +29,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer as T
+from repro.serve.kv_cache import BlockAllocator, PagedKVCache
 
 
 @dataclass
@@ -28,6 +41,9 @@ class Request:
     done: bool = False
     truncated: bool = False  # prompt tail-clipped to the engine's max_seq
     preempted: bool = False  # evicted in-flight by run(max_steps=...)
+    evictions: int = 0       # times evicted-to-queue under memory pressure
+    t_submit: float = 0.0    # perf_counter stamps for the serving bench
+    token_times: list = field(default_factory=list)
 
 
 class DecodeEngine:
@@ -46,7 +62,7 @@ class DecodeEngine:
         self.pad = pad_token
         self.cache_dtype = jnp.dtype(cache_dtype if cache_dtype is not None
                                      else cfg.compute_dtype)
-        self.queue: List[Request] = []
+        self.queue: Deque[Request] = deque()
         self.finished: List[Request] = []
         self.steps = 0
         self.cache = T.init_cache(cfg, batch_slots, max_seq,
@@ -59,6 +75,13 @@ class DecodeEngine:
         self._decode = jax.jit(
             lambda p, tok, pos, cache: T.decode_step(
                 p, cfg, token=tok, pos=pos, cache=cache, memory=self.memory))
+        specs, _ = cfg.superblock()
+        # only recurrent mixers need a per-admission state reset: attention
+        # slots are hidden by the causal mask (every j <= pos is rewritten
+        # by the new request before it is read), but mamba/xlstm state
+        # genuinely carries over
+        self._recurrent = [str(i) for i, s in enumerate(specs)
+                           if s.mixer not in ("attn", "none")]
 
     def submit(self, req: Request):
         """Cache positions run 0..max_seq-1; an over-long prompt would keep
@@ -83,16 +106,18 @@ class DecodeEngine:
         self.queue.append(req)
 
     def _reset_slot(self, i: int):
-        """Zero slot i across the cache: the causal mask hides stale KV, but
-        recurrent state (mamba/xlstm) genuinely carries over and must clear."""
-        self.cache = jax.tree.map(
-            lambda x: x.at[:, i].set(0) if hasattr(x, "ndim") and x.ndim >= 2
-            else x, self.cache)
+        """Targeted reset: zero slot i of RECURRENT state leaves only.
+        Attention KV needs no reset — the causal mask hides stale entries
+        (every j <= pos is rewritten by the new request before it is
+        read), so all-attention stacks skip the tree.map entirely."""
+        for li in self._recurrent:
+            self.cache[li] = jax.tree.map(
+                lambda x: x.at[:, i].set(0), self.cache[li])
 
     def _admit(self):
         for i in range(self.b):
             if self.phase[i] == "idle" and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue.popleft()
                 self.slot[i] = req
                 self.phase[i] = "prompt"
                 self.prompt_cursor[i] = 0
@@ -110,6 +135,7 @@ class DecodeEngine:
             self.params, jnp.asarray(toks), jnp.asarray(self.pos), self.cache)
         argmax = np.asarray(jnp.argmax(logits, -1), np.int32)
         self.steps += 1
+        now = time.perf_counter()
         for i in range(self.b):
             req = self.slot[i]
             if req is None:
@@ -121,10 +147,12 @@ class DecodeEngine:
                     self._next_tok[i] = req.prompt[self.prompt_cursor[i]]
                 else:  # prompt consumed: this step produced the first token
                     req.generated.append(int(argmax[i]))
+                    req.token_times.append(now)
                     self._next_tok[i] = argmax[i]
                     self.phase[i] = "decode"
             else:
                 req.generated.append(int(argmax[i]))
+                req.token_times.append(now)
                 self._next_tok[i] = argmax[i]
             # Termination: decode slots finish at max_new_tokens; ANY slot
             # (prompt phase included — belt over the submit-time truncation)
@@ -157,6 +185,244 @@ class DecodeEngine:
         return self.finished
 
 
+class PagedDecodeEngine:
+    """Continuous-batching engine over a PAGED KV cache (DESIGN.md §10).
+
+    Differences from the dense ``DecodeEngine``:
+      * Memory follows live context: the cache is a pool of fixed-size
+        token pages; a slot owns only the pages its sequence has reached,
+        and releasing a finished request is a free-list push — no cache
+        zeroing at admission (stale pages are unreachable once no block
+        table references them).
+      * CHUNKED PREFILL: prompts are ingested ``chunk_size`` tokens per
+        step through one batched call (write-then-attend, so in-chunk
+        causality needs no dense pass) instead of one token per step.
+      * Admission is gated on free pages, FIFO with head-of-line blocking
+        (no overtaking ⇒ same admission order as the dense engine).  On
+        page exhaustion during decode growth, the youngest-admitted slot
+        is EVICTED back to the queue front recompute-style: greedy decode
+        is deterministic, so the re-run reproduces the same tokens and
+        the engine degrades gracefully instead of over-allocating.
+      * ``use_kernel`` routes decode attention through the Pallas paged
+        kernel (default: on TPU/GPU backends; the interpret-mode kernel
+        is correct everywhere but slow, so CPU defaults to the jnp gather
+        path — same policy as kernels/ops.default_interpret).  int8
+        pages always take the gather path (quantized via scale pools).
+
+    Attention-only decoder stacks (recurrent mixers keep dense per-slot
+    state — use ``DecodeEngine``).
+    """
+
+    def __init__(self, params, cfg: ModelConfig, batch_slots: int,
+                 max_seq: int, *, page_size: int = 16,
+                 num_pages: Optional[int] = None, chunk_size: int = 32,
+                 pad_token: int = 0, cache_dtype=None, use_kernel=None):
+        self.params = params
+        self.cfg = cfg
+        self.b = batch_slots
+        self.max_seq = max_seq
+        self.pad = pad_token
+        self.page_size = page_size
+        self.chunk = chunk_size
+        self.cache_dtype = jnp.dtype(cache_dtype if cache_dtype is not None
+                                     else cfg.compute_dtype)
+        self.pages_per_seq = math.ceil(max_seq / page_size)
+        if num_pages is None:  # fully provisioned: every slot can hit max_seq
+            num_pages = 1 + batch_slots * self.pages_per_seq
+        self.kv = PagedKVCache(batch_slots, self.pages_per_seq,
+                               BlockAllocator(num_pages, page_size))
+        self.cache = T.init_paged_cache(cfg, num_pages, page_size,
+                                        dtype=self.cache_dtype)
+        if use_kernel is None:
+            use_kernel = jax.default_backend() in ("tpu", "gpu")
+        if self.cache_dtype == jnp.int8:
+            use_kernel = False  # kernel reads f32/bf16 pages only
+        self.use_kernel = bool(use_kernel)
+
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+        self.steps = 0
+        self.slot: List[Optional[Request]] = [None] * batch_slots
+        self.phase = ["idle"] * batch_slots  # idle | prefill | decode
+        self.pos = np.zeros(batch_slots, np.int32)  # next write position
+        self.prompt_cursor = np.zeros(batch_slots, np.int32)
+        self._next_tok = np.zeros(batch_slots, np.int32)
+        self._admit_seq = np.zeros(batch_slots, np.int64)
+        self._admitted = 0
+
+        uk = self.use_kernel
+        self._decode = jax.jit(
+            lambda p, tok, pos, cache, bt: T.decode_step_paged(
+                p, cfg, tok, pos, cache, bt, use_kernel=uk))
+        self._prefill = jax.jit(
+            lambda p, tk, ps, cache, bt, last: T.prefill_chunk_paged(
+                p, cfg, tk, ps, cache, bt, last))
+
+    # ------------------------------------------------------------------
+    # admission / eviction
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        """Same contract as DecodeEngine.submit (tail truncation, empty
+        prompt completes immediately)."""
+        limit = max(1, self.max_seq - 1)
+        req.t_submit = time.perf_counter()
+        if len(req.prompt) == 0:
+            req.done = True
+            self.finished.append(req)
+            return
+        if len(req.prompt) > limit:
+            req.prompt = np.asarray(req.prompt[-limit:])
+            req.truncated = True
+        self.queue.append(req)
+
+    def _admit(self):
+        """FIFO with head-of-line blocking on free pages: if the queue
+        head does not fit, nothing is admitted this step — no small-
+        request overtaking, so admission order matches the dense engine."""
+        for i in range(self.b):
+            if not self.queue:
+                return
+            if self.phase[i] != "idle":
+                continue
+            req = self.queue[0]
+            # reserve prompt + first generated token so the prefill →
+            # decode transition never needs an immediate grow
+            if not self.kv.admit(i, min(len(req.prompt) + 1, self.max_seq)):
+                return
+            self.queue.popleft()
+            self.slot[i] = req
+            self.phase[i] = "prefill"
+            self.prompt_cursor[i] = 0
+            self.pos[i] = 0
+            self._admitted += 1
+            self._admit_seq[i] = self._admitted
+
+    def _evict(self, i: int):
+        """Evict slot i back to the queue FRONT, recompute-style: greedy
+        decode is deterministic, so re-running the request reproduces the
+        exact same tokens — eviction changes latency, never output."""
+        req = self.slot[i]
+        req.generated = []
+        req.token_times = []
+        req.evictions += 1
+        self.kv.release(i)
+        self.slot[i] = None
+        self.phase[i] = "idle"
+        self.queue.appendleft(req)
+
+    def _evict_youngest(self, exclude=None) -> bool:
+        cands = [i for i in range(self.b)
+                 if self.slot[i] is not None and i != exclude]
+        if not cands:
+            return False
+        self._evict(max(cands, key=lambda i: self._admit_seq[i]))
+        return True
+
+    def _finish(self, i: int, *, preempted=False):
+        req = self.slot[i]
+        req.done = not preempted
+        req.preempted = preempted
+        self.kv.release(i)
+        self.finished.append(req)
+        self.slot[i] = None
+        self.phase[i] = "idle"
+
+    # ------------------------------------------------------------------
+    # stepping
+    # ------------------------------------------------------------------
+    def step(self):
+        self._admit()
+        if all(p == "idle" for p in self.phase):
+            return
+        self.steps += 1
+        self._step_prefill()
+        self._step_decode()
+
+    def _step_prefill(self):
+        rows = [i for i in range(self.b) if self.phase[i] == "prefill"]
+        if not rows:
+            return
+        c = self.chunk
+        toks = np.zeros((self.b, c), np.int32)
+        poss = np.full((self.b, c), -1, np.int32)
+        last = np.zeros((self.b,), np.int32)
+        take = {}
+        for i in rows:
+            req = self.slot[i]
+            cur = int(self.prompt_cursor[i])
+            n = min(c, len(req.prompt) - cur)
+            toks[i, :n] = req.prompt[cur:cur + n]
+            poss[i, :n] = np.arange(cur, cur + n, dtype=np.int32)
+            last[i] = n - 1
+            take[i] = n
+        logits, self.cache = self._prefill(
+            self.params, jnp.asarray(toks), jnp.asarray(poss), self.cache,
+            jnp.asarray(self.kv.tables), jnp.asarray(last))
+        argmax = np.asarray(jnp.argmax(logits, -1), np.int32)
+        now = time.perf_counter()
+        for i in rows:
+            req = self.slot[i]
+            self.prompt_cursor[i] += take[i]
+            self.pos[i] += take[i]
+            if self.prompt_cursor[i] >= len(req.prompt):
+                # this chunk held the last prompt token ⇒ its logits are
+                # the first generated token (same contract as the dense
+                # engine's prompt-consumed step)
+                req.generated.append(int(argmax[i]))
+                req.token_times.append(now)
+                self._next_tok[i] = argmax[i]
+                self.phase[i] = "decode"
+                if len(req.generated) >= req.max_new_tokens \
+                        or self.pos[i] >= self.max_seq:
+                    self._finish(i)
+
+    def _step_decode(self):
+        # grow each decode row to cover this step's write; on exhaustion
+        # evict the youngest-admitted slot (possibly this one) to queue
+        for i in range(self.b):
+            if self.phase[i] != "decode":
+                continue
+            while not self.kv.ensure(i, int(self.pos[i]) + 1):
+                if not self._evict_youngest(exclude=i):
+                    self._evict(i)
+                    break
+        rows = [i for i in range(self.b) if self.phase[i] == "decode"]
+        if not rows:
+            return
+        active = np.array([self.phase[i] == "decode" for i in range(self.b)])
+        toks = np.where(active, self._next_tok, self.pad).astype(np.int32)
+        pos = np.where(active, self.pos, -1).astype(np.int32)
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(pos), self.cache,
+            jnp.asarray(self.kv.tables))
+        argmax = np.asarray(jnp.argmax(logits, -1), np.int32)
+        now = time.perf_counter()
+        for i in rows:
+            req = self.slot[i]
+            self.pos[i] += 1
+            req.generated.append(int(argmax[i]))
+            req.token_times.append(now)
+            self._next_tok[i] = argmax[i]
+            if len(req.generated) >= req.max_new_tokens \
+                    or self.pos[i] >= self.max_seq:
+                self._finish(i)
+
+    def run(self, max_steps: int = 100_000) -> List[Request]:
+        """Serve until queue + slots drain or ``max_steps``.  Early-exit
+        drains in-flight requests as ``preempted=True`` AND releases
+        their pages (allocator invariants hold after a drain)."""
+        while (self.queue or any(p != "idle" for p in self.phase)) \
+                and self.steps < max_steps:
+            self.step()
+        for i in range(self.b):
+            if self.slot[i] is not None:
+                self._finish(i, preempted=True)
+        return self.finished
+
+    def utilization(self) -> float:
+        return self.kv.utilization()
+
+
 def greedy_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
                     memory=None):
     """Reference single-sequence generation: prefill + greedy decode."""
@@ -165,15 +431,10 @@ def greedy_generate(params, cfg: ModelConfig, prompt, max_new_tokens: int,
     total = lp + max_new_tokens
     logits, cache = T.prefill(params, cfg, tokens=prompt, memory=memory,
                               last_only=True)
-
-    def pad(x):  # prefill cache has S=lp for attention layers: grow to total
-        if x.ndim >= 3 and x.shape[2] == lp:
-            w = [(0, 0)] * x.ndim
-            w[2] = (0, total - lp)
-            return jnp.pad(x, w)
-        return x
-
-    cache = jax.tree.map(pad, cache)
+    # grow attention layers' S=lp cache to `total` — keyed off the cache
+    # layout (layer specs), not `shape[2] == lp` coincidence, which used
+    # to mis-pad recurrent leaves whose dims happened to equal lp
+    cache = T.pad_prefill_cache(cfg, cache, total)
     tok = jnp.argmax(logits[:, -1] if logits.ndim == 3 else logits, -1)
     out = [int(tok[0])]
     decode = jax.jit(lambda p, t, pos, c: T.decode_step(

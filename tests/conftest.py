@@ -17,6 +17,11 @@ def pytest_configure(config):
         "accum: microbatched-train-step sweep (gradient accumulation, "
         "donation, prefetch — DESIGN.md §8); CI runs `pytest -m accum` as "
         "its own matrix entry, and the marks also run in plain tier-1")
+    config.addinivalue_line(
+        "markers",
+        "serving: paged KV cache / paged-attention serving tier "
+        "(DESIGN.md §10); CI runs `pytest -m serving` as its own matrix "
+        "entry, and the marks also run in plain tier-1")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,264 @@
+"""Serving tier: paged KV cache, Pallas paged attention, chunked prefill
+(DESIGN.md §10).
+
+Correctness bar: the paged engine must be TOKEN-IDENTICAL to the dense
+seed engine under greedy decoding — across prompt-length mixes, cache
+dtypes, randomized admission/termination order, and memory-pressure
+eviction (recompute-style eviction never changes outputs).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import get_config
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.ref import paged_attention_ref
+from repro.models import transformer as T
+from repro.serve.engine import DecodeEngine, PagedDecodeEngine, Request
+from repro.serve.kv_cache import BlockAllocator, PagedKVCache
+
+pytestmark = pytest.mark.serving
+
+
+def _tiny_cfg(arch="qwen2-1.5b", **over):
+    cfg = dataclasses.replace(
+        get_config(arch).reduced(),
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=1, head_dim=32,
+        d_ff=128, vocab_size=64)
+    return dataclasses.replace(cfg, **over) if over else cfg
+
+
+def _requests(rng, n, lo, hi, max_new=(1, 10)):
+    return [Request(rid=i,
+                    prompt=np.asarray(rng.integers(1, 64, size=int(l)),
+                                      np.int32),
+                    max_new_tokens=int(m))
+            for i, (l, m) in enumerate(zip(
+                rng.integers(lo, hi, size=n),
+                rng.integers(max_new[0], max_new[1], size=n)))]
+
+
+def _gens(finished):
+    return {r.rid: list(r.generated) for r in finished}
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp gather oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window,softcap", [(None, None), (7, None),
+                                            (None, 30.0), (7, 30.0)])
+def test_paged_kernel_matches_ref(window, softcap, dtype):
+    key = jax.random.PRNGKey(0)
+    b, kv, g, dh, ps, mb = 3, 2, 4, 32, 8, 5
+    np_pages = 1 + b * mb
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, kv, g, dh), dtype)
+    k_pages = jax.random.normal(ks[1], (np_pages, ps, kv, dh), dtype)
+    v_pages = jax.random.normal(ks[2], (np_pages, ps, kv, dh), dtype)
+    # scrambled disjoint block tables, never the trash page 0
+    rng = np.random.default_rng(1)
+    bt = jnp.asarray(rng.permutation(np.arange(1, np_pages))
+                     .reshape(b, mb).astype(np.int32))
+    ctx = jnp.asarray([1, 17, mb * ps], jnp.int32)  # ragged live lengths
+    out = paged_attention(q, k_pages, v_pages, bt, ctx,
+                          window=window, softcap=softcap)
+    ref = paged_attention_ref(q, k_pages, v_pages, bt, ctx,
+                              window=window, softcap=softcap)
+    assert out.dtype == q.dtype
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# block allocator / paged cache invariants
+# ---------------------------------------------------------------------------
+def test_block_allocator_invariants():
+    a = BlockAllocator(num_pages=9, page_size=4)
+    assert a.num_free == 8  # page 0 reserved
+    got = a.alloc(3)
+    assert len(got) == 3 and 0 not in got
+    a.check()
+    assert a.alloc(6) is None          # all-or-nothing: 5 free < 6
+    assert a.num_free == 5             # failed alloc allocated nothing
+    a.free(got)
+    a.check()
+    with pytest.raises(ValueError):    # double-free
+        a.free(got)
+    a.check()
+    assert a.blocks_for(0) == 0
+    assert a.blocks_for(1) == 1
+    assert a.blocks_for(4) == 1
+    assert a.blocks_for(5) == 2
+
+
+def test_paged_kv_cache_admit_grow_release():
+    kv = PagedKVCache(num_slots=2, pages_per_seq=4,
+                      allocator=BlockAllocator(num_pages=8, page_size=4))
+    assert kv.admit(0, 6)              # 2 pages
+    assert kv.tables[0, 0] != 0 and kv.tables[0, 1] != 0
+    assert kv.tables[0, 2] == 0        # unallocated → trash
+    assert kv.ensure(0, 6)             # covered: no-op
+    assert kv.ensure(0, 9)             # grow to 3 pages
+    assert kv.admit(1, 16)             # 4 pages
+    assert not kv.ensure(0, 16)        # pool exhausted (7 of 7 used)
+    kv.release(1)
+    kv.allocator.check()
+    assert kv.ensure(0, 16)
+    kv.release(0)
+    kv.allocator.check()
+    assert kv.allocator.num_allocated == 0
+    assert (kv.tables == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# paged engine ≡ dense engine (greedy token parity)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cache_dtype", ["float32", "bfloat16"])
+@pytest.mark.parametrize("lo,hi", [(1, 12), (16, 40)])  # short + long mixes
+def test_paged_engine_matches_dense(lo, hi, cache_dtype):
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    dense = DecodeEngine(params, cfg, batch_slots=3, max_seq=48,
+                         cache_dtype=cache_dtype)
+    paged = PagedDecodeEngine(params, cfg, batch_slots=3, max_seq=48,
+                              page_size=4, chunk_size=8,
+                              cache_dtype=cache_dtype, use_kernel=False)
+    for r in _requests(np.random.default_rng(3), 7, lo, hi):
+        dense.submit(r)
+    for r in _requests(np.random.default_rng(3), 7, lo, hi):
+        paged.submit(r)
+    assert _gens(dense.run()) == _gens(paged.run())
+    paged.kv.allocator.check()
+    assert paged.kv.allocator.num_allocated == 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2-1.5b", "gemma3-1b"])
+def test_paged_engine_kernel_path_matches_dense(arch):
+    """Pallas kernel decode path (interpret on CPU) — includes gemma3's
+    sliding-window + softcap-free qk-norm layout, where the window rides
+    the scalar-prefetch operand."""
+    over = {} if arch == "qwen2-1.5b" else dict(num_kv_heads=1)
+    cfg = _tiny_cfg(arch, **over)
+    params = T.init_model(jax.random.PRNGKey(1), cfg)
+    dense = DecodeEngine(params, cfg, batch_slots=2, max_seq=32)
+    paged = PagedDecodeEngine(params, cfg, batch_slots=2, max_seq=32,
+                              page_size=4, chunk_size=8, use_kernel=True)
+    assert paged.use_kernel
+    for r in _requests(np.random.default_rng(5), 3, 2, 24, max_new=(2, 6)):
+        dense.submit(r)
+    for r in _requests(np.random.default_rng(5), 3, 2, 24, max_new=(2, 6)):
+        paged.submit(r)
+    assert _gens(dense.run()) == _gens(paged.run())
+
+
+def test_paged_engine_randomized_stream_matches_dense():
+    """Randomized admission/termination order: requests arrive in bursts
+    between engine steps, with wildly mixed lengths and budgets."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(2), cfg)
+    dense = DecodeEngine(params, cfg, batch_slots=3, max_seq=48)
+    paged = PagedDecodeEngine(params, cfg, batch_slots=3, max_seq=48,
+                              page_size=8, chunk_size=4, use_kernel=False)
+
+    def stream(eng):
+        rng = np.random.default_rng(11)
+        reqs = _requests(rng, 10, 1, 30, max_new=(1, 8))
+        it = iter(reqs)
+        pending = len(reqs)
+        while pending or eng.queue or any(p != "idle" for p in eng.phase):
+            for _ in range(int(rng.integers(0, 3))):  # burst of 0-2 arrivals
+                r = next(it, None)
+                if r is not None:
+                    eng.submit(r)
+                    pending -= 1
+            eng.step()
+        return eng.finished
+
+    assert _gens(stream(dense)) == _gens(stream(paged))
+
+
+def test_eviction_completes_identically_and_no_leak():
+    """A page-starved pool forces head-of-line blocking + recompute
+    eviction; outputs must not change, and the allocator must end clean."""
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    ample = PagedDecodeEngine(params, cfg, batch_slots=3, max_seq=48,
+                              page_size=4, chunk_size=8, use_kernel=False)
+    tiny = PagedDecodeEngine(params, cfg, batch_slots=3, max_seq=48,
+                             page_size=4, chunk_size=8, num_pages=1 + 12,
+                             use_kernel=False)
+    for r in _requests(np.random.default_rng(7), 8, 1, 20):
+        ample.submit(r)
+    for r in _requests(np.random.default_rng(7), 8, 1, 20):
+        tiny.submit(r)
+    ga, gt = _gens(ample.run()), _gens(tiny.run())
+    assert ga == gt
+    assert sum(r.evictions for r in tiny.finished) >= 0  # may or may not fire
+    tiny.kv.allocator.check()
+    assert tiny.kv.allocator.num_allocated == 0
+
+
+def test_preemption_drain_releases_all_pages():
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = PagedDecodeEngine(params, cfg, batch_slots=2, max_seq=48,
+                            page_size=4, chunk_size=4, use_kernel=False)
+    for r in _requests(np.random.default_rng(9), 5, 8, 30, max_new=(20, 30)):
+        eng.submit(r)
+    done = eng.run(max_steps=3)  # force a mid-flight drain
+    assert any(r.preempted for r in done)
+    eng.kv.allocator.check()
+    assert eng.kv.allocator.num_allocated == 0
+    assert (eng.kv.tables == 0).all()
+
+
+def test_int8_cache_dtype_decodes():
+    cfg = _tiny_cfg()
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    eng = PagedDecodeEngine(params, cfg, batch_slots=2, max_seq=32,
+                            page_size=4, chunk_size=8, cache_dtype="int8")
+    assert not eng.use_kernel  # int8 pages force the gather/dequant path
+    assert eng.cache["0"]["k_pages"].dtype == jnp.int8
+    assert "k_scale" in eng.cache["0"]
+    for r in _requests(np.random.default_rng(4), 3, 2, 16, max_new=(3, 6)):
+        eng.submit(r)
+    done = eng.run()
+    assert all(r.done and len(r.generated) == min(
+        r.max_new_tokens, 32 - len(r.prompt)) for r in done)
+
+
+def test_paged_cache_rejects_recurrent_stacks():
+    cfg = get_config("xlstm-125m").reduced()
+    with pytest.raises(ValueError, match="attention-only"):
+        T.init_paged_cache(cfg, num_pages=4, page_size=4)
+
+
+# ---------------------------------------------------------------------------
+# greedy_generate prefill-cache pad (satellite: layout-keyed, not
+# shape-coincidence-keyed)
+# ---------------------------------------------------------------------------
+def test_greedy_generate_adversarial_prompt_length():
+    """xlstm's mlstm cache leaf C is (repeat, B, H, dh, dh): with a prompt
+    of length H the old ``x.shape[2] == lp`` heuristic padded the HEAD
+    axis of recurrent state, corrupting decode.  The layout-keyed pad
+    must leave recurrent leaves alone and still match teacher-forced
+    forward argmax."""
+    from repro.serve.engine import greedy_generate
+
+    cfg = dataclasses.replace(get_config("xlstm-125m").reduced(),
+                              num_layers=2, d_model=64, vocab_size=64)
+    params = T.init_model(jax.random.PRNGKey(3), cfg)
+    lp = cfg.num_heads  # adversarial: prompt length == head count
+    prompt = np.arange(1, lp + 1, dtype=np.int32)
+    gen = greedy_generate(params, cfg, prompt, max_new_tokens=4)
+    seq = list(prompt)
+    for _ in range(4):
+        logits, _ = T.forward(params, cfg, tokens=jnp.asarray(seq)[None])
+        seq.append(int(jnp.argmax(logits[0, -1])))
+    assert gen == seq[lp:]
