@@ -11,6 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
+from repro.configs import get_config
 from repro.core import strategies as ST
 from repro.core.comm import LocalComm
 from repro.core.compression import get_compressor, wire_bytes
@@ -19,7 +20,6 @@ from repro.models import transformer as T
 from repro.optim import adam
 from repro.train.loop import (init_train_state, make_loss_fn,
                               make_replica_train_step)
-from repro.configs import get_config
 
 W, STEPS = 4, 120
 

@@ -12,16 +12,14 @@ in EXPERIMENTS.md §End-to-end.)
 """
 
 import argparse
-import dataclasses
 import json
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import save_checkpoint
-from repro.configs.base import ModelConfig, register
+from repro.configs.base import ModelConfig
 from repro.core.comm import LocalComm
 from repro.core.compression import get_compressor
 from repro.core.strategies import get_strategy

@@ -1,0 +1,34 @@
+"""repro.analysis — static analysis over jaxprs and compiled HLO
+(DESIGN.md §11).
+
+Every performance/correctness contract the repo has accumulated is a
+named lint rule with ONE implementation (repro.analysis.rules), fed by
+rig builders (repro.analysis.rigs), swept over the production
+config × strategy × precision × accum matrix (repro.analysis.sweep),
+reported in a single schema (repro.analysis.report), and driven by
+``python -m repro.launch.lint`` whose committed ``LINT.json`` CI
+validates like the bench tiers.
+"""
+
+from repro.analysis.report import (  # noqa: F401
+    RULES,
+    Cell,
+    RuleResult,
+    build_report,
+    result,
+    validate,
+    validate_file,
+    violations,
+)
+from repro.analysis.rules import (  # noqa: F401
+    collective_budget,
+    cond_gating,
+    donation_aliasing,
+    fused_dispatch,
+    gating_ratio,
+    iter_jaxpr_collectives,
+    promotion_proof,
+    retrace,
+    state_aliasing,
+    tree_snapshot,
+)

@@ -1,0 +1,166 @@
+"""Report schema for the static-analysis linter (DESIGN.md §11).
+
+One ``RuleResult`` per (rule, matrix cell), one ``Report`` per sweep.
+``LINT.json`` is the committed artifact — validated in CI exactly like
+the bench tiers (validate → smoke rerun → re-validate): a missing file,
+a malformed record, or any ``fail`` status turns the job red.
+
+Statuses:
+
+  pass  the compiled/traced artifact satisfies the contract
+  fail  a violation — ``findings`` carries one message per offence
+  skip  the rule does not apply to this cell (e.g. promotion-proof on an
+        f32 wire); never counts against the sweep
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+RULES = (
+    "collective-budget",
+    "promotion-proof",
+    "donation-aliasing",
+    "cond-gating",
+    "fused-dispatch",
+    "retrace-detector",
+    "state-aliasing",
+)
+
+STATUSES = ("pass", "fail", "skip")
+
+
+@dataclass
+class RuleResult:
+    rule: str
+    status: str
+    findings: List[str] = field(default_factory=list)
+    details: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.rule not in RULES:
+            raise ValueError(f"unknown rule {self.rule!r}")
+        if self.status not in STATUSES:
+            raise ValueError(f"unknown status {self.status!r}")
+        if self.status == "fail" and not self.findings:
+            raise ValueError(f"{self.rule}: fail with no findings")
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "status": self.status,
+                "findings": list(self.findings), "details": self.details}
+
+
+def result(rule: str, findings: List[str], details: Optional[dict] = None,
+           skip: Optional[str] = None) -> RuleResult:
+    """Build a RuleResult: ``skip`` (a reason string) wins, else the
+    presence of findings decides pass/fail."""
+    if skip is not None:
+        return RuleResult(rule, "skip", [], {"reason": skip,
+                                             **(details or {})})
+    return RuleResult(rule, "fail" if findings else "pass",
+                      findings, details or {})
+
+
+@dataclass
+class Cell:
+    config: str
+    strategy: str
+    precision: str
+    accum: int
+    rules: List[RuleResult]
+
+    def to_json(self) -> dict:
+        return {"config": self.config, "strategy": self.strategy,
+                "precision": self.precision, "accum": self.accum,
+                "rules": [r.to_json() for r in self.rules]}
+
+
+def build_report(cells: List[Cell], meta: dict) -> dict:
+    counts = {"pass": 0, "fail": 0, "skip": 0}
+    for c in cells:
+        for r in c.rules:
+            counts[r.status] += 1
+    return {
+        "meta": {"schema": 1, **meta},
+        "cells": [c.to_json() for c in cells],
+        "summary": {"cells": len(cells), **counts,
+                    "violations": counts["fail"]},
+    }
+
+
+def violations(report: dict) -> List[str]:
+    """Flat '<config>/<strategy>/<precision>/accum<k>: <rule>: <msg>'
+    lines for every failing rule in the report."""
+    out = []
+    for c in report.get("cells", []):
+        tag = (f"{c['config']}/{c['strategy']}/{c['precision']}"
+               f"/accum{c['accum']}")
+        for r in c["rules"]:
+            if r["status"] == "fail":
+                for f in r["findings"] or ["(no message)"]:
+                    out.append(f"{tag}: {r['rule']}: {f}")
+    return out
+
+
+def validate(report: dict, path: str = "LINT.json") -> dict:
+    """Schema + acceptance check; raises ValueError on any problem.
+
+    Acceptance (all files, smoke or full): zero ``fail`` statuses — the
+    lint contracts must hold on whatever slice was swept."""
+    for key in ("meta", "cells", "summary"):
+        if key not in report:
+            raise ValueError(f"{path}: missing top-level {key!r}")
+    meta = report["meta"]
+    if meta.get("schema") != 1:
+        raise ValueError(f"{path}: unsupported schema {meta.get('schema')}")
+    for key in ("backend", "jax", "smoke", "workers"):
+        if key not in meta:
+            raise ValueError(f"{path}: meta missing {key!r}")
+    cells = report["cells"]
+    if not cells:
+        raise ValueError(f"{path}: empty cell list")
+    seen = set()
+    for c in cells:
+        for key in ("config", "strategy", "precision", "accum", "rules"):
+            if key not in c:
+                raise ValueError(f"{path}: cell missing {key!r}: {c}")
+        tag = (c["config"], c["strategy"], c["precision"], c["accum"])
+        if tag in seen:
+            raise ValueError(f"{path}: duplicate cell {tag}")
+        seen.add(tag)
+        if not c["rules"]:
+            raise ValueError(f"{path}: cell {tag} has no rule results")
+        names = [r.get("rule") for r in c["rules"]]
+        for r in c["rules"]:
+            if r.get("rule") not in RULES:
+                raise ValueError(f"{path}: unknown rule {r.get('rule')!r}")
+            if r.get("status") not in STATUSES:
+                raise ValueError(
+                    f"{path}: bad status {r.get('status')!r} in {tag}")
+        missing = set(RULES) - set(names)
+        if missing:
+            raise ValueError(
+                f"{path}: cell {tag} missing rules {sorted(missing)}")
+    bad = violations(report)
+    if bad:
+        raise ValueError(f"{path}: {len(bad)} rule violation(s); first: "
+                         + bad[0])
+    summ = report["summary"]
+    if summ.get("cells") != len(cells):
+        raise ValueError(f"{path}: summary cell count mismatch")
+    return report
+
+
+def validate_file(path: str) -> dict:
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except FileNotFoundError:
+        raise ValueError(f"{path}: missing — run "
+                         f"`python -m repro.launch.lint --all` and commit "
+                         f"the artifact") from None
+    except json.JSONDecodeError as e:
+        raise ValueError(f"{path}: not valid JSON ({e})") from None
+    return validate(report, path)

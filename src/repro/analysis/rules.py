@@ -1,0 +1,282 @@
+"""The lint rules (DESIGN.md §11): pure functions over compiled/traced
+artifacts — HLO text, jaxprs, alias tables, jit cache sizes, pytree
+snapshots.  No rule builds or runs jax programs; ``repro.analysis.rigs``
+produces the artifacts, tests and the ``repro.launch.lint`` CLI feed
+them here, so every perf contract has exactly ONE proof implementation.
+
+Each function returns a ``RuleResult`` (pass / fail+findings / skip).
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import List
+
+from repro.analysis.report import RuleResult, result
+from repro.roofline.analysis import iter_collective_instrs
+
+# Collectives above this output size are "wire" traffic charged against
+# the bucket budget; at or below it they are scalar control traffic (the
+# loss pmean, the finite-flag pmin under loss scaling) which every
+# production step is allowed a small number of.
+SCALAR_BYTES_OK = 64
+SCALAR_COUNT_OK = 4
+
+
+def _split_wire_scalar(hlo_text: str, scalar_bytes_ok: int):
+    instrs = list(iter_collective_instrs(hlo_text))
+    wire = [i for i in instrs if i["bytes"] > scalar_bytes_ok]
+    scalar = [i for i in instrs if i["bytes"] <= scalar_bytes_ok]
+    return wire, scalar
+
+
+# ---------------------------------------------------------------------------
+# collective-budget — ≤ n_buckets collectives per exchange, per op type
+# ---------------------------------------------------------------------------
+def collective_budget(hlo_text: str, contract: dict,
+                      scalar_bytes_ok: int = SCALAR_BYTES_OK,
+                      scalar_count_ok: int = SCALAR_COUNT_OK,
+                      require_wire: bool = True) -> RuleResult:
+    """Lint compiled HLO against a ``Fabric.collective_contract``:
+    every wire-sized collective op must stay within its per-op budget,
+    ops absent from the contract must not appear at all, and scalar
+    control traffic stays under a small count allowance.
+
+    ``require_wire``: a non-empty contract must produce at least one
+    wire collective — an exchange optimised away entirely is as much a
+    contract violation as an extra all-reduce."""
+    wire, scalar = _split_wire_scalar(hlo_text, scalar_bytes_ok)
+    counts = Counter(i["op"] for i in wire)
+    findings: List[str] = []
+    for op, n in sorted(counts.items()):
+        cap = int(contract.get(op, 0))
+        if n > cap:
+            findings.append(
+                f"{op}: {n} wire instruction(s) exceed budget {cap}")
+    if require_wire and contract and not wire:
+        findings.append(
+            "no wire collective compiled for a non-empty contract "
+            f"{contract}")
+    if len(scalar) > scalar_count_ok:
+        findings.append(
+            f"{len(scalar)} scalar collectives exceed allowance "
+            f"{scalar_count_ok}")
+    return result("collective-budget", findings,
+                  {"counts": dict(counts), "scalar": len(scalar),
+                   "contract": {k: int(v) for k, v in contract.items()}})
+
+
+# ---------------------------------------------------------------------------
+# promotion-proof — no f32 payload on the wire when wire_dtype is narrow
+# ---------------------------------------------------------------------------
+def promotion_proof(hlo_text: str, narrow_wire: bool,
+                    scalar_bytes_ok: int = SCALAR_BYTES_OK) -> RuleResult:
+    """XLA convert-promotes narrow collectives back to f32 unless the op
+    is expressed in promotion-proof form (all-to-all decomposition,
+    bitcast-u16 gathers — core/fabric.py).  Under a narrow wire no
+    collective above the scalar allowance may carry an f32/f64 payload."""
+    if not narrow_wire:
+        return result("promotion-proof", [],
+                      skip="f32 wire: nothing to promote")
+    wire, _ = _split_wire_scalar(hlo_text, scalar_bytes_ok)
+    # Tuple-shaped instrs are exempt: XLA:CPU materializes a narrow
+    # all-to-all as a tuple-of-f32 instruction even when the StableHLO
+    # carries bf16 (per-peer buffers, backend-internal widening) — same
+    # semantics as the repo's `=\s*f32\[` non-tuple wire checks.
+    findings = [
+        f"{i['op']}: f32 payload ({i['bytes']} B) on a narrow wire"
+        for i in wire
+        if not i.get("tuple")
+        and any(dt in ("f32", "f64") for dt in i["dtypes"])]
+    return result("promotion-proof", findings,
+                  {"wire_instrs": len(wire)})
+
+
+# ---------------------------------------------------------------------------
+# donation-aliasing — donated train state aliases input↔output buffers
+# ---------------------------------------------------------------------------
+def donation_aliasing(alias_bytes: int, donated_bytes: int,
+                      min_frac: float = 0.5) -> RuleResult:
+    """``alias_bytes`` from ``compiled.memory_analysis()`` must cover at
+    least ``min_frac`` of the donated train-state bytes — donation that
+    silently fails to alias doubles peak memory without any error."""
+    findings: List[str] = []
+    frac = alias_bytes / max(1, donated_bytes)
+    if alias_bytes <= 0:
+        findings.append("no input/output aliasing in the compiled module "
+                        "(donation had no effect)")
+    elif frac < min_frac:
+        findings.append(
+            f"aliased {alias_bytes} of {donated_bytes} donated bytes "
+            f"({frac:.1%} < {min_frac:.0%})")
+    return result("donation-aliasing", findings,
+                  {"alias_bytes": int(alias_bytes),
+                   "donated_bytes": int(donated_bytes),
+                   "frac": round(frac, 4)})
+
+
+# ---------------------------------------------------------------------------
+# cond-gating — gated strategies keep collectives under lax.cond branches
+# ---------------------------------------------------------------------------
+# jaxpr-level primitives that lower to collectives
+COLLECTIVE_PRIMS = frozenset((
+    "psum", "pmin", "pmax", "ppermute", "pbroadcast",
+    "all_gather", "all_to_all", "psum_scatter", "reduce_scatter",
+))
+
+
+def _subjaxprs(v):
+    if hasattr(v, "eqns") or hasattr(v, "jaxpr"):  # Jaxpr / ClosedJaxpr
+        yield v
+    elif isinstance(v, (tuple, list)):
+        for x in v:
+            yield from _subjaxprs(x)
+
+
+def iter_jaxpr_collectives(jaxpr, _in_cond: bool = False):
+    """Yield ``(primitive_name, under_cond)`` for every collective
+    primitive reachable from ``jaxpr`` (walks scan/while/pjit/shard_map
+    bodies; ``under_cond`` is True once any enclosing eqn is a cond)."""
+    jx = getattr(jaxpr, "jaxpr", jaxpr)
+    for eqn in jx.eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            yield name, _in_cond
+        sub_in_cond = _in_cond or name == "cond"
+        for v in eqn.params.values():
+            for sub in _subjaxprs(v):
+                yield from iter_jaxpr_collectives(sub, sub_in_cond)
+
+
+def cond_gating(jaxpr, gated: bool) -> RuleResult:
+    """A ``gated=True`` strategy traced with a *traced* step counter must
+    keep every collective primitive inside a ``lax.cond`` branch — a
+    ``jnp.where``-style gate ships the bytes every step and discards
+    them, silently multiplying wire traffic by sync_every."""
+    if not gated:
+        return result("cond-gating", [],
+                      skip="strategy communicates unconditionally")
+    hits = list(iter_jaxpr_collectives(jaxpr))
+    findings = [f"collective {name!r} outside any lax.cond branch"
+                for name, under in hits if not under]
+    if not hits:
+        findings.append("no collective found at all — the gated exchange "
+                        "was traced away")
+    return result("cond-gating", findings,
+                  {"collectives": len(hits),
+                   "under_cond": sum(1 for _, u in hits if u)})
+
+
+def gating_ratio(bytes_ungated: float, bytes_gated: float,
+                 sync_every: int, slack: float = 0.75) -> RuleResult:
+    """Wire-byte side of the gating contract: summed over sync_every
+    consecutive steps, a gated schedule must ship ≤ 1/(slack·sync_every)
+    of the every-step bytes (slack absorbs per-sync constant traffic)."""
+    findings: List[str] = []
+    if bytes_ungated <= 0:
+        findings.append("ungated baseline shipped zero bytes")
+    else:
+        ratio = bytes_ungated / max(1.0, bytes_gated)
+        if ratio < slack * sync_every:
+            findings.append(
+                f"gated bytes only {ratio:.2f}x below every-step bytes "
+                f"(expected ≥ {slack * sync_every:.2f}x for "
+                f"sync_every={sync_every})")
+    return result("cond-gating", findings,
+                  {"bytes_ungated": float(bytes_ungated),
+                   "bytes_gated": float(bytes_gated),
+                   "sync_every": sync_every})
+
+
+# ---------------------------------------------------------------------------
+# fused-dispatch — compressed exchanges go through the Pallas kernels
+# ---------------------------------------------------------------------------
+def fused_dispatch(jaxpr_text: str, codec_calls: int,
+                   expect_fused: bool = True) -> RuleResult:
+    """On a ``Fabric(fused=True)`` compressed path the traced program
+    must contain ``pallas_call`` (the fused encode+error-feedback
+    kernel) and must never have invoked the jnp pack/codec fallback."""
+    if not expect_fused:
+        return result("fused-dispatch", [], skip="fused dispatch disabled")
+    findings: List[str] = []
+    if "pallas_call" not in jaxpr_text:
+        findings.append("no pallas_call in the traced exchange "
+                        "(fused kernel not dispatched)")
+    if codec_calls:
+        findings.append(f"jnp codec invoked {codec_calls} time(s) on the "
+                        "fused path")
+    return result("fused-dispatch", findings, {"codec_calls": codec_calls})
+
+
+# ---------------------------------------------------------------------------
+# retrace-detector — zero jit cache misses after step 0
+# ---------------------------------------------------------------------------
+def retrace(cache_sizes: List[int]) -> RuleResult:
+    """``cache_sizes[i]`` is the step fn's jit cache size after call i of
+    a steady-state run: it must be exactly 1 throughout — every growth
+    is a silent recompilation in the training loop."""
+    findings: List[str] = []
+    if not cache_sizes:
+        findings.append("no steps recorded")
+    else:
+        if cache_sizes[0] != 1:
+            findings.append(
+                f"cache size {cache_sizes[0]} after first step (≠ 1)")
+        for i, n in enumerate(cache_sizes[1:], start=1):
+            if n != cache_sizes[0]:
+                findings.append(f"retrace at step {i}: cache grew "
+                                f"{cache_sizes[0]} → {n}")
+                break
+    return result("retrace-detector", findings,
+                  {"cache_sizes": list(cache_sizes)})
+
+
+# ---------------------------------------------------------------------------
+# state-aliasing — strategy.update must not mutate its comm_state arg
+# ---------------------------------------------------------------------------
+def tree_snapshot(tree):
+    """Structural identity snapshot of a pytree-ish value: container ids
+    + keys + leaf object ids.  Taken before/after a call, a diff proves
+    in-place mutation of the argument (the comm_state aliasing bug class
+    fixed in PR 2: update wrote into the caller's dict, corrupting saved
+    state that resume/re-step paths rely on)."""
+    if isinstance(tree, dict):
+        return ("dict", id(tree),
+                tuple(sorted((k, tree_snapshot(v)) for k, v in tree.items())))
+    if isinstance(tree, (list, tuple)):
+        return (type(tree).__name__, id(tree),
+                tuple(tree_snapshot(v) for v in tree))
+    return ("leaf", id(tree))
+
+
+def _diff(before, after, path: str, out: List[str]):
+    if before[0] != after[0]:
+        out.append(f"{path or '<root>'}: container type changed "
+                   f"{before[0]} → {after[0]}")
+        return
+    if before[0] == "leaf":
+        if before[1] != after[1]:
+            out.append(f"{path or '<root>'}: leaf object replaced in place")
+        return
+    if before[1] != after[1]:
+        out.append(f"{path or '<root>'}: container object replaced")
+        return
+    if before[0] == "dict":
+        bk = {k: v for k, v in before[2]}
+        ak = {k: v for k, v in after[2]}
+        for k in sorted(set(bk) | set(ak)):
+            if k not in ak:
+                out.append(f"{path}[{k!r}]: key deleted from the argument")
+            elif k not in bk:
+                out.append(f"{path}[{k!r}]: key inserted into the argument")
+            else:
+                _diff(bk[k], ak[k], f"{path}[{k!r}]", out)
+    else:
+        for i, (b, a) in enumerate(zip(before[2], after[2])):
+            _diff(b, a, f"{path}[{i}]", out)
+
+
+def state_aliasing(snap_before, snap_after) -> RuleResult:
+    findings: List[str] = []
+    _diff(snap_before, snap_after, "comm_state", findings)
+    return result("state-aliasing", findings)

@@ -1,0 +1,152 @@
+"""Matrix sweep: evaluate every lint rule for every
+(config × strategy × precision × accum) cell and assemble the Report.
+
+Artifact reuse is deliberate and recorded in each rule's details:
+
+  * exchange artifacts are per (config, strategy, precision) — the
+    boundary exchange is by construction identical at every
+    ``accum_steps`` (the loop calls ``strategy.update`` exactly once
+    per boundary; tests/test_accum.py proves it on the production
+    step), so accum cells lint the same compiled exchange.
+  * loop artifacts (donation, retrace) and eager artifacts
+    (state-aliasing, fused-dispatch codec counting) prove contracts of
+    train/loop.py and the strategy code that do not depend on the
+    model, so they are shared across configs.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from repro.analysis import rigs, rules
+from repro.analysis.report import Cell, RuleResult, build_report, result
+from repro.configs.base import get_config, list_configs
+from repro.core import strategies as ST
+
+# the 10 registered archs + the sliding-window long-context variant
+# (launch/specs.py resolves it for the long_500k shape)
+LINT_CONFIGS = tuple(sorted(list_configs())) + ("qwen2.5-14b-swa",)
+LINT_STRATEGIES = tuple(sorted(ST.REGISTRY))
+LINT_PRECISIONS = ("f32", "bf16")
+LINT_ACCUMS = (1, 4)
+
+SMOKE_CONFIGS = ("gemma3-1b", "qwen2-1.5b")
+
+
+class _Cache(dict):
+    def get_or(self, key, build):
+        if key not in self:
+            self[key] = build()
+        return self[key]
+
+
+def _exchange_rules(cache: _Cache, cfg_name: str, strategy: str,
+                    precision: str, accum: int) -> List[RuleResult]:
+    pol = rigs.rig_policy(precision)
+
+    def build():
+        params = rigs.param_sds(get_config(cfg_name), pol)
+        return rigs.exchange_artifacts(params, strategy, precision)
+
+    ex = cache.get_or(("exchange", cfg_name, strategy, precision), build)
+    strat = ex["strategy"]
+    budget = rules.collective_budget(ex["hlo"], ex["contract"])
+    budget.details["n_buckets"] = ex["layout"].n_buckets
+    if accum > 1:
+        budget.details["accum_note"] = (
+            "boundary exchange is accum-invariant: the loop calls "
+            "strategy.update once per boundary (tests/test_accum.py)")
+    promo = rules.promotion_proof(ex["hlo"], ex["narrow_wire"])
+    gating = rules.cond_gating(ex["jaxpr"], strat.gated)
+    if strat.gated:
+        gating.details["sync_every"] = strat.sync_every
+    return [budget, promo, gating]
+
+
+def _fused_rule(cache: _Cache, cfg_name: str, strategy: str,
+                precision: str) -> RuleResult:
+    # only compressed wire profiles dispatch the fused codec kernels
+    if strategy != "sync_dgc":
+        return result("fused-dispatch", [],
+                      skip="uncompressed wire (no codec on this path)")
+
+    def build():
+        pol = rigs.rig_policy(precision)
+        params = rigs.param_sds(get_config(cfg_name), pol)
+        return rigs.fused_artifacts(params, precision)
+
+    art = cache.get_or(("fused", cfg_name, precision), build)
+    return rules.fused_dispatch(art["jaxpr_text"], art["codec_calls"])
+
+
+def _loop_rules(cache: _Cache, strategy: str, precision: str,
+                accum: int) -> List[RuleResult]:
+    art = cache.get_or(
+        ("loop", strategy, precision, accum),
+        lambda: rigs.loop_artifacts(strategy, precision, accum))
+    donation = rules.donation_aliasing(art["alias_bytes"],
+                                       art["donated_bytes"])
+    donation.details["shared_rig"] = "per (strategy, precision, accum)"
+    retrace = rules.retrace(art["cache_sizes"])
+    return [donation, retrace]
+
+
+def _state_rule(cache: _Cache, strategy: str, precision: str) -> RuleResult:
+    art = cache.get_or(
+        ("state", strategy, precision),
+        lambda: rigs.state_aliasing_artifacts(strategy, precision))
+    findings: List[str] = []
+    for before, after in art["snapshots"]:
+        findings.extend(rules.state_aliasing(before, after).findings)
+    return result("state-aliasing", findings,
+                  {"update_calls": len(art["snapshots"])})
+
+
+def evaluate_cell(cache: _Cache, cfg_name: str, strategy: str,
+                  precision: str, accum: int) -> Cell:
+    rr = _exchange_rules(cache, cfg_name, strategy, precision, accum)
+    rr.append(_fused_rule(cache, cfg_name, strategy, precision))
+    rr.extend(_loop_rules(cache, strategy, precision, accum))
+    rr.append(_state_rule(cache, strategy, precision))
+    return Cell(cfg_name, strategy, precision, accum, rr)
+
+
+def sweep(configs: Optional[Tuple[str, ...]] = None,
+          strategies: Tuple[str, ...] = LINT_STRATEGIES,
+          precisions: Tuple[str, ...] = LINT_PRECISIONS,
+          accums: Tuple[int, ...] = LINT_ACCUMS,
+          smoke: bool = False,
+          progress=None) -> Tuple[List[Cell], Dict]:
+    """Evaluate the matrix; returns (cells, rig-cache stats)."""
+    if configs is None:
+        configs = SMOKE_CONFIGS if smoke else LINT_CONFIGS
+    cache = _Cache()
+    cells: List[Cell] = []
+    for cfg_name in configs:
+        for strategy in strategies:
+            for precision in precisions:
+                for accum in accums:
+                    cells.append(evaluate_cell(cache, cfg_name, strategy,
+                                               precision, accum))
+                    if progress is not None:
+                        progress(cells[-1])
+    return cells, {"rigs_built": len(cache)}
+
+
+def run(configs: Optional[Tuple[str, ...]] = None, smoke: bool = False,
+        progress=None) -> dict:
+    import jax
+
+    cells, stats = sweep(configs=configs, smoke=smoke, progress=progress)
+    meta = {
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "smoke": bool(smoke),
+        "workers": rigs.WORKERS,
+        "configs": sorted({c.config for c in cells}),
+        "strategies": list(LINT_STRATEGIES),
+        "precisions": list(LINT_PRECISIONS),
+        "accums": list(LINT_ACCUMS),
+        **stats,
+    }
+    return build_report(cells, meta)

@@ -10,8 +10,7 @@ super-block, so the scan stays homogeneous.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 FULL_ATTENTION = -1  # sentinel: no sliding window

@@ -28,7 +28,6 @@ to it by default.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
 from typing import Callable, Optional
 
 import jax

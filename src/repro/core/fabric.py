@@ -329,6 +329,45 @@ class Fabric:
         return {"wire_bytes": jnp.asarray(nbytes, jnp.float32) * ev,
                 "comm_events": ev}
 
+    def collective_contract(self, tree_or_layout, profile: str,
+                            events: int = 1) -> dict:
+        """Expected HLO collective budget for ONE exchange of the tree —
+        the introspection hook ``repro.analysis`` lints compiled programs
+        against.  Maps collective op name -> max instruction count; ops
+        absent from the mapping must not appear at all (scalar control
+        traffic is budgeted separately by the rules).
+
+        ``profile`` names the wire shape a strategy declares
+        (``Strategy.wire_profile``):
+
+          dense        all-reduce(-mean/-sum) of the full tree
+          partitioned  ZeRO-1 reduce-scatter + all-gather per bucket
+          compressed   packed uint8 all-gather per bucket (codec wire)
+          ring         neighbour ppermute, ``events`` hops per exchange
+          none         no wire traffic at all
+        """
+        lay = (tree_or_layout
+               if isinstance(tree_or_layout, BucketLayout)
+               else self.layout(tree_or_layout))
+        nb = lay.n_buckets
+        narrow = self._narrow_sharded
+        if profile == "none":
+            return {}
+        if profile == "compressed":
+            # packed bytes ride one all-gather per bucket at every width
+            return {"all-gather": nb}
+        if profile == "dense":
+            if narrow:  # a2a decomposition + bitcast-u16 gather-back
+                return {"all-to-all": nb, "all-gather": nb}
+            return {"all-reduce": nb}
+        if profile == "partitioned":
+            if narrow:
+                return {"all-to-all": nb, "all-gather": nb}
+            return {"reduce-scatter": nb, "all-gather": nb}
+        if profile == "ring":
+            return {"collective-permute": int(events) * nb}
+        raise ValueError(f"unknown wire profile {profile!r}")
+
     # -- compression plumbing ----------------------------------------------
     def _vmap_replicas(self, fn):
         for _ in range(self.comm.lead_axes):

@@ -91,6 +91,14 @@ class PrecisionPolicy:
         return self.master_dt != self.param_dt
 
     @property
+    def narrow_wire(self) -> bool:
+        """True when uncompressed exchange buffers ship at 2 bytes/elt —
+        the condition under which the promotion-proof lint rule
+        (repro.analysis) applies: no f32 wire collective may survive
+        compilation on a sharded realization."""
+        return self.wire_dt.itemsize == 2
+
+    @property
     def is_noop(self) -> bool:
         """True when the policy changes nothing vs. policy-less f32."""
         f32 = jnp.dtype(jnp.float32)

@@ -72,6 +72,20 @@ class Strategy:
     #                 own ``sync_every``-style schedule — counted in
     #                 optimizer steps, never microbatches — decides when
     #                 to communicate.
+    wire_profile: str = "dense"  # DECLARATIVE: the HLO collective shape
+    #                 ONE exchange lowers to, in the vocabulary of
+    #                 ``Fabric.collective_contract`` (dense / partitioned /
+    #                 compressed / ring / none).  ``repro.analysis`` lints
+    #                 the compiled program against this claim.
+    gated: bool = False  # DECLARATIVE: the exchange is schedule-gated via
+    #                 ``_gate`` — with a traced step counter every
+    #                 collective must sit under a ``lax.cond`` branch
+    #                 (the cond-gating lint rule), and wire bytes scale
+    #                 by ~1/sync_every.
+    sync_every: int = 1  # the gating period (optimizer steps) when
+    #                 ``gated``; 1 ⇒ communicates at every update call.
+    wire_events: int = 1  # collective rounds per exchange event (ring
+    #                 gossip: 2 hops when symmetric).
 
     # Contract: ``update`` must treat ``comm_state`` as immutable and
     # return a FRESH mapping — callers re-step from saved state (resume,
@@ -125,7 +139,8 @@ def sync(compressor: Optional[Compressor] = None,
         params, opt_state = opt.update(g, opt_state, params, t)
         return params, opt_state, cstate, m
 
-    return Strategy("sync", 1, True, init, update)
+    return Strategy("sync", 1, True, init, update,
+                    wire_profile="compressed" if compressor else "dense")
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +200,7 @@ def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES,
         return params, new_state, cstate, m
 
     return Strategy("sync_zero1", 1, True, init, update, init_opt,
-                    owns_master=keeps_master)
+                    owns_master=keeps_master, wire_profile="partitioned")
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +222,8 @@ def local_sgd(sync_every: int = 8,
         return params, opt_state, cstate, m
 
     return Strategy("local_sgd", 2, True, init, update,
-                    exchange_at_boundary=False)
+                    exchange_at_boundary=False,
+                    gated=True, sync_every=sync_every)
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +247,8 @@ def sync_dgc(compressor: Compressor, momentum: float = 0.9,
         params, opt_state = opt.update(g, opt_state, params, t)
         return params, opt_state, {"dgc": new_dgc}, m
 
-    return Strategy("sync_dgc", 1, True, init, update)
+    return Strategy("sync_dgc", 1, True, init, update,
+                    wire_profile="compressed")
 
 
 # ---------------------------------------------------------------------------
@@ -276,7 +293,8 @@ def easgd(alpha: float = 0.1, sync_every: int = 4,
         return params, opt_state, {"center": center}, m
 
     return Strategy("easgd", 2, True, init, update,
-                    exchange_at_boundary=False)
+                    exchange_at_boundary=False,
+                    gated=True, sync_every=sync_every)
 
 
 # ---------------------------------------------------------------------------
@@ -423,7 +441,9 @@ def gossip(mix_every: int = 1, symmetric: bool = True,
         return params, opt_state, cstate, m
 
     return Strategy("gossip", 4, False, init, update,
-                    exchange_at_boundary=False)
+                    exchange_at_boundary=False, wire_profile="ring",
+                    gated=True, sync_every=mix_every,
+                    wire_events=2 if symmetric else 1)
 
 
 # ---------------------------------------------------------------------------

@@ -15,10 +15,10 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_adam import fused_adam as _adam
-from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.mamba_scan import mamba_scan as _mamba
 from repro.kernels.onebit_quant import onebit_quant as _onebit
 from repro.kernels.onebit_quant import onebit_quant_packed as _onebit_packed
+from repro.kernels.paged_attention import paged_attention as _paged
 from repro.kernels.topk_sparsify import topk_encode_ef as _topk_ef
 from repro.kernels.topk_sparsify import topk_sparsify as _topk
 

@@ -18,6 +18,7 @@ structure is also how multi-pod deployments actually launch.)
 
 import argparse
 import os
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +96,13 @@ def main():
     ap.add_argument("--arch", default="gemma3-1b")
     ap.add_argument("--bucket-mib", type=float, default=4.0)
     args = ap.parse_args()
+    from repro.configs import get_config, list_configs
+    try:
+        get_config(args.arch)
+    except KeyError:
+        print(f"unknown arch {args.arch!r}; valid names: "
+              + ", ".join(sorted(list_configs())), file=sys.stderr)
+        raise SystemExit(2)
     bucket_bytes = int(args.bucket_mib * 2**20)
     base = None
     for name in ("none", "int8", "onebit", "topk"):

@@ -1,0 +1,96 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"  # noqa: E501 — MUST precede any jax import
+
+"""Static-analysis linter CLI (DESIGN.md §11): compile the production
+exchange/train-step rigs for every (config × strategy × precision ×
+accum) cell and lint the jaxprs/HLO against the repo's performance
+contracts (repro.analysis).  (The two lines above give the single-CPU
+container 8 placeholder devices so the shard_map exchange rigs can
+build a 4-wide 'pod' mesh; set ONLY here and in dryrun, never globally.)
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.lint --arch gemma3-1b
+    PYTHONPATH=src python -m repro.launch.lint --all [--out LINT.json]
+    PYTHONPATH=src python -m repro.launch.lint --validate
+
+``--all`` writes the committed ``LINT.json`` artifact; CI re-validates
+it (and a ``LINT_SMOKE=1`` rerun) exactly like the bench tiers.  Exit
+codes: 0 clean, 1 rule violations, 2 unknown config name.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import sys  # noqa: E402
+import time  # noqa: E402
+
+from repro.analysis import report as R  # noqa: E402
+from repro.analysis import sweep as SW  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+OUT = os.path.join(ROOT, "LINT.json")
+
+
+def _progress(cell):
+    counts = {"pass": 0, "fail": 0, "skip": 0}
+    for r in cell.rules:
+        counts[r.status] += 1
+    tag = (f"{cell.config}/{cell.strategy}/{cell.precision}"
+           f"/accum{cell.accum}")
+    print(f"  {tag}: pass={counts['pass']} skip={counts['skip']}"
+          + (f" FAIL={counts['fail']}" if counts["fail"] else ""),
+          flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.lint",
+        description="jaxpr/HLO invariant linter over the production matrix")
+    ap.add_argument("--arch", help="lint a single config (all strategies "
+                    "x precisions x accums)")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every lint config and write the artifact")
+    ap.add_argument("--out", default=None,
+                    help=f"artifact path (default {OUT} with --all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config slice (also via LINT_SMOKE=1)")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate the committed artifact and exit")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or OUT
+    if args.validate:
+        rep = R.validate_file(out_path)
+        s = rep["summary"]
+        print(f"{out_path}: OK — {s['cells']} cells, {s['pass']} pass, "
+              f"{s['skip']} skip, smoke={rep['meta']['smoke']}")
+        return 0
+
+    smoke = args.smoke or os.environ.get("LINT_SMOKE") == "1"
+    configs = None
+    if args.arch is not None:
+        if args.arch not in SW.LINT_CONFIGS:
+            print(f"unknown config {args.arch!r}; valid names: "
+                  + ", ".join(SW.LINT_CONFIGS), file=sys.stderr)
+            raise SystemExit(2)
+        configs = (args.arch,)
+    elif not args.all:
+        ap.error("one of --arch, --all or --validate is required")
+
+    t0 = time.time()
+    rep = SW.run(configs=configs, smoke=smoke, progress=_progress)
+    s = rep["summary"]
+    print(f"linted {s['cells']} cells in {time.time() - t0:.1f}s: "
+          f"{s['pass']} pass, {s['skip']} skip, {s['fail']} fail")
+    if args.all or args.out:
+        with open(out_path, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+        print(f"wrote {out_path}")
+    bad = R.violations(rep)
+    for line in bad:
+        print(f"VIOLATION {line}", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

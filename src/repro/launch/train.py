@@ -15,17 +15,17 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
-from repro.configs import get_config
+from repro.configs import get_config, list_configs
 from repro.core.comm import LocalComm
 from repro.core.compression import get_compressor
 from repro.core.precision import POLICIES, apply_policy, get_policy
-from repro.core.strategies import get_strategy
+from repro.core.strategies import REGISTRY, get_strategy
 from repro.data.pipeline import DataConfig, bayes_entropy, prefetch_batches
 from repro.models import transformer as T
 from repro.optim import adam, sgd, warmup_cosine
@@ -38,9 +38,7 @@ def build_argparser():
     ap.add_argument("--arch", default="qwen2-1.5b")
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
-    ap.add_argument("--strategy", default="sync",
-                    choices=["sync", "sync_zero1", "local_sgd", "ssp",
-                             "downpour", "gossip"])
+    ap.add_argument("--strategy", default="sync", choices=sorted(REGISTRY))
     ap.add_argument("--compressor", default="none",
                     choices=["none", "onebit", "int8", "topk"])
     ap.add_argument("--precision", default="f32", choices=sorted(POLICIES),
@@ -82,6 +80,12 @@ def strategy_from_args(args, policy=None):
     kw = {}
     if args.strategy in ("sync", "ssp", "downpour"):
         kw["compressor"] = comp
+    if args.strategy == "sync_dgc":
+        if comp is None:
+            print("sync_dgc needs --compressor (onebit | int8 | topk)",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        kw["compressor"] = comp
     if policy is not None:
         kw["policy"] = policy
     return get_strategy(args.strategy, **kw)
@@ -89,7 +93,12 @@ def strategy_from_args(args, policy=None):
 
 def main(argv=None):
     args = build_argparser().parse_args(argv)
-    cfg = get_config(args.arch)
+    try:
+        cfg = get_config(args.arch)
+    except KeyError:
+        print(f"unknown arch {args.arch!r}; valid names: "
+              + ", ".join(sorted(list_configs())), file=sys.stderr)
+        raise SystemExit(2)
     if args.reduced:
         cfg = cfg.reduced()
     if cfg.is_encoder_decoder or cfg.modality is not None:

@@ -15,9 +15,6 @@ f32 (tests/test_precision.py) without any per-layer dtype plumbing.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name

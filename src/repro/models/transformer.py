@@ -12,13 +12,11 @@ Public API:
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import FULL_ATTENTION, LayerSpec, ModelConfig
-from repro.launch.sharding import BATCH, MODEL, heads_ax, seq_ax, shard
+from repro.launch.sharding import BATCH, MODEL, seq_ax, shard
 from repro.models import layers as L
 from repro.models import ssm as S
 

@@ -33,7 +33,7 @@ pure-JAX path in tests/test_kernels.py.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -144,7 +144,8 @@ def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
                          "use fused=False")
 
     def init(params):
-        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        def z(p):
+            return jnp.zeros_like(p, jnp.float32)
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
 
     def update(grads, state, params, t):

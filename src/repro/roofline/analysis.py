@@ -27,7 +27,7 @@ program):
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 
@@ -98,6 +98,30 @@ def parse_collectives(hlo_text: str, loop_trip_counts=None) -> dict:
             out[base] += _shape_bytes(shape_str) * scale
             counts[base] += scale
     return {"bytes": out, "counts": counts}
+
+
+def iter_collective_instrs(hlo_text: str):
+    """Per-instruction collective records from optimized HLO text.
+
+    Yields ``{"op": base_op, "bytes": output_bytes, "dtypes": [..]}`` for
+    every collective instruction (``-start`` counted, ``-done`` skipped) —
+    the instruction-level view ``repro.analysis`` rules need to separate
+    scalar control traffic (loss pmean, finite-flag pmin) from bucket
+    wire traffic, which ``parse_collectives`` aggregates away."""
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line.strip())
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_OPS:
+            yield {"op": base,
+                   "bytes": _shape_bytes(shape_str),
+                   "tuple": shape_str.startswith("("),
+                   "dtypes": [dt for dt, _ in _SHAPE_RE.findall(shape_str)
+                              if dt in _DTYPE_BYTES]}
 
 
 def dtype_wire_bytes(n_elements: int, wire_dtype: str = "float32") -> float:

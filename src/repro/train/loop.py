@@ -16,7 +16,6 @@ Two entry points mirroring the Comm duality (DESIGN.md §3):
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -211,6 +210,16 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
         return new_state, metrics
 
     return _jit(step)
+
+
+def jit_cache_size(step_fn) -> int:
+    """Compiled-variant count of a jitted step fn — the probe behind the
+    retrace-detector lint rule (repro.analysis.rules.retrace): exactly 1
+    in steady state; every growth is a silent recompilation in the
+    training loop.  Returns -1 when the callable exposes no cache
+    accounting (``jit=False``, or a jax without ``_cache_size``)."""
+    probe = getattr(step_fn, "_cache_size", None)
+    return int(probe()) if callable(probe) else -1
 
 
 def _stack_divergence(params):

@@ -22,6 +22,12 @@ def pytest_configure(config):
         "serving: paged KV cache / paged-attention serving tier "
         "(DESIGN.md §10); CI runs `pytest -m serving` as its own matrix "
         "entry, and the marks also run in plain tier-1")
+    config.addinivalue_line(
+        "markers",
+        "lint: static-analysis linter tier (repro.analysis, DESIGN.md "
+        "§11) — rule positives/negatives, report-schema validation and "
+        "the LINT.json artifact check; CI runs `pytest -m lint` as its "
+        "own matrix entry, and the marks also run in plain tier-1")
 
 
 @pytest.fixture(scope="session")

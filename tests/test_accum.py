@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import retrace
 from repro.core import strategies as ST
 from repro.core.comm import LocalComm
 from repro.core.compression import get_compressor
@@ -41,7 +42,8 @@ from repro.data.pipeline import (DataConfig, microbatch_stack,
                                  prefetch_batches, sample_batch,
                                  worker_batches)
 from repro.optim import adam, sgd
-from repro.train.loop import init_train_state, make_replica_train_step
+from repro.train.loop import (init_train_state, jit_cache_size,
+                              make_replica_train_step)
 
 pytestmark = pytest.mark.accum
 
@@ -368,8 +370,9 @@ def test_sample_batch_jitted_once_per_config():
     for t in range(5):
         b = sample_batch(cfg, 0, t)
         assert b.shape == (2, 8) and b.dtype == jnp.int32
-    if hasattr(sample_batch, "_cache_size"):
-        assert sample_batch._cache_size() == 1
+    if jit_cache_size(sample_batch) != -1:
+        res = retrace([jit_cache_size(sample_batch)])
+        assert res.status == "pass", res.findings
     # worker/step as traced operands: the jitted callable accepts arrays
     b2 = sample_batch(cfg, jnp.int32(1), jnp.int32(7))
     np.testing.assert_array_equal(np.asarray(b2),

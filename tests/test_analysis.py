@@ -1,0 +1,385 @@
+"""Static-analysis linter tier (repro.analysis, DESIGN.md §11) — ISSUE 8
+acceptance:
+
+  (a) every HLO/jaxpr rule has a deliberately-BROKEN negative twin
+      (collective-budget, promotion-proof, donation-aliasing,
+      cond-gating, fused-dispatch, retrace-detector, state-aliasing):
+      the lint must catch the regression it encodes, not just bless the
+      current code,
+  (b) the Report schema round-trips and the validator rejects every
+      tampering mode CI relies on it to catch,
+  (c) a real sweep cell (the production exchange/loop rigs on
+      gemma3-1b) passes end to end, and the committed ``LINT.json``
+      validates,
+  (d) the ``repro.launch.lint`` CLI exits 2 on unknown config names and
+      0 on ``--validate`` of the committed artifact.
+
+All tests carry the ``lint`` marker; CI runs them as their own tier-1
+matrix entry (``pytest -m lint``) alongside the bf16/accum/serving jobs.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (RULES, Cell, build_report, collective_budget,
+                            cond_gating, donation_aliasing, fused_dispatch,
+                            gating_ratio, promotion_proof, result, retrace,
+                            state_aliasing, tree_snapshot, validate,
+                            validate_file, violations)
+from repro.analysis import rigs
+from repro.train.loop import jit_cache_size
+
+pytestmark = pytest.mark.lint
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# hand-crafted HLO lines (the textual shape every rule parses)
+# ---------------------------------------------------------------------------
+def _hlo(*instrs):
+    body = "\n".join(f"  %{op}.{i} = {shape} {op}({operand}), channel_id=1"
+                     for i, (op, shape, operand) in enumerate(instrs))
+    return f"ENTRY %main () -> f32[] {{\n{body}\n}}\n"
+
+
+WIRE_AR = ("all-reduce", "f32[4096]{0}", "f32[4096]{0} %p0")
+WIRE_RS = ("reduce-scatter", "f32[1024]{0}", "f32[4096]{0} %p0")
+WIRE_AG = ("all-gather", "f32[4096]{0}", "f32[1024]{0} %p0")
+SCALAR_AR = ("all-reduce", "f32[]", "f32[] %loss")
+BF16_AG = ("all-gather", "u16[4,2048]{1,0}", "u16[1,2048]{1,0} %p0")
+F32_AG = ("all-gather", "f32[4,2048]{1,0}", "f32[1,2048]{1,0} %p0")
+TUPLE_A2A = ("all-to-all",
+             "(f32[1,1024]{1,0}, f32[1,1024]{1,0})",
+             "f32[1,1024]{1,0} %c0, f32[1,1024]{1,0} %c1")
+
+
+# ---------------------------------------------------------------------------
+# collective-budget
+# ---------------------------------------------------------------------------
+def test_collective_budget_accepts_contract_and_scalars():
+    txt = _hlo(WIRE_RS, WIRE_RS, WIRE_AG, SCALAR_AR)
+    res = collective_budget(txt, {"reduce-scatter": 2, "all-gather": 2})
+    assert res.status == "pass", res.findings
+    assert res.details["scalar"] == 1
+
+
+def test_collective_budget_flags_per_leaf_collectives():
+    """The bug class the fabric exists to prevent: one collective PER
+    LEAF (12 here) instead of per bucket (budget 3)."""
+    txt = _hlo(*([WIRE_AR] * 12))
+    res = collective_budget(txt, {"all-reduce": 3})
+    assert res.status == "fail"
+    assert "12 wire instruction(s) exceed budget 3" in res.findings[0]
+
+
+def test_collective_budget_flags_stray_allreduce_on_zero1():
+    """ZeRO-1 contract has NO all-reduce: a full-gradient all-reduce
+    sneaking in next to the reduce-scatters must fail the budget."""
+    txt = _hlo(WIRE_RS, WIRE_AG, WIRE_AR)
+    res = collective_budget(txt, {"reduce-scatter": 2, "all-gather": 2})
+    assert res.status == "fail"
+    assert any("all-reduce" in f for f in res.findings)
+
+
+def test_collective_budget_flags_scalar_flood_and_empty_wire():
+    # more scalar collectives than the allowance
+    res = collective_budget(_hlo(*([SCALAR_AR] * 5)), {})
+    assert res.status == "fail"
+    assert "scalar collectives exceed allowance" in res.findings[0]
+    # a non-empty contract with zero wire collectives: exchange traced away
+    res = collective_budget(_hlo(SCALAR_AR), {"all-reduce": 3})
+    assert res.status == "fail"
+    assert "no wire collective compiled" in res.findings[0]
+
+
+# ---------------------------------------------------------------------------
+# promotion-proof
+# ---------------------------------------------------------------------------
+def test_promotion_proof_skips_wide_wire_and_accepts_narrow():
+    assert promotion_proof(_hlo(F32_AG), narrow_wire=False).status == "skip"
+    res = promotion_proof(_hlo(BF16_AG, TUPLE_A2A), narrow_wire=True)
+    # u16 gathers + tuple-materialized a2a (the XLA:CPU shape of a bf16
+    # all-to-all) are the proven-good narrow wire
+    assert res.status == "pass", res.findings
+
+
+def test_promotion_proof_flags_f32_payload_on_narrow_wire():
+    res = promotion_proof(_hlo(BF16_AG, F32_AG), narrow_wire=True)
+    assert res.status == "fail"
+    assert "f32 payload" in res.findings[0]
+
+
+# ---------------------------------------------------------------------------
+# donation-aliasing (real compiled modules: donate vs not)
+# ---------------------------------------------------------------------------
+def _compiled_alias_bytes(donate: bool):
+    state = {"w": jnp.ones((64, 64), jnp.float32)}
+
+    def fn(s, x):
+        return {"w": s["w"] * 0.9 + x}
+
+    jfn = jax.jit(fn, donate_argnums=(0,) if donate else ())
+    mem = jfn.lower(state, 1.0).compile().memory_analysis()
+    return int(getattr(mem, "alias_size_in_bytes", 0) or 0), 64 * 64 * 4
+
+
+def test_donation_aliasing_passes_on_donated_step():
+    alias, donated = _compiled_alias_bytes(donate=True)
+    res = donation_aliasing(alias, donated)
+    assert res.status == "pass", res.findings
+    assert res.details["frac"] >= 0.5
+
+
+def test_donation_aliasing_flags_undonated_step():
+    alias, donated = _compiled_alias_bytes(donate=False)
+    res = donation_aliasing(alias, donated)
+    assert res.status == "fail"
+    assert "donation had no effect" in res.findings[0]
+
+
+def test_donation_aliasing_flags_partial_aliasing():
+    res = donation_aliasing(alias_bytes=100, donated_bytes=1000)
+    assert res.status == "fail"
+    assert "10.0%" in res.findings[0]
+
+
+# ---------------------------------------------------------------------------
+# cond-gating (real jaxprs: lax.cond gate vs jnp.where gate)
+# ---------------------------------------------------------------------------
+def _gated_jaxpr(gate: str):
+    def sync(v):
+        return jax.lax.psum(v, "i") / 4.0
+
+    def good(x, t):
+        return jax.lax.cond(t % 4 == 0, sync, lambda v: v, x)
+
+    def bad(x, t):
+        # the regression this rule encodes: a jnp.where gate COMPUTES the
+        # psum every step and discards it — sync_every× the wire bytes
+        return jnp.where(t % 4 == 0, sync(x), x)
+
+    fn = good if gate == "cond" else bad
+    return jax.make_jaxpr(fn, axis_env=[("i", 4)])(
+        jnp.ones(8, jnp.float32), jnp.zeros((), jnp.int32))
+
+
+def test_cond_gating_passes_on_lax_cond_gate():
+    res = cond_gating(_gated_jaxpr("cond"), gated=True)
+    assert res.status == "pass", res.findings
+    assert res.details["under_cond"] == res.details["collectives"] > 0
+
+
+def test_cond_gating_flags_where_gate():
+    res = cond_gating(_gated_jaxpr("where"), gated=True)
+    assert res.status == "fail"
+    assert "outside any lax.cond branch" in res.findings[0]
+
+
+def test_cond_gating_flags_traced_away_exchange():
+    jaxpr = jax.make_jaxpr(lambda x: x * 2.0)(jnp.ones(4))
+    res = cond_gating(jaxpr, gated=True)
+    assert res.status == "fail"
+    assert "traced away" in res.findings[0]
+    assert cond_gating(jaxpr, gated=False).status == "skip"
+
+
+def test_gating_ratio_bounds():
+    assert gating_ratio(800.0, 100.0, sync_every=8).status == "pass"
+    res = gating_ratio(800.0, 700.0, sync_every=8)  # where-gate byte shape
+    assert res.status == "fail"
+    assert gating_ratio(0.0, 0.0, sync_every=8).status == "fail"
+
+
+# ---------------------------------------------------------------------------
+# fused-dispatch (real traced exchange_dgc, fused on vs off)
+# ---------------------------------------------------------------------------
+FUSED_PARAMS = {"w": jax.ShapeDtypeStruct((4096,), jnp.float32)}
+
+
+def test_fused_dispatch_passes_on_fused_path():
+    art = rigs.fused_artifacts(FUSED_PARAMS, "f32", fused=True)
+    res = fused_dispatch(art["jaxpr_text"], art["codec_calls"])
+    assert res.status == "pass", res.findings
+
+
+def test_fused_dispatch_flags_jnp_fallback():
+    art = rigs.fused_artifacts(FUSED_PARAMS, "f32", fused=False)
+    res = fused_dispatch(art["jaxpr_text"], art["codec_calls"])
+    assert res.status == "fail"
+    msgs = " | ".join(res.findings)
+    assert "no pallas_call" in msgs and "jnp codec invoked" in msgs
+    assert fused_dispatch(art["jaxpr_text"], art["codec_calls"],
+                          expect_fused=False).status == "skip"
+
+
+# ---------------------------------------------------------------------------
+# retrace-detector (real jit cache growth)
+# ---------------------------------------------------------------------------
+def test_retrace_passes_on_stable_shapes():
+    f = jax.jit(lambda x: x * 2.0)
+    sizes = []
+    for _ in range(3):
+        f(jnp.ones(4))
+        sizes.append(jit_cache_size(f))
+    res = retrace(sizes)
+    assert res.status == "pass", res.findings
+
+
+def test_retrace_flags_shape_driven_recompilation():
+    f = jax.jit(lambda x: x * 2.0)
+    sizes = []
+    for n in (4, 8, 16):  # shape change every call: silent retraces
+        f(jnp.ones(n))
+        sizes.append(jit_cache_size(f))
+    res = retrace(sizes)
+    assert res.status == "fail"
+    assert any("retrace at step" in f_ for f_ in res.findings)
+    assert retrace([]).status == "fail"
+    assert retrace([2]).status == "fail"  # two variants after first call
+
+
+# ---------------------------------------------------------------------------
+# state-aliasing (pytree mutation detector)
+# ---------------------------------------------------------------------------
+def test_state_aliasing_clean_update_passes():
+    state = {"velocity": [jnp.ones(4)], "t": jnp.zeros(())}
+    before = tree_snapshot(state)
+    _ = {"velocity": [state["velocity"][0] + 1], "t": state["t"] + 1}
+    res = state_aliasing(before, tree_snapshot(state))
+    assert res.status == "pass", res.findings
+
+
+def test_state_aliasing_flags_inplace_mutation():
+    state = {"velocity": [jnp.ones(4)], "t": jnp.zeros(())}
+    before = tree_snapshot(state)
+    state["velocity"][0] = state["velocity"][0] + 1  # the PR-2 bug class
+    state["extra"] = 1
+    res = state_aliasing(before, tree_snapshot(state))
+    assert res.status == "fail"
+    msgs = " | ".join(res.findings)
+    assert "replaced in place" in msgs and "inserted into the argument" in msgs
+
+
+# ---------------------------------------------------------------------------
+# report schema + validator tampering modes
+# ---------------------------------------------------------------------------
+def _mini_report():
+    cells = [Cell("gemma3-1b", "sync", "f32", 1,
+                  [result(r, []) for r in RULES])]
+    return build_report(cells, {"backend": "cpu", "jax": jax.__version__,
+                                "smoke": True, "workers": 4})
+
+
+def test_report_roundtrip_validates(tmp_path):
+    rep = _mini_report()
+    validate(rep)
+    p = tmp_path / "LINT.json"
+    p.write_text(json.dumps(rep))
+    assert validate_file(str(p))["summary"]["pass"] == len(RULES)
+
+
+def test_result_constructor_guards():
+    with pytest.raises(ValueError, match="unknown rule"):
+        result("no-such-rule", [])
+    with pytest.raises(ValueError, match="fail with no findings"):
+        from repro.analysis import RuleResult
+        RuleResult("retrace-detector", "fail", [])
+    assert result("retrace-detector", [], skip="why").status == "skip"
+    assert result("retrace-detector", ["boom"]).status == "fail"
+
+
+@pytest.mark.parametrize("tamper,msg", [
+    (lambda r: r.pop("summary"), "missing top-level"),
+    (lambda r: r["meta"].pop("workers"), "meta missing"),
+    (lambda r: r["meta"].update(schema=2), "unsupported schema"),
+    (lambda r: r.update(cells=[]), "empty cell list"),
+    (lambda r: r.update(cells=r["cells"] * 2), "duplicate cell"),
+    (lambda r: r["cells"][0]["rules"].pop(), "missing rules"),
+    (lambda r: r["cells"][0]["rules"][0].update(status="bogus"),
+     "bad status"),
+    (lambda r: r["summary"].update(cells=99), "cell count mismatch"),
+])
+def test_validate_rejects_tampering(tamper, msg):
+    rep = _mini_report()
+    tamper(rep)
+    with pytest.raises(ValueError, match=msg):
+        validate(rep)
+
+
+def test_validate_rejects_failing_report():
+    rep = _mini_report()
+    rep["cells"][0]["rules"][0].update(status="fail",
+                                       findings=["stray all-reduce"])
+    assert violations(rep) == \
+        ["gemma3-1b/sync/f32/accum1: collective-budget: stray all-reduce"]
+    with pytest.raises(ValueError, match="rule violation"):
+        validate(rep)
+
+
+def test_validate_file_missing(tmp_path):
+    with pytest.raises(ValueError, match="missing"):
+        validate_file(str(tmp_path / "nope.json"))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: a real sweep cell + the committed artifact + CLI exits
+# ---------------------------------------------------------------------------
+def test_sweep_cell_passes_on_production_rigs():
+    """One real matrix cell (exchange + loop + eager rigs) through
+    evaluate_cell: all seven rules report, none fail."""
+    out = _run("""
+        import jax
+        from repro.analysis import report as R
+        from repro.analysis import sweep as SW
+
+        cells, stats = SW.sweep(configs=("gemma3-1b",),
+                                strategies=("sync", "local_sgd"),
+                                precisions=("f32",), accums=(1,))
+        rep = R.build_report(cells, {"backend": jax.default_backend(),
+                                     "jax": jax.__version__,
+                                     "smoke": True, "workers": 4})
+        R.validate(rep)
+        assert stats["rigs_built"] > 0
+        print("LINT_CELL_OK", rep["summary"])
+    """)
+    assert "LINT_CELL_OK" in out
+
+
+def test_committed_artifact_validates():
+    """CI contract: the committed LINT.json is schema-valid with zero
+    violations (the lint job re-checks after a smoke rerun)."""
+    validate_file(os.path.join(ROOT, "LINT.json"))
+
+
+def test_lint_cli_exit_codes():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    bad = subprocess.run([sys.executable, "-m", "repro.launch.lint",
+                          "--arch", "bogus"], capture_output=True,
+                         text=True, env=env, timeout=120)
+    assert bad.returncode == 2
+    assert "unknown config 'bogus'" in bad.stderr.splitlines()[0]
+    ok = subprocess.run([sys.executable, "-m", "repro.launch.lint",
+                         "--validate"], capture_output=True, text=True,
+                        env=env, cwd=ROOT, timeout=120)
+    assert ok.returncode == 0, ok.stderr[-2000:]
+    assert "OK" in ok.stdout

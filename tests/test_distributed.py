@@ -2,13 +2,10 @@
 xla_force_host_platform_device_count (the main test process must keep the
 single real device — see conftest)."""
 
-import json
 import os
 import subprocess
 import sys
 import textwrap
-
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

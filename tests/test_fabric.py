@@ -226,8 +226,10 @@ def test_exchange_lowering_is_fused_and_bytes_match():
         import json
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.analysis import collective_budget
+        from repro.core.comm import ShardComm
         from repro.core.compression import get_compressor
-        from repro.core.fabric import BucketLayout, wire_nbytes
+        from repro.core.fabric import BucketLayout, Fabric, wire_nbytes
         from repro.core.jax_compat import make_mesh, set_mesh, shard_map
         from repro.launch.exchange import build_exchange
         from repro.roofline.analysis import collective_count, parse_collectives
@@ -256,7 +258,13 @@ def test_exchange_lowering_is_fused_and_bytes_match():
                 c = jax.jit(fn).lower(g, g).compile()
             pc = parse_collectives(c.as_text())
             ncoll = collective_count(c.as_text())
-            assert ncoll <= lay.n_buckets, (name, ncoll, lay.n_buckets)
+            # rule API: compressed wire = one packed all-gather per
+            # bucket; uncompressed = one all-reduce per bucket
+            profile = "dense" if comp is None else "compressed"
+            contract = Fabric(ShardComm("pod", PODS),
+                              bucket_bytes).collective_contract(lay, profile)
+            res = collective_budget(c.as_text(), contract)
+            assert res.status == "pass", (name, res.findings)
             results[name] = {"ncoll": ncoll,
                              "bytes": sum(pc["bytes"].values())}
             if comp is not None:

@@ -346,16 +346,16 @@ def test_zero1_bf16_hlo_has_no_f32_reduce_scatter():
     an f32 wire by XLA), and the param all-gather is bf16.  No f32
     reduce-scatter, no gradient all-reduce."""
     out = _run("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.analysis import collective_budget, promotion_proof
         from repro.core import strategies as ST
         from repro.core.comm import ShardComm
-        from repro.core.fabric import BucketLayout
+        from repro.core.fabric import BucketLayout, Fabric
         from repro.core.jax_compat import make_mesh, set_mesh, shard_map
         from repro.core.precision import get_policy
         from repro.optim import adam
-        from repro.roofline.analysis import parse_collectives
         from repro.train.loop import zero1_opt_template
 
         PODS, LAYERS = 4, 6
@@ -386,19 +386,18 @@ def test_zero1_bf16_hlo_has_no_f32_reduce_scatter():
         with set_mesh(mesh):
             c = jax.jit(fn).lower(params, params, opt_state).compile()
         txt = c.as_text()
-        counts = parse_collectives(txt)["counts"]
-        def lines(op):
-            return [l for l in txt.splitlines() if op + "(" in l]
-        f32_rs = [l for l in lines("reduce-scatter")
-                  if re.search(r"=\\s*f32\\[", l)]
-        wire = lines("all-to-all") + lines("all-gather")
-        f32_wire = [l for l in wire if re.search(r"=\\s*f32\\[", l)]
-        assert counts["reduce-scatter"] == 0 and not f32_rs, counts
-        assert 0 < counts["all-to-all"] <= lay.n_buckets, counts
-        assert 0 < counts["all-gather"] <= lay.n_buckets, counts
-        assert counts["all-reduce"] == 0, counts
-        assert wire and not f32_wire, f32_wire[:2]
-        print("BF16_HLO_OK", json.dumps(counts))
+        # rule API: the narrow partitioned contract is a2a+AG per bucket
+        # (NO reduce-scatter — it would be convert-promoted), and the
+        # promotion proof rejects any non-tuple f32 wire payload
+        contract = Fabric(comm, bucket_bytes,
+                          wire_dtype=pol.wire_dt).collective_contract(
+            lay, strat.wire_profile)
+        assert set(contract) == {"all-to-all", "all-gather"}, contract
+        res = collective_budget(txt, contract)
+        assert res.status == "pass", res.findings
+        promo = promotion_proof(txt, pol.narrow_wire)
+        assert promo.status == "pass", promo.findings
+        print("BF16_HLO_OK", json.dumps(res.details))
     """)
     assert "BF16_HLO_OK" in out
 
@@ -448,16 +447,16 @@ def test_dense_sync_bf16_hlo_has_no_f32_all_reduce():
     all-gather (ring bytes of the all-reduce it replaces).  Without this,
     wire_bytes would claim 2 bytes/elem while the wire ships 4."""
     out = _run("""
-        import json, re
+        import json
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.analysis import collective_budget, promotion_proof
         from repro.core import strategies as ST
         from repro.core.comm import ShardComm
-        from repro.core.fabric import BucketLayout
+        from repro.core.fabric import BucketLayout, Fabric
         from repro.core.jax_compat import make_mesh, set_mesh, shard_map
         from repro.core.precision import get_policy
         from repro.optim import sgd
-        from repro.roofline.analysis import parse_collectives
 
         PODS, LAYERS = 4, 6
         pol = get_policy("bf16")
@@ -480,15 +479,18 @@ def test_dense_sync_bf16_hlo_has_no_f32_all_reduce():
         with set_mesh(mesh):
             c = jax.jit(fn).lower(params, params).compile()
         txt = c.as_text()
-        counts = parse_collectives(txt)["counts"]
-        f32_wire = [l for l in txt.splitlines()
-                    if re.search(r"(all-reduce|all-to-all|all-gather)\\(", l)
-                    and re.search(r"=\\s*f32\\[", l)]
-        assert counts["all-reduce"] == 0, counts
-        assert 0 < counts["all-to-all"] <= lay.n_buckets, counts
-        assert 0 < counts["all-gather"] <= lay.n_buckets, counts
-        assert not f32_wire, f32_wire[:2]
-        print("DENSE_BF16_HLO_OK", json.dumps(counts))
+        # rule API: the narrow DENSE contract replaces the all-reduce
+        # with a2a+AG per bucket; no all-reduce may survive, and no
+        # non-tuple f32 payload may ride the wire
+        contract = Fabric(comm, bucket_bytes,
+                          wire_dtype=pol.wire_dt).collective_contract(
+            lay, strat.wire_profile)
+        assert set(contract) == {"all-to-all", "all-gather"}, contract
+        res = collective_budget(txt, contract)
+        assert res.status == "pass", res.findings
+        promo = promotion_proof(txt, pol.narrow_wire)
+        assert promo.status == "pass", promo.findings
+        print("DENSE_BF16_HLO_OK", json.dumps(res.details))
     """)
     assert "DENSE_BF16_HLO_OK" in out
 

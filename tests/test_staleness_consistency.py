@@ -1,0 +1,153 @@
+"""Direct unit coverage for core/staleness.py and core/consistency.py.
+
+The property tests (tests/test_consistency_property.py) validate the
+paper's Statement 1 end to end; these tests pin the MECHANICS the
+properties rely on: delivery timing, drop accounting, the duplicate-
+delivery guard, the momentum counterexample arithmetic, and the
+staleness-histogram bookkeeping the decentralized measurement tooling
+(benchmarks/bench_staleness.py) is built on.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.consistency import ConsistencySim, Replica, Update
+from repro.core.staleness import (effective_momentum_fit, implicit_momentum,
+                                  staleness_histogram)
+
+DIM = 4
+
+
+# ---------------------------------------------------------------------------
+# staleness.py
+# ---------------------------------------------------------------------------
+def test_implicit_momentum_degenerate_worker_counts():
+    assert implicit_momentum(0) == 0.0  # clamped, no division by zero
+    assert implicit_momentum(1) == 0.0
+    assert implicit_momentum(2) == pytest.approx(0.5)
+    assert implicit_momentum(1000) == pytest.approx(0.999)
+
+
+def test_effective_momentum_fit_short_trajectory_is_zero():
+    # fewer than 3 updates: no regression possible, defined as 0.0
+    assert effective_momentum_fit(np.zeros((1, DIM))) == 0.0
+    assert effective_momentum_fit(np.zeros((2, DIM))) == 0.0
+    assert effective_momentum_fit(np.zeros((3, DIM))) == 0.0
+
+
+def test_effective_momentum_fit_exact_on_noiseless_geometric():
+    """u_t = beta * u_{t-1} exactly ⇒ the least-squares fit IS beta."""
+    beta = 0.65
+    u0 = np.linspace(1.0, 2.0, DIM)
+    w = [np.zeros(DIM)]
+    u = u0
+    for _ in range(50):
+        w.append(w[-1] + u)
+        u = beta * u
+    beta_hat = effective_momentum_fit(np.stack(w))
+    assert beta_hat == pytest.approx(beta, abs=1e-12)
+
+
+def test_staleness_histogram_counts_and_drops():
+    """delay = t for dst 1, dropped for dst 2: the histogram records
+    exactly the delivered delays and the drop fraction, and src == dst
+    pairs are never scheduled."""
+    W, H = 3, 4
+
+    def schedule(src, dst, t):
+        assert src != dst  # self-delivery must not be queried
+        return None if dst == 2 else t
+
+    delays, drop_frac = staleness_histogram(schedule, W, H)
+    # per round: 6 ordered pairs, 2 of them into dst=2 (dropped)
+    assert drop_frac == pytest.approx(2 / 6)
+    assert len(delays) == 4 * H
+    assert sorted(set(delays.tolist())) == list(range(H))
+
+
+def test_staleness_histogram_empty_horizon():
+    delays, drop_frac = staleness_histogram(lambda s, d, t: 0, 4, 0)
+    assert len(delays) == 0 and drop_frac == 0.0
+
+
+# ---------------------------------------------------------------------------
+# consistency.py — Replica
+# ---------------------------------------------------------------------------
+def test_replica_sgd_applies_updates():
+    r = Replica(np.ones(DIM), lr=0.5)
+    r.apply(Update(src=0, seq=0, grad=np.full(DIM, 2.0)))
+    np.testing.assert_allclose(r.w, np.zeros(DIM))
+
+
+def test_replica_rejects_duplicate_delivery():
+    r = Replica(np.zeros(DIM), lr=0.1)
+    r.apply(Update(src=1, seq=7, grad=np.ones(DIM)))
+    with pytest.raises(AssertionError, match="duplicate delivery"):
+        r.apply(Update(src=1, seq=7, grad=np.ones(DIM)))
+    # a different seq from the same source is fine
+    r.apply(Update(src=1, seq=8, grad=np.ones(DIM)))
+
+
+def test_replica_momentum_arithmetic():
+    """m = beta*m + g each apply; w -= lr*m — two applies by hand."""
+    r = Replica(np.zeros(DIM), lr=1.0, momentum=0.5)
+    g = np.ones(DIM)
+    r.apply(Update(0, 0, g))  # m=1, w=-1
+    r.apply(Update(0, 1, g))  # m=1.5, w=-2.5
+    np.testing.assert_allclose(r.w, np.full(DIM, -2.5))
+
+
+# ---------------------------------------------------------------------------
+# consistency.py — ConsistencySim
+# ---------------------------------------------------------------------------
+def test_produce_applies_locally_and_enqueues_for_peers():
+    sim = ConsistencySim(3, DIM, lr=0.1, seed=0)
+    w_before = sim.weights()
+    sim.produce(0, np.ones(DIM), seq=0, delays={1: 1, 2: 3})
+    w_after = sim.weights()
+    # source moved immediately, peers have not
+    assert not np.allclose(w_after[0], w_before[0])
+    np.testing.assert_allclose(w_after[1], w_before[1])
+    np.testing.assert_allclose(w_after[2], w_before[2])
+    assert len(sim.queues[(0, 1)]) == 1 and len(sim.queues[(0, 2)]) == 1
+
+
+def test_delivery_waits_for_the_scheduled_round():
+    sim = ConsistencySim(2, DIM, lr=0.1, seed=0)
+    sim.produce(0, np.ones(DIM), seq=0, delays={1: 2})
+    sim.step()  # round 1 < due round 2: still queued
+    assert len(sim.queues[(0, 1)]) == 1
+    assert not sim.consistent()
+    sim.step()  # round 2: delivered
+    assert len(sim.queues[(0, 1)]) == 0
+    assert sim.consistent()
+
+
+def test_none_and_inf_delays_count_as_drops():
+    sim = ConsistencySim(3, DIM, lr=0.1, seed=0)
+    sim.produce(0, np.ones(DIM), seq=0, delays={1: None, 2: np.inf})
+    assert sim.dropped == 2
+    assert not sim.queues.get((0, 1)) and not sim.queues.get((0, 2))
+    sim.drain()
+    assert not sim.consistent()  # dropped updates never arrive
+
+
+def test_drain_empties_queues_and_restores_consistency():
+    sim = ConsistencySim(3, DIM, lr=0.2, seed=1)
+    rng = np.random.default_rng(0)
+    for seq in range(5):
+        for src in range(3):
+            sim.produce(src, rng.normal(size=DIM), seq,
+                        delays={d: 100 + seq for d in range(3) if d != src})
+        sim.step()
+    assert not sim.consistent()  # everything still in flight
+    sim.drain()
+    assert all(len(q) == 0 for q in sim.queues.values())
+    assert sim.consistent()
+
+
+def test_max_divergence_is_max_abs_gap_to_replica0():
+    sim = ConsistencySim(2, DIM, lr=1.0, seed=0)
+    sim.produce(0, np.full(DIM, 0.25), seq=0, delays={1: None})
+    # replica 0 moved by -0.25 everywhere, replica 1 did not
+    assert sim.max_divergence() == pytest.approx(0.25)
