@@ -315,57 +315,46 @@ def validate(path=OUT):
     """Schema + acceptance check for BENCH_serving.json; raises ValueError
     on violation.  Non-smoke (committed) files must additionally show the
     paged engine ≥ 2× the dense engine on at least one prompt mix."""
-    if not os.path.exists(path):
-        raise ValueError(f"{path} is missing — run "
-                         "`python -m benchmarks.run serving`")
-    with open(path) as f:
-        report = json.load(f)
-    for key in ("meta", "paged_vs_dense", "load", "kernels"):
-        if key not in report:
-            raise ValueError(f"BENCH_serving.json: missing section {key!r}")
-    if "backend" not in report["meta"]:
-        raise ValueError("meta.backend missing")
+    from benchmarks.common import (check, load_report, require_positive,
+                                   require_sections)
+    label = "BENCH_serving.json"
+    report = load_report(path, "python -m benchmarks.run serving")
+    require_sections(report, ("meta", "paged_vs_dense", "load", "kernels"),
+                     label)
+    check("backend" in report["meta"], "meta.backend missing")
     pvd = report["paged_vs_dense"]
-    if {r["mix"] for r in pvd} != set(MIXES):
-        raise ValueError(f"paged_vs_dense must cover mixes {sorted(MIXES)}")
+    check({r["mix"] for r in pvd} == set(MIXES),
+          f"paged_vs_dense must cover mixes {sorted(MIXES)}")
     for r in pvd:
-        for f_ in ("dense_s", "paged_s", "speedup", "dense_tok_s",
-                   "paged_tok_s"):
-            if not r.get(f_, 0) > 0:
-                raise ValueError(f"paged_vs_dense row bad {f_!r}: {r}")
+        require_positive(r, ("dense_s", "paged_s", "speedup", "dense_tok_s",
+                             "paged_tok_s"), "paged_vs_dense row")
     if not report["meta"]["smoke"]:
         best = max(r["speedup"] for r in pvd)
-        if best < 2.0:
-            raise ValueError(
-                f"acceptance: paged must be >= 2x dense, best {best:.2f}x")
-    if not report["load"]:
-        raise ValueError("load section empty")
+        check(best >= 2.0,
+              f"acceptance: paged must be >= 2x dense, best {best:.2f}x")
+    check(report["load"], "load section empty")
     mixes_seen, qps_seen = set(), set()
     for r in report["load"]:
         mixes_seen.add(r["mix"])
         qps_seen.add(r["offered_qps"])
-        for f_ in ("throughput_tok_s", "ttft_p50_ms", "tpot_p50_ms",
-                   "e2e_p50_ms"):
-            if not r.get(f_, 0) > 0:
-                raise ValueError(f"load row bad {f_!r}: {r}")
+        require_positive(r, ("throughput_tok_s", "ttft_p50_ms",
+                             "tpot_p50_ms", "e2e_p50_ms"), "load row")
         for p50, p99 in (("ttft_p50_ms", "ttft_p99_ms"),
                          ("tpot_p50_ms", "tpot_p99_ms"),
                          ("e2e_p50_ms", "e2e_p99_ms")):
-            if r[p99] + 1e-9 < r[p50]:
-                raise ValueError(f"percentile order violated in {r}")
-        if not 0.0 <= r["cache_util_max"] <= 1.0:
-            raise ValueError(f"cache utilization out of range: {r}")
-    if mixes_seen != set(MIXES):
-        raise ValueError(f"load must cover mixes {sorted(MIXES)}")
-    if not report["meta"]["smoke"] and len(qps_seen) < 3:
-        raise ValueError("non-smoke load sweep needs >= 3 offered QPS points")
+            check(r[p99] + 1e-9 >= r[p50],
+                  f"percentile order violated in {r}")
+        check(0.0 <= r["cache_util_max"] <= 1.0,
+              f"cache utilization out of range: {r}")
+    check(mixes_seen == set(MIXES),
+          f"load must cover mixes {sorted(MIXES)}")
+    check(report["meta"]["smoke"] or len(qps_seen) >= 3,
+          "non-smoke load sweep needs >= 3 offered QPS points")
     kr = report["kernels"]
-    if not (kr.get("paged_attention", {}).get("kernel_ms", 0) > 0
-            and kr.get("paged_attention", {}).get("ref_ms", 0) > 0):
-        raise ValueError("kernels.paged_attention timings missing")
-    if not (kr.get("decode_step", {}).get("dense_ms", 0) > 0
-            and kr.get("decode_step", {}).get("paged_ms", 0) > 0):
-        raise ValueError("kernels.decode_step timings missing")
+    require_positive(kr.get("paged_attention", {}), ("kernel_ms", "ref_ms"),
+                     "kernels.paged_attention")
+    require_positive(kr.get("decode_step", {}), ("dense_ms", "paged_ms"),
+                     "kernels.decode_step")
     return report
 
 

@@ -327,42 +327,33 @@ def run(smoke=None):
 def validate(path=OUT):
     """Schema check for BENCH_timing.json; raises ValueError on violation
     (CI runs this against both the committed and the regenerated file)."""
-    if not os.path.exists(path):
-        raise ValueError(f"{path} is missing — run "
-                         "`python -m benchmarks.run timing`")
-    with open(path) as f:
-        report = json.load(f)
-    for key in ("meta", "train_step", "kernels", "exchange", "breakeven",
-                "optimizer"):
-        if key not in report:
-            raise ValueError(f"BENCH_timing.json: missing section {key!r}")
-    if "backend" not in report["meta"]:
-        raise ValueError("meta.backend missing")
+    from benchmarks.common import (check, load_report, require_keys,
+                                   require_positive, require_sections)
+    label = "BENCH_timing.json"
+    report = load_report(path, "python -m benchmarks.run timing")
+    require_sections(report, ("meta", "train_step", "kernels", "exchange",
+                              "breakeven", "optimizer"), label)
+    require_keys(report["meta"], ("backend",), "meta")
     by_strategy = {}
     for row in report["train_step"]:
-        for field in ("strategy", "precision", "median_ms"):
-            if field not in row:
-                raise ValueError(f"train_step row missing {field!r}: {row}")
-        if not row["median_ms"] > 0:
-            raise ValueError(f"non-positive train_step timing: {row}")
+        require_keys(row, ("strategy", "precision", "median_ms"),
+                     "train_step row")
+        require_positive(row, ("median_ms",), "train_step row")
         by_strategy.setdefault(row["strategy"], set()).add(row["precision"])
     full = [s for s, precs in by_strategy.items()
             if {"f32", "bf16"} <= precs]
-    if len(full) < 3:
-        raise ValueError("need >= 3 strategies timed at both precisions, "
-                         f"got {sorted(full)}")
+    check(len(full) >= 3, "need >= 3 strategies timed at both precisions, "
+                          f"got {sorted(full)}")
     for name in KERNELS:
         row = report["kernels"].get(name)
-        if row is None:
-            raise ValueError(f"kernels section missing {name!r}")
-        if not (row.get("kernel_ms", 0) > 0 and row.get("ref_ms", 0) > 0):
-            raise ValueError(f"non-positive kernel timing for {name!r}")
+        check(row is not None, f"kernels section missing {name!r}")
+        require_positive(row, ("kernel_ms", "ref_ms"), f"kernels[{name!r}]")
     comps = {r["compressor"] for r in report["breakeven"]}
-    if not {"onebit", "topk"} <= comps:
-        raise ValueError(f"breakeven table incomplete: {sorted(comps)}")
+    check({"onebit", "topk"} <= comps,
+          f"breakeven table incomplete: {sorted(comps)}")
     fused = {r["compressor"] for r in report["exchange"] if r.get("fused")}
-    if not {"onebit", "topk"} <= fused:
-        raise ValueError("exchange section missing fused onebit/topk rows")
+    check({"onebit", "topk"} <= fused,
+          "exchange section missing fused onebit/topk rows")
     return report
 
 

@@ -1,10 +1,52 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Also home of the one schema-check vocabulary every committed JSON artifact
+validator speaks (BENCH_timing.json, BENCH_serving.json, LINT.json,
+PLAN.json) — presence, positivity and section checks used to be hand-rolled
+per validator; they all raise the same ``ValueError`` shape now so CI
+failures read uniformly."""
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+
+# ---------------------------------------------------------------------------
+# schema-check helpers (shared by bench_timing / bench_serving /
+# repro.analysis.report / repro.launch.planner validators)
+# ---------------------------------------------------------------------------
+def load_report(path: str, regen_hint: str) -> dict:
+    """Read a committed JSON artifact; a missing file is a schema error
+    that tells the reader how to regenerate it."""
+    if not os.path.exists(path):
+        raise ValueError(f"{path} is missing — run `{regen_hint}`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def check(cond, msg: str):
+    """One uniform failure shape for every artifact validator."""
+    if not cond:
+        raise ValueError(msg)
+
+
+def require_sections(report: dict, names, label: str):
+    for key in names:
+        check(key in report, f"{label}: missing section {key!r}")
+
+
+def require_keys(row: dict, fields, label: str):
+    for f_ in fields:
+        check(f_ in row, f"{label} missing {f_!r}: {row}")
+
+
+def require_positive(row: dict, fields, label: str):
+    for f_ in fields:
+        check(row.get(f_, 0) > 0, f"{label} bad (non-positive) {f_!r}: {row}")
 
 
 def time_fn(fn, *args, iters: int = 20, warmup: int = 3):

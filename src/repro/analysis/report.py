@@ -21,6 +21,7 @@ from typing import List, Optional
 
 RULES = (
     "collective-budget",
+    "tp-collective-budget",
     "promotion-proof",
     "donation-aliasing",
     "cond-gating",
@@ -28,6 +29,21 @@ RULES = (
     "retrace-detector",
     "state-aliasing",
 )
+
+
+def _schema_helpers():
+    """The shared artifact-validator vocabulary (benchmarks/common.py).
+    ``benchmarks`` is a repo-root package while this module lives under
+    src/, so direct import only works with the repo root on sys.path (the
+    lint CLI's cwd); fall back to an explicit path for other callers."""
+    try:
+        from benchmarks import common
+    except ImportError:
+        import pathlib
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[3]))
+        from benchmarks import common
+    return common
 
 STATUSES = ("pass", "fail", "skip")
 
@@ -109,47 +125,38 @@ def validate(report: dict, path: str = "LINT.json") -> dict:
 
     Acceptance (all files, smoke or full): zero ``fail`` statuses — the
     lint contracts must hold on whatever slice was swept."""
-    for key in ("meta", "cells", "summary"):
-        if key not in report:
-            raise ValueError(f"{path}: missing top-level {key!r}")
+    C = _schema_helpers()
+    C.require_sections(report, ("meta", "cells", "summary"), path)
     meta = report["meta"]
-    if meta.get("schema") != 1:
-        raise ValueError(f"{path}: unsupported schema {meta.get('schema')}")
-    for key in ("backend", "jax", "smoke", "workers"):
-        if key not in meta:
-            raise ValueError(f"{path}: meta missing {key!r}")
+    C.check(meta.get("schema") == 1,
+            f"{path}: unsupported schema {meta.get('schema')}")
+    C.require_keys(meta, ("backend", "jax", "smoke", "workers"),
+                   f"{path}: meta")
     cells = report["cells"]
-    if not cells:
-        raise ValueError(f"{path}: empty cell list")
+    C.check(cells, f"{path}: empty cell list")
     seen = set()
     for c in cells:
-        for key in ("config", "strategy", "precision", "accum", "rules"):
-            if key not in c:
-                raise ValueError(f"{path}: cell missing {key!r}: {c}")
+        C.require_keys(c, ("config", "strategy", "precision", "accum",
+                           "rules"), f"{path}: cell")
         tag = (c["config"], c["strategy"], c["precision"], c["accum"])
-        if tag in seen:
-            raise ValueError(f"{path}: duplicate cell {tag}")
+        C.check(tag not in seen, f"{path}: duplicate cell {tag}")
         seen.add(tag)
-        if not c["rules"]:
-            raise ValueError(f"{path}: cell {tag} has no rule results")
+        C.check(c["rules"], f"{path}: cell {tag} has no rule results")
         names = [r.get("rule") for r in c["rules"]]
         for r in c["rules"]:
-            if r.get("rule") not in RULES:
-                raise ValueError(f"{path}: unknown rule {r.get('rule')!r}")
-            if r.get("status") not in STATUSES:
-                raise ValueError(
+            C.check(r.get("rule") in RULES,
+                    f"{path}: unknown rule {r.get('rule')!r}")
+            C.check(r.get("status") in STATUSES,
                     f"{path}: bad status {r.get('status')!r} in {tag}")
         missing = set(RULES) - set(names)
-        if missing:
-            raise ValueError(
+        C.check(not missing,
                 f"{path}: cell {tag} missing rules {sorted(missing)}")
     bad = violations(report)
-    if bad:
-        raise ValueError(f"{path}: {len(bad)} rule violation(s); first: "
-                         + bad[0])
+    C.check(not bad, f"{path}: {len(bad)} rule violation(s); first: "
+                     + (bad[0] if bad else ""))
     summ = report["summary"]
-    if summ.get("cells") != len(cells):
-        raise ValueError(f"{path}: summary cell count mismatch")
+    C.check(summ.get("cells") == len(cells),
+            f"{path}: summary cell count mismatch")
     return report
 
 

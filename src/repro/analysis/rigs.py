@@ -39,6 +39,7 @@ from repro.train.loop import (
     jit_cache_size,
     make_replica_train_step,
     zero1_opt_template,
+    zero3_param_template,
 )
 
 WORKERS = 4  # mesh/replica width of every rig
@@ -104,12 +105,23 @@ def exchange_artifacts(params, strategy_name: str, precision: str,
     if bucket_bytes is None:
         bucket_bytes = pick_bucket_bytes(params)
     strat = build_strategy(strategy_name, pol, bucket_bytes)
+    owns_params = getattr(strat, "owns_params", False)
     comm = ShardComm("pod", workers)
     mesh = make_mesh((workers,), ("pod",))
     opt = sgd(0.1)
+    rep = jax.tree.map(lambda _: P(), params)
+    if owns_params:
+        # ZeRO-3: the train state's params are flat shard buckets (the
+        # production zero3_param_template shapes), sharded over the pod
+        # axis; the dense tree only appears as the gradient input.
+        p_state = zero3_param_template(params, workers, bucket_bytes)
+        p_spec = jax.tree.map(lambda _: P("pod"), p_state)
+    else:
+        p_state, p_spec = params, rep
     if strat.init_opt is not None:
+        # stage-3 f32 param shards double as the master: no policy split
         opt_state = zero1_opt_template(params, opt, workers, bucket_bytes,
-                                       policy=pol)
+                                       policy=None if owns_params else pol)
         opt_spec = jax.tree.map(lambda _: P("pod"), opt_state)
     else:
         opt_state = jax.eval_shape(opt.init, params)
@@ -121,13 +133,12 @@ def exchange_artifacts(params, strategy_name: str, precision: str,
         p2, s2, c2, _ = strat.update(p, g, s, c, t, opt, comm)
         return p2, s2, c2
 
-    rep = jax.tree.map(lambda _: P(), params)
     crep = jax.tree.map(lambda _: P(), cstate)
     fn = shard_map(body, mesh=mesh, axis_names={"pod"},
-                   in_specs=(rep, rep, opt_spec, crep, P()),
-                   out_specs=(rep, opt_spec, crep),
+                   in_specs=(p_spec, rep, opt_spec, crep, P()),
+                   out_specs=(p_spec, opt_spec, crep),
                    check_vma=False)
-    args = (params, params, opt_state, cstate, t_sds)
+    args = (p_state, params, opt_state, cstate, t_sds)
     jaxpr = jax.make_jaxpr(fn)(*args)
     with set_mesh(mesh):
         hlo = jax.jit(fn).lower(*args).compile().as_text()
@@ -199,6 +210,77 @@ def loop_artifacts(strategy_name: str, precision: str, accum: int,
 
 
 # ---------------------------------------------------------------------------
+# tp rig — tensor-parallel activation combines on a 'model' mesh
+# ---------------------------------------------------------------------------
+TP_DEGREE = 2
+
+
+def tp_artifacts(precision: str, tp_degree: int = TP_DEGREE) -> dict:
+    """Lower one TP training step (forward + backward + replicated-grad
+    finalize) of a tiny ``tp_degree``-split transformer under shard_map
+    over a 'model' mesh.  The TP combine contract lives entirely in
+    models/layers.py + models/tensor_parallel.py — not the config or the
+    strategy — so one rig per precision covers every lint cell.
+
+    Returns the compiled ``hlo``, the op->count ``contract`` (activation
+    combines from ``tp_collective_contract`` plus the finalize_grads
+    bucket budget) and ``tp_degree``."""
+    import dataclasses
+
+    from repro.configs.base import get_config
+    from repro.models import tensor_parallel as TP
+    from repro.models import transformer as T
+
+    pol = rig_policy(precision)
+    cfg = dataclasses.replace(
+        get_config("qwen2-1.5b").reduced(),
+        num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+        head_dim=16, d_ff=64, vocab_size=64, tp_degree=tp_degree)
+    params = T.init_model(jax.random.PRNGKey(0), cfg)
+    if pol is not None:
+        params = cast_floats(params, pol.param_dt)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0,
+                                cfg.vocab_size)
+    targets = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                 cfg.vocab_size)
+    shards = TP.tp_split_params(params, tp_degree)
+
+    def loss_of(p):
+        logits, _ = T.forward(p, cfg, tokens)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        return -jnp.mean(jnp.take_along_axis(logp, targets[..., None],
+                                             axis=-1))
+
+    def rank_step(sh):
+        p = jax.tree.map(lambda v: v[0], sh)
+        with TP.tp_context(tp_degree):
+            loss, grads = jax.value_and_grad(loss_of)(p)
+            grads = TP.current_tp().finalize_grads(grads)
+        loss = jax.lax.pmean(loss, "model")
+        return loss, jax.tree.map(lambda v: v[None], grads)
+
+    mesh = make_mesh((tp_degree,), ("model",))
+    spec = jax.tree.map(lambda _: P("model"), shards)
+    fn = shard_map(rank_step, mesh=mesh, axis_names={"model"},
+                   in_specs=(spec,), out_specs=(P(), spec),
+                   check_vma=False)
+    with set_mesh(mesh):
+        hlo = jax.jit(fn).lower(shards).compile().as_text()
+    act = jax.ShapeDtypeStruct(
+        (2, 8, cfg.d_model), jnp.float32 if pol is None else pol.param_dt)
+    contract = dict(TP.tp_collective_contract(cfg, act))
+    # finalize_grads ships the replicated-leaf grads as one bucketed
+    # all-sum on the same fabric — extend the combine budget by its
+    # bucket count.
+    rep, _ = TP._partition_replicated(
+        jax.tree.map(lambda v: v[0], shards), "stack")
+    fab = Fabric(ShardComm("model", tp_degree))
+    contract["all-reduce"] = (contract.get("all-reduce", 0)
+                              + fab.layout(rep).n_buckets)
+    return {"hlo": hlo, "contract": contract, "tp_degree": tp_degree}
+
+
+# ---------------------------------------------------------------------------
 # eager rig — comm_state mutation detector
 # ---------------------------------------------------------------------------
 def state_aliasing_artifacts(strategy_name: str, precision: str,
@@ -215,12 +297,15 @@ def state_aliasing_artifacts(strategy_name: str, precision: str,
     if pol is not None:
         params = cast_floats(params, pol.param_dt)
     strat = build_strategy(strategy_name, pol, bucket_bytes=4 * 256)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    if getattr(strat, "owns_params", False):
+        # ZeRO-3 state params are shard buckets; grads stay dense
+        params = strat.init_params(params, comm)
     if strat.init_opt is not None:
         opt_state = strat.init_opt(params, opt, comm)
     else:
         opt_state = opt.init(params)
     cstate = strat.init(params, comm)
-    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
     snaps = []
     for t in range(max(2, strat.sync_every)):
         before = rules.tree_snapshot(cstate)

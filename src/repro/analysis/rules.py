@@ -67,6 +67,43 @@ def collective_budget(hlo_text: str, contract: dict,
 
 
 # ---------------------------------------------------------------------------
+# tp-collective-budget — explicit TP combines stay within the "tp" contract
+# ---------------------------------------------------------------------------
+def tp_collective_budget(hlo_text: str, contract: dict, tp_degree: int,
+                         scalar_bytes_ok: int = SCALAR_BYTES_OK,
+                         scalar_count_ok: int = SCALAR_COUNT_OK) -> RuleResult:
+    """Lint a TP-rank program against ``collective_contract(..., "tp")``:
+    the tensor-parallel activation combines of models/tensor_parallel.py
+    must lower to at most the budgeted all-reduce count (2 per layer ×
+    fwd+bwd, + the replicated-grad finalize), no other collective type
+    may appear, and at least one combine must survive compilation — a TP
+    model whose combines were optimised away computes garbage silently.
+    ``tp_degree <= 1`` skips: there is nothing to combine."""
+    if tp_degree <= 1:
+        return result("tp-collective-budget", [],
+                      skip="tp_degree=1: no tensor-parallel combines")
+    wire, scalar = _split_wire_scalar(hlo_text, scalar_bytes_ok)
+    counts = Counter(i["op"] for i in wire)
+    findings: List[str] = []
+    for op, n in sorted(counts.items()):
+        cap = int(contract.get(op, 0))
+        if n > cap:
+            findings.append(
+                f"{op}: {n} wire instruction(s) exceed tp budget {cap}")
+    if contract and not wire:
+        findings.append("no wire collective compiled for a non-empty tp "
+                        f"contract {contract}")
+    if len(scalar) > scalar_count_ok:
+        findings.append(
+            f"{len(scalar)} scalar collectives exceed allowance "
+            f"{scalar_count_ok}")
+    return result("tp-collective-budget", findings,
+                  {"counts": dict(counts), "scalar": len(scalar),
+                   "tp_degree": int(tp_degree),
+                   "contract": {k: int(v) for k, v in contract.items()}})
+
+
+# ---------------------------------------------------------------------------
 # promotion-proof — no f32 payload on the wire when wire_dtype is narrow
 # ---------------------------------------------------------------------------
 def promotion_proof(hlo_text: str, narrow_wire: bool,

@@ -79,6 +79,15 @@ def _fused_rule(cache: _Cache, cfg_name: str, strategy: str,
     return rules.fused_dispatch(art["jaxpr_text"], art["codec_calls"])
 
 
+def _tp_rule(cache: _Cache, precision: str) -> RuleResult:
+    art = cache.get_or(("tp", precision),
+                       lambda: rigs.tp_artifacts(precision))
+    rr = rules.tp_collective_budget(art["hlo"], art["contract"],
+                                    art["tp_degree"])
+    rr.details["shared_rig"] = "per precision (model-level contract)"
+    return rr
+
+
 def _loop_rules(cache: _Cache, strategy: str, precision: str,
                 accum: int) -> List[RuleResult]:
     art = cache.get_or(
@@ -105,6 +114,7 @@ def _state_rule(cache: _Cache, strategy: str, precision: str) -> RuleResult:
 def evaluate_cell(cache: _Cache, cfg_name: str, strategy: str,
                   precision: str, accum: int) -> Cell:
     rr = _exchange_rules(cache, cfg_name, strategy, precision, accum)
+    rr.append(_tp_rule(cache, precision))
     rr.append(_fused_rule(cache, cfg_name, strategy, precision))
     rr.extend(_loop_rules(cache, strategy, precision, accum))
     rr.append(_state_rule(cache, strategy, precision))

@@ -102,6 +102,16 @@ class ModelConfig:
     # remat boundary cuts wire traffic ~21% but costs ~2.7 GB/layer/device —
     # exceeds 16 GB HBM on the large MoE trains, so opt-in only.
     save_moe_a2a: bool = False
+    # Explicit tensor parallelism (models/tensor_parallel.py, DESIGN.md §12):
+    # tp_degree > 1 switches the two ROW-PARALLEL contractions (attention
+    # out-projection over heads, MLP down-projection over d_ff) to the
+    # blocked-canonical form — a stacked sum of tp_degree partial einsums.
+    # Unsharded, this is the bitwise REFERENCE for a TP run of the same
+    # degree: each TP rank computes exactly one of those partials and the
+    # combine is the same stacked sum (for degree 2 a single f32 add, which
+    # is order-independent by IEEE commutativity).  tp_degree=1 keeps the
+    # historical single-einsum path untouched.
+    tp_degree: int = 1
 
     # ------------------------------------------------------------------------
     def __post_init__(self):
@@ -113,6 +123,18 @@ class ModelConfig:
                     f"{self.name}: {f}={v!r} is not a supported precision "
                     f"dtype; choose one of {ALLOWED_DTYPES} "
                     "(see core/precision.py)")
+        t = self.tp_degree
+        if t < 1:
+            raise ValueError(f"{self.name}: tp_degree must be >= 1, got {t}")
+        if t > 1:
+            # only the dims the row/column split partitions need to divide
+            for f, v in (("num_heads", self.num_heads),
+                         ("num_kv_heads", self.num_kv_heads),
+                         ("d_ff", self.d_ff)):
+                if v and v % t:
+                    raise ValueError(
+                        f"{self.name}: tp_degree={t} does not divide "
+                        f"{f}={v}")
 
     @property
     def resolved_head_dim(self) -> int:

@@ -341,9 +341,15 @@ class Fabric:
         (``Strategy.wire_profile``):
 
           dense        all-reduce(-mean/-sum) of the full tree
-          partitioned  ZeRO-1 reduce-scatter + all-gather per bucket
+          partitioned  ZeRO-1/2/3 reduce-scatter + all-gather per bucket
           compressed   packed uint8 all-gather per bucket (codec wire)
           ring         neighbour ppermute, ``events`` hops per exchange
+          tp           tensor parallelism: one dense all-reduce of the
+                       layer activation per row-parallel combine
+                       (attention out-projection + MLP down-projection);
+                       ``events`` counts the combines in the compiled
+                       program (forward AND backward — the column-split
+                       input grads all-reduce too)
           none         no wire traffic at all
         """
         lay = (tree_or_layout
@@ -366,6 +372,11 @@ class Fabric:
             return {"reduce-scatter": nb, "all-gather": nb}
         if profile == "ring":
             return {"collective-permute": int(events) * nb}
+        if profile == "tp":
+            if narrow:
+                return {"all-to-all": int(events) * nb,
+                        "all-gather": int(events) * nb}
+            return {"all-reduce": int(events) * nb}
         raise ValueError(f"unknown wire profile {profile!r}")
 
     # -- compression plumbing ----------------------------------------------
@@ -470,6 +481,31 @@ class Fabric:
         if play is not None:
             gb = self._pad_buckets(gb, play)
         return [a + g for a, g in zip(acc, gb)]
+
+    # ZeRO-2 (gradient sharding): the accumulator itself lives in the
+    # PartitionedLayout — every microbatch's gradient is reduce-scattered
+    # and only the local 1/W shard accumulates, so the full gradient is
+    # never resident.  The trade: one RS per bucket per MICROBATCH (vs one
+    # per boundary for ZeRO-1) against a W× smaller accumulator — exactly
+    # the wire-vs-memory axis the launch planner costs.
+
+    def init_accum_partitioned(self, play: PartitionedLayout):
+        """Zeroed 1/W shard-bucket f32 accumulator (ZeRO-2)."""
+        lead = play.layout.lead_shape
+        return [jnp.zeros(lead + (n,), jnp.float32)
+                for n in play.shard_sizes]
+
+    def accumulate_partitioned(self, acc, tree, play: PartitionedLayout):
+        """acc + reduce_scatter_mean(tree): the shard-space microbatch
+        add of ZeRO-2.  Accumulates per-microbatch cross-worker MEANS, so
+        the boundary divides by accum_steps only.  Returns
+        (shard_buckets, metrics); the metrics charge the RS half of the
+        partitioned exchange (the boundary all-gather is charged by
+        ``unpartition``'s caller)."""
+        gb = self._pad_buckets(play.layout.bucketize(tree), play)
+        shards, _ = self.exchange_partitioned_accumulated(gb, play)
+        return ([a + s for a, s in zip(acc, shards)],
+                self.metrics(self.flat_bytes(play.layout) / 2.0))
 
     # -- fused exchanges ----------------------------------------------------
     def exchange(self, grads, residual=None, compressor=None, events=1.0):

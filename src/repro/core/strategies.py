@@ -86,6 +86,32 @@ class Strategy:
     #                 ``gated``; 1 ⇒ communicates at every update call.
     wire_events: int = 1  # collective rounds per exchange event (ring
     #                 gossip: 2 hops when symmetric).
+    owns_params: bool = False  # ZeRO-3: the train state's ``params`` entry
+    #                 holds this worker's 1/W flat f32 SHARD BUCKETS, not
+    #                 the full tree — the loop must ``gather_params`` the
+    #                 full (transient) parameters before forward/backward
+    #                 and hand the shard buckets to ``update``.
+    init_params: Optional[Callable] = None  # (params, comm) -> shard
+    #                 buckets; called by init_train_state when
+    #                 ``owns_params`` to shard the freshly-initialized
+    #                 full tree (and to record the partition layout the
+    #                 strategy's other hooks close over).
+    gather_params: Optional[Callable] = None  # (shards, comm) -> full
+    #                 params tree: the per-step bucket all-gather of
+    #                 ZeRO-3 (wire-dtype image; freed after the step —
+    #                 inside jit the gathered tree is a temp, never state).
+    partitioned_accum: bool = False  # ZeRO-2/3: microbatch gradients are
+    #                 reduce-scattered into the PartitionedLayout as they
+    #                 are produced (Fabric.accumulate_partitioned), so the
+    #                 accumulator is 1/W and the full gradient is NEVER
+    #                 materialized.  The boundary then calls
+    #                 ``update_partitioned`` with the accumulated shard
+    #                 buckets instead of ``update`` with a full tree.
+    update_partitioned: Optional[Callable] = None  # (params_or_shards,
+    #                 g_shard_buckets, opt_state, comm_state, t, optimizer,
+    #                 comm) -> (params_or_shards, opt_state, comm_state,
+    #                 metrics): the boundary step of the partitioned-accum
+    #                 path — gradients arrive already reduce-scattered.
 
     # Contract: ``update`` must treat ``comm_state`` as immutable and
     # return a FRESH mapping — callers re-step from saved state (resume,
@@ -201,6 +227,132 @@ def sync_zero1(bucket_bytes: int = DEFAULT_BUCKET_BYTES,
 
     return Strategy("sync_zero1", 1, True, init, update, init_opt,
                     owns_master=keeps_master, wire_profile="partitioned")
+
+
+# ---------------------------------------------------------------------------
+# 1z2. ZeRO-2: gradient sharding on top of the partitioned optimizer state
+# ---------------------------------------------------------------------------
+def sync_zero2(bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+               policy: Optional[PrecisionPolicy] = None) -> Strategy:
+    """ZeRO-1 plus gradient sharding (Rajbhandari et al. stage 2): under
+    microbatch accumulation the gradient of EVERY microbatch is
+    reduce-scattered into the ``PartitionedLayout`` as it is produced
+    (``Fabric.accumulate_partitioned``), so the accumulator holds 1/W
+    shard buckets and the full gradient is never materialized — the
+    accumulator memory of DESIGN.md §8 shrinks by W.
+
+    The trade the planner (launch/planner.py) prices: one reduce-scatter
+    per bucket per MICROBATCH (accum_steps × N·(W−1)/W ring bytes per
+    boundary, vs one RS for ZeRO-1) against the W× accumulator shrink.
+    At ``accum_steps=1`` the wire and the numerics degenerate exactly to
+    ``sync_zero1``: one RS + one AG per boundary."""
+
+    keeps_master = policy is not None and policy.keeps_master
+    z1 = sync_zero1(bucket_bytes=bucket_bytes, policy=policy)
+
+    def update_partitioned(params, g_shards, opt_state, cstate, t,
+                           opt: Optimizer, comm: Comm):
+        # boundary of the partitioned-accum scan: gradients arrive as
+        # already-reduced 1/W shard buckets — only the shard update and
+        # the param all-gather remain.
+        fab = _fab(comm, bucket_bytes, policy)
+        play = fab.partitioned_layout(params)
+        if keeps_master:
+            inner, p_shards = opt_state["opt"], opt_state["master"]
+        else:
+            inner, p_shards = opt_state, fab.shard_params(params, play)
+        p_shards, inner = opt.update(g_shards, inner, p_shards, t)
+        params = fab.unpartition(p_shards, play)
+        new_state = {"opt": inner, "master": p_shards} if keeps_master \
+            else inner
+        m = fab.metrics(fab.flat_bytes(play.layout) / 2.0)  # the AG half
+        return params, new_state, cstate, m
+
+    return Strategy("sync_zero2", 1, True, z1.init, z1.update, z1.init_opt,
+                    owns_master=keeps_master, wire_profile="partitioned",
+                    partitioned_accum=True,
+                    update_partitioned=update_partitioned)
+
+
+# ---------------------------------------------------------------------------
+# 1z3. ZeRO-3: parameter sharding — the train state holds 1/W of the model
+# ---------------------------------------------------------------------------
+def sync_zero3(bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+               policy: Optional[PrecisionPolicy] = None) -> Strategy:
+    """Full ZeRO (stage 3): parameters, gradients AND optimizer state are
+    partitioned.  The train state's ``params`` are this worker's flat f32
+    shard buckets (W× smaller than the replicated tree — the
+    ``step_state_peak_bytes`` shrink in roofline/analysis.py); the loop
+    all-gathers the full parameters per step via ``gather_params`` (one
+    tiled wire-dtype all-gather per bucket, freed after forward/backward),
+    reduce-scatters the gradients, and the elementwise optimizer updates
+    the shards in place.
+
+    Numerics are bitwise-equal to ``sync``: the reduce-scattered mean is
+    the same floats as slicing the all-reduced mean, the optimizers are
+    elementwise (optim/optimizers.py), and ``unpartition`` reconstructs
+    the exact concatenation — tested in tests/test_zero23.py.
+
+    The f32 shard buckets double as the precision master — under a
+    master-keeping policy no separate master copy exists (``owns_master``),
+    and the per-step gather ships the wire-dtype (bf16-halved) image."""
+
+    keeps_master = policy is not None and policy.keeps_master
+    box = {}  # partition layout, recorded by init_params (static pytree
+    #           metadata — read at trace time, never traced)
+
+    def _fab_play(comm, tree=None):
+        fab = _fab(comm, bucket_bytes, policy)
+        play = box.get("play")
+        if play is None and tree is not None:
+            play = fab.partitioned_layout(tree)
+        return fab, play
+
+    def init(params, comm):
+        return {}
+
+    def init_params(params, comm):
+        fab = _fab(comm, bucket_bytes, policy)
+        play = fab.partitioned_layout(params)
+        box["play"] = play
+        return fab.shard_params(params, play)  # flat f32 shard buckets
+
+    def gather_params(shards, comm):
+        fab, play = _fab_play(comm)
+        return fab.unpartition(shards, play)
+
+    def init_opt(p_shards, opt: Optimizer, comm: Comm):
+        # ``init_train_state`` hands the SHARD BUCKETS produced by
+        # init_params — the optimizer state is shard-shaped by
+        # construction, no separate sharding step.
+        return opt.init(p_shards)
+
+    def update(p_shards, grads, opt_state, cstate, t, opt: Optimizer,
+               comm: Comm):
+        # grads: the full per-worker tree from backward over the gathered
+        # params (same structure/dtypes as the params tree, so its
+        # partitioned layout IS the param layout).
+        fab, play = _fab_play(comm, grads)
+        g_shards, m = fab.exchange_partitioned(grads, play)
+        p_shards, opt_state = opt.update(g_shards, opt_state, p_shards, t)
+        return p_shards, opt_state, cstate, m
+
+    def update_partitioned(p_shards, g_shards, opt_state, cstate, t,
+                           opt: Optimizer, comm: Comm):
+        # ZeRO-2 accumulation path on top: gradients arrive as reduced
+        # shard buckets; only the elementwise shard update remains (the
+        # param gather of the NEXT step is the AG half of the wire).
+        fab = _fab(comm, bucket_bytes, policy)
+        p_shards, opt_state = opt.update(g_shards, opt_state, p_shards, t)
+        play = box.get("play")
+        nb = fab.flat_bytes(play.layout) / 2.0 if play is not None else 0.0
+        return p_shards, opt_state, cstate, fab.metrics(nb)
+
+    return Strategy("sync_zero3", 1, True, init, update, init_opt,
+                    owns_master=keeps_master, wire_profile="partitioned",
+                    owns_params=True, init_params=init_params,
+                    gather_params=gather_params, partitioned_accum=True,
+                    update_partitioned=update_partitioned)
 
 
 # ---------------------------------------------------------------------------
@@ -480,6 +632,8 @@ def hierarchical(inner: Strategy, outer: Strategy) -> Strategy:
 REGISTRY = {
     "sync": sync,
     "sync_zero1": sync_zero1,
+    "sync_zero2": sync_zero2,
+    "sync_zero3": sync_zero3,
     "sync_dgc": sync_dgc,
     "local_sgd": local_sgd,
     "easgd": easgd,

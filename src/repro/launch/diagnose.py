@@ -18,12 +18,18 @@ from repro.launch.specs import build_step, resolve_config, truncate  # noqa: E40
 from repro.roofline.analysis import _INSTR_RE, _shape_bytes, COLLECTIVE_OPS  # noqa: E402
 
 
-def top_collectives(arch, shape, multi_pod=False, repeat=1, n=14, mode="tp"):
-    mesh = make_production_mesh(multi_pod=multi_pod)
+def top_collectives(arch, shape, multi_pod=False, repeat=1, n=14, mode="tp",
+                    mesh=None, zero_stage=0):
+    """``mesh=None`` builds the production mesh; tests inject a small mesh
+    (e.g. (2, 2) over ("data", "model")) so the diagnosis runs on a
+    4-device CPU container without the 512-device production env."""
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
     import dataclasses
     cfg = truncate(dataclasses.replace(resolve_config(arch, shape),
                                        sharding_mode=mode), repeat)
-    step_fn, sds, sh, donate = build_step(cfg, shape, mesh)
+    step_fn, sds, sh, donate = build_step(cfg, shape, mesh,
+                                          zero_stage=zero_stage)
     with compat.set_mesh(mesh):
         comp = jax.jit(step_fn, in_shardings=sh,
                        donate_argnums=donate).lower(*sds).compile()

@@ -15,6 +15,7 @@ Usage:
 
 import argparse  # noqa: E402
 import json  # noqa: E402
+import sys  # noqa: E402
 import time  # noqa: E402
 import traceback  # noqa: E402
 
@@ -35,16 +36,17 @@ ALL_ARCHS = [
 
 def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
             mode: str = "tp", precision: str = None,
-            accum_steps: int = 1):
+            accum_steps: int = 1, zero_stage: int = 0, tp_degree: int = 1):
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_label = "2x16x16" if multi_pod else "16x16"
     n_dev = 512 if multi_pod else 256
     shape = SHAPES[shape_name]
 
     cfg = resolve_config(arch, shape_name)
-    if cfg is not None and mode != "tp":
+    if cfg is not None and (mode != "tp" or tp_degree > 1):
         import dataclasses
-        cfg = dataclasses.replace(cfg, sharding_mode=mode)
+        cfg = dataclasses.replace(cfg, sharding_mode=mode,
+                                  tp_degree=tp_degree)
     if cfg is None:
         return {"arch": arch, "shape": shape_name, "mesh": mesh_label,
                 "status": "skip",
@@ -54,7 +56,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
     t0 = time.time()
     step_fn, sds, shardings, donate = build_step(cfg, shape_name, mesh,
                                                  precision=precision,
-                                                 accum_steps=accum_steps)
+                                                 accum_steps=accum_steps,
+                                                 zero_stage=zero_stage)
     with compat.set_mesh(mesh):
         jitted = jax.jit(step_fn, in_shardings=shardings,
                          donate_argnums=donate)
@@ -72,7 +75,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
         tcfg = truncate(cfg, r)
         tstep, tsds, tsh, tdon = build_step(tcfg, shape_name, mesh,
                                             precision=precision,
-                                            accum_steps=accum_steps)
+                                            accum_steps=accum_steps,
+                                            zero_stage=zero_stage)
         with compat.set_mesh(mesh):
             tcomp = jax.jit(tstep, in_shardings=tsh,
                             donate_argnums=tdon).lower(*tsds).compile()
@@ -140,7 +144,21 @@ def main():
                     help="microbatch accumulation per optimizer step "
                          "(DESIGN.md \u00a78): train shapes gain a leading "
                          "scan axis and fire one exchange per boundary")
+    ap.add_argument("--zero-stage", type=int, default=0,
+                    choices=[0, 1, 2, 3],
+                    help="ZeRO stage for train shapes: 1 shards optimizer "
+                         "state over \"pod\", 2 also shards the microbatch "
+                         "grad accumulator, 3 also shards the parameters")
+    ap.add_argument("--tp-degree", type=int, default=1,
+                    help="tensor-parallel degree baked into the config "
+                         "(cfg.tp_degree): >1 takes the blocked-reference "
+                         "lowering of models/layers.py")
     args = ap.parse_args()
+
+    if args.arch is not None and args.arch not in ALL_ARCHS:
+        print(f"unknown config {args.arch!r}; valid names: "
+              + ", ".join(ALL_ARCHS), file=sys.stderr)
+        raise SystemExit(2)
 
     pairs = []
     if args.all:
@@ -156,7 +174,9 @@ def main():
             results.append(run_one(arch, shape, args.multi_pod,
                                    mode=args.mode,
                                    precision=args.precision,
-                                   accum_steps=args.accum_steps))
+                                   accum_steps=args.accum_steps,
+                                   zero_stage=args.zero_stage,
+                                   tp_degree=args.tp_degree))
         except Exception as e:  # noqa: BLE001 — report, keep sweeping
             traceback.print_exc()
             results.append({"arch": arch, "shape": shape,

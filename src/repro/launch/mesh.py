@@ -16,8 +16,16 @@ HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, tp_degree: int = 16):
+    """The 256-chip pod mesh (512 with ``multi_pod``): the trailing
+    "model" axis carries ``tp_degree`` chips and the "data" axis the
+    rest — ``data x model`` is always 256, so the launch planner can
+    trade DP degree against TP degree without changing the device
+    count."""
+    if tp_degree < 1 or 256 % tp_degree:
+        raise ValueError(f"tp_degree must divide 256, got {tp_degree}")
+    dp = 256 // tp_degree
+    shape = (2, dp, tp_degree) if multi_pod else (dp, tp_degree)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return compat.make_mesh(shape, axes)
 

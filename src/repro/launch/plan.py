@@ -1,0 +1,93 @@
+"""Auto-parallelism planner CLI (DESIGN.md §12).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.plan --arch deepseek-67b
+    PYTHONPATH=src python -m repro.launch.plan --all [--out PLAN.json]
+    PYTHONPATH=src python -m repro.launch.plan --validate
+
+``--all`` writes the committed ``PLAN.json`` artifact; CI validates it,
+reruns a ``PLAN_SMOKE=1`` slice and re-validates, exactly like the bench
+and lint tiers.  ``--validate`` also cross-checks every chosen plan
+against the committed ``LINT.json`` analysis-tier results when present.
+Exit codes: 0 clean, 1 validation failure, 2 unknown config name.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.launch import planner as PL
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+OUT = os.path.join(ROOT, "PLAN.json")
+TIMING = os.path.join(ROOT, "BENCH_timing.json")
+
+
+def _show(plan: dict):
+    ch, base = plan["chosen"], plan["baseline_dp"]
+    print(f"{plan['config']}: dp={ch['dp']} tp={ch['tp']} "
+          f"zero={ch['zero_stage']} accum={ch['accum_steps']} "
+          f"{ch['precision']} -> {ch['step_s']:.3f}s/step "
+          f"(state {ch['state_gb']:.2f} GB, "
+          f"pure-DP {base['step_s']:.3f}s, "
+          f"{plan['speedup_vs_dp']:.2f}x, "
+          f"{plan['candidates_searched']} candidates)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.plan",
+        description="roofline-driven auto-parallelism planner")
+    ap.add_argument("--arch", help="plan a single config")
+    ap.add_argument("--all", action="store_true",
+                    help="plan every eval config and write the artifact")
+    ap.add_argument("--out", default=None,
+                    help=f"artifact path (default {OUT} with --all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small config slice (also via PLAN_SMOKE=1)")
+    ap.add_argument("--validate", action="store_true",
+                    help="validate the committed artifact and exit")
+    args = ap.parse_args(argv)
+
+    out_path = args.out or OUT
+    if args.validate:
+        try:
+            rep = PL.validate_file(out_path)
+        except ValueError as e:
+            print(f"VALIDATION FAILED: {e}", file=sys.stderr)
+            return 1
+        s = rep["summary"]
+        print(f"{out_path}: OK — {s['configs']} plans, "
+              f"{s['beat_pure_dp']} beat pure DP, "
+              f"smoke={rep['meta']['smoke']}")
+        return 0
+
+    smoke = args.smoke or os.environ.get("PLAN_SMOKE") == "1"
+    names = None
+    if args.arch is not None:
+        valid = PL.plan_configs()
+        if args.arch not in valid:
+            print(f"unknown config {args.arch!r}; valid names: "
+                  + ", ".join(valid), file=sys.stderr)
+            raise SystemExit(2)
+        names = (args.arch,)
+
+    t0 = time.time()
+    rep = PL.build_report(names=names, smoke=smoke, timing_path=TIMING)
+    for plan in rep["plans"]:
+        _show(plan)
+    s = rep["summary"]
+    print(f"planned {s['configs']} config(s) in {time.time() - t0:.2f}s: "
+          f"{s['beat_pure_dp']} beat pure DP")
+    if args.all or (args.out and names is None):
+        with open(out_path, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+        print(f"wrote {out_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

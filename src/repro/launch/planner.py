@@ -1,0 +1,522 @@
+"""Roofline-driven auto-parallelism planner (DESIGN.md §12).
+
+For every eval config the planner searches the launch space
+
+    (DP degree × TP degree × ZeRO stage × accum_steps × precision)
+
+with ``dp × tp = DEVICES`` fixed, costs each candidate with the
+three-term roofline model of ``repro.roofline.analysis`` (compute /
+HBM / collective) plus an explicit HBM-overflow swap penalty, and emits
+the cheapest feasible launch spec per config into the committed
+``PLAN.json`` artifact (CLI: ``python -m repro.launch.plan``).
+
+The cost model is ANALYTIC — the same closed forms the measured dry-run
+tier extrapolates (``model_flops_per_device``, ``step_state_peak_bytes``,
+``exchange_wire_bytes``, ``tp_wire_bytes``) — so planning all 11 configs
+is instant and deterministic; CI re-derives every chosen plan and
+compares step costs exactly.
+
+Within one candidate the TP assignment is a PaSE-style dynamic program
+over the layer-graph segments ``[embed] + [block]×L + [head]``: each
+segment independently picks its parallel degree (1 or the candidate's
+``tp``) to minimise segment compute + combine wire + the reshard cost of
+switching degree between adjacent segments.  The repo's TP scheme keeps
+the residual stream replicated at block boundaries (the row-parallel
+all-reduce IS the resharding), so transitions are free and the
+recurrence degenerates per-segment — but the recurrence is what the
+planner optimises, and a future sequence-sharded scheme only has to
+price the transition.
+
+The measured breakeven table of ``BENCH_timing.json`` closes the loop on
+gradient compression: a compressed wire only pays below the measured
+breakeven link bandwidth, so the planner records an advisory instead of
+unconditionally adding the codec to the plan.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.configs.base import get_config, list_configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.roofline.analysis import (
+    dtype_wire_bytes,
+    exchange_wire_bytes,
+    model_flops_per_device,
+    opt_state_bytes,
+    step_state_peak_bytes,
+    tp_wire_bytes,
+)
+
+DEVICES = 256
+HBM_BYTES = 16 << 30  # ~16 GB HBM per device (launch/mesh.py production pod)
+# each byte over HBM is swapped out AND back in per step through the HBM
+# interface, at a fraction of its bandwidth (host-link staging)
+SWAP_FACTOR = 8.0
+
+TP_DEGREES = (1, 2, 4, 8, 16)
+ZERO_STAGES = (0, 1, 2, 3)
+ACCUM_STEPS = (1, 4)
+PRECISIONS = ("f32", "bf16")
+
+# the 10 registered archs + the sliding-window long-context variant —
+# the same eval set the lint sweep proves (repro.analysis.sweep)
+def plan_configs() -> Tuple[str, ...]:
+    return tuple(sorted(list_configs())) + ("qwen2.5-14b-swa",)
+
+
+SMOKE_CONFIGS = ("gemma3-1b", "qwen2-1.5b")
+
+# configs whose chosen plan must beat pure data parallelism with margin
+# (the memory-bound regime of the paper §2: pure DP replicates state it
+# cannot hold)
+LARGE_CONFIGS = ("deepseek-67b", "qwen2-moe-a2.7b", "jamba-1.5-large-398b")
+
+ZERO_STRATEGY = {0: "sync", 1: "sync_zero1", 2: "sync_zero2",
+                 3: "sync_zero3"}
+
+_PARAM_BYTES = {"f32": 4.0, "bf16": 2.0}
+_MASTER_FLOATS = {"f32": 0, "bf16": 1}  # bf16 keeps an f32 master shard
+_ADAM_FLOATS = 2
+
+
+# ---------------------------------------------------------------------------
+# model decomposition — what fraction of the config TP actually divides
+# ---------------------------------------------------------------------------
+def _head_dim(cfg) -> int:
+    return cfg.head_dim or cfg.d_model // cfg.num_heads
+
+
+def _attn_params_per_layer(cfg) -> float:
+    hd = _head_dim(cfg)
+    return float(cfg.d_model * hd * (2 * cfg.num_heads
+                                     + 2 * cfg.num_kv_heads))
+
+
+def _embed_params(cfg) -> float:
+    copies = 1 if cfg.tie_embeddings else 2
+    return float(copies * cfg.vocab_size * cfg.d_model)
+
+
+def tp_valid_degrees(cfg) -> Tuple[int, ...]:
+    """TP degrees the split axes of models/tensor_parallel.py admit:
+    ``t`` must divide the head blocks (wq/wo), the KV blocks (wk/wv) and
+    the feed-forward width (w_gate/w_up/w_down).  SSM stacks have no
+    row-parallel contraction to split."""
+    if cfg.family == "ssm":
+        return (1,)
+    out = [1]
+    for t in TP_DEGREES[1:]:
+        if DEVICES % t:
+            continue
+        if cfg.num_heads % t or cfg.num_kv_heads % t:
+            continue
+        if cfg.d_ff and cfg.d_ff % t:
+            continue
+        out.append(t)
+    return tuple(out)
+
+
+def tp_split_fractions(cfg) -> Tuple[float, float]:
+    """(active-compute fraction, total-parameter fraction) that the TP
+    split axes divide.  Attention projections always split; the dense
+    MLP splits; MoE expert banks are REPLICATED across TP ranks
+    (models/tensor_parallel.py ships them whole), so for MoE families
+    only the attention share shrinks."""
+    n_layers = float(cfg.num_layers)
+    attn_layers = n_layers
+    if cfg.attn_every:  # hybrid: 1 attention layer per attn_every
+        attn_layers = n_layers / float(cfg.attn_every)
+    attn = _attn_params_per_layer(cfg) * attn_layers
+    dense_ffn = 0.0
+    if cfg.num_experts == 0:
+        dense_ffn = 3.0 * cfg.d_model * cfg.d_ff * n_layers
+    elif cfg.moe_every > 1:  # mixed stacks: dense mlp on non-MoE layers
+        dense_layers = n_layers - n_layers / float(cfg.moe_every)
+        dense_ffn = 3.0 * cfg.d_model * cfg.d_ff * dense_layers
+    split = attn + dense_ffn
+    active = float(cfg.active_param_count())
+    total = float(cfg.param_count())
+    return (min(1.0, split / active) if active else 0.0,
+            min(1.0, split / total) if total else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# PaSE-style segment recurrence
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Segment:
+    name: str
+    flops: float          # per optimizer step, whole cluster
+    split_frac: float     # fraction of flops a TP degree divides
+    combines: int         # row-parallel all-reduces if run TP (fwd+bwd)
+
+
+def build_segments(cfg, shape) -> List[Segment]:
+    """[embed] + [block]×L + [head] with per-segment model FLOPs.
+    The lm head is the (B·S·D·V) logits matmul (6× for fwd+bwd); the
+    embedding lookup is a gather (≈0 FLOPs); the residual blocks share
+    the remaining 6·N_active·tokens evenly."""
+    tokens = float(shape.global_batch * shape.seq_len)
+    total = 6.0 * float(cfg.active_param_count()) * tokens
+    head = 6.0 * float(cfg.vocab_size * cfg.d_model) * tokens
+    head = min(head, total * 0.5)
+    block = max(0.0, total - head) / float(cfg.num_layers)
+    active_frac, _ = tp_split_fractions(cfg)
+    segs = [Segment("embed", 0.0, 0.0, 0)]
+    segs += [Segment("block", block, active_frac, 4)] * cfg.num_layers
+    segs.append(Segment("head", head, 0.0, 0))
+    return segs
+
+
+def assign_segments(segs: List[Segment], tp: int, dp: int,
+                    act_nbytes: float, peak: float,
+                    reshard_nbytes: float = 0.0) -> Tuple[float, Dict]:
+    """Minimise Σ segment cost over per-segment degree ∈ {1, tp} with a
+    transition cost when adjacent segments change degree.
+
+    cost(seg, t) = flops/dp·(split/t + 1−split)/peak
+                 + combines·2(t−1)/t·act_bytes/ICI_BW   [t>1]
+    trans(a, b)  = reshard_bytes/ICI_BW                  [a≠b]
+
+    The non-split share is REPLICATED across the model group — every TP
+    rank computes it for its DP shard, so it divides by dp only; that
+    redundancy is the genuine cost of raising tp on a config whose head
+    or expert compute TP cannot divide.
+
+    The repo's TP keeps activations replicated at segment boundaries
+    (the combine all-reduce is the reshard), so ``reshard_nbytes`` is 0
+    and the recurrence is separable — it is kept general on purpose."""
+
+    def seg_cost(s: Segment, t: int) -> float:
+        comp = s.flops * (s.split_frac / t + 1.0 - s.split_frac) \
+            / (dp * peak)
+        wire = 0.0
+        if t > 1 and s.combines:
+            wire = s.combines * 2.0 * (t - 1) / t * act_nbytes / ICI_BW
+        return comp + wire
+
+    choices = (1,) if tp <= 1 else (1, tp)
+    trans = reshard_nbytes / ICI_BW
+    # DP over segments, state = degree of the previous segment
+    best = {t: (seg_cost(segs[0], t) if t == 1 or segs[0].split_frac
+                else float("inf")) for t in choices}
+    path = {t: [t] for t in choices}
+    for s in segs[1:]:
+        nbest, npath = {}, {}
+        for t in choices:
+            c = seg_cost(s, t)
+            prev = min(choices,
+                       key=lambda q: best[q] + (trans if q != t else 0.0))
+            nbest[t] = best[prev] + (trans if prev != t else 0.0) + c
+            npath[t] = path[prev] + [t]
+        best, path = nbest, npath
+    t_end = min(choices, key=lambda t: best[t])
+    degrees = path[t_end]
+    summary = {"embed": degrees[0], "head": degrees[-1],
+               "block": max(degrees[1:-1]) if len(degrees) > 2 else 1,
+               "tp_blocks": sum(1 for d in degrees[1:-1] if d > 1)}
+    return best[t_end], summary
+
+
+# ---------------------------------------------------------------------------
+# candidate costing
+# ---------------------------------------------------------------------------
+def candidate_cost(cfg, shape, tp: int, zero: int, accum: int,
+                   precision: str) -> Optional[dict]:
+    """Roofline-modeled cost of one launch candidate; None if the
+    candidate cannot be launched (indivisible batch or TP axes)."""
+    if tp not in tp_valid_degrees(cfg):
+        return None
+    dp = DEVICES // tp
+    if shape.global_batch % (dp * accum):
+        return None
+
+    n = float(cfg.param_count())
+    _, total_frac = tp_split_fractions(cfg)
+    # per-device parameter share after the TP split (replicated leaves
+    # — embeddings, norms, MoE banks — stay whole on every rank)
+    n_dev = n * (1.0 - total_frac) + n * total_frac / tp
+
+    pbytes = _PARAM_BYTES[precision]
+    peak = PEAK_FLOPS_BF16 * (1.0 if precision == "bf16" else 0.5)
+    p_dense = n_dev * pbytes
+    o_dense = opt_state_bytes(int(n_dev), _ADAM_FLOATS,
+                              master_floats=_MASTER_FLOATS[precision])
+    state = step_state_peak_bytes(p_dense, o_dense, int(n_dev),
+                                  accum_steps=accum, donated=True,
+                                  w=dp, zero_stage=zero)
+
+    # activations: per-device microbatch residual stream, resident across
+    # the remat'd backward
+    b_dev = shape.global_batch // (dp * accum)
+    act = float(b_dev * shape.seq_len * cfg.d_model) * pbytes
+    act_resident = act * cfg.num_layers
+
+    mem = state + act_resident
+    over = max(0.0, mem - float(HBM_BYTES))
+    swap_s = over * SWAP_FACTOR / HBM_BW
+
+    # compute + TP combines via the segment recurrence
+    compute_s, segments = assign_segments(
+        build_segments(cfg, shape), tp, dp, act, peak)
+
+    # data-parallel gradient exchange (per boundary), at the wire dtype
+    flat = dtype_wire_bytes(int(n_dev),
+                            "bfloat16" if precision == "bf16" else "float32")
+    if dp == 1:
+        dp_wire = 0.0
+    elif zero <= 1:
+        dp_wire = exchange_wire_bytes(flat, dp)
+    elif zero == 2:
+        # RS per MICROBATCH into the shard accumulator + one AG
+        dp_wire = (accum + 1.0) * (dp - 1.0) / dp * flat
+    else:
+        # ZeRO-3: per-microbatch RS + the per-step parameter all-gather
+        dp_wire = (accum + 1.0) * (dp - 1.0) / dp * flat
+    tp_wire = tp_wire_bytes(act, tp, cfg.num_layers) * accum
+    collective_s = (dp_wire + tp_wire) / ICI_BW
+
+    memory_s = mem / HBM_BW
+    step_s = max(compute_s, memory_s, collective_s) + swap_s
+    return {
+        "dp": dp, "tp": tp, "zero_stage": zero, "accum_steps": accum,
+        "precision": precision, "strategy": ZERO_STRATEGY[zero],
+        "step_s": step_s, "compute_s": compute_s, "memory_s": memory_s,
+        "collective_s": collective_s, "swap_penalty_s": swap_s,
+        "state_bytes": state, "state_gb": state / (1 << 30),
+        "hbm_ok": mem <= float(HBM_BYTES),
+        "dp_wire_bytes": dp_wire, "tp_wire_bytes": tp_wire,
+        "segments": segments,
+        "microbatch_per_device": b_dev,
+    }
+
+
+def baseline_cost(cfg, shape, precision: str = "bf16") -> dict:
+    """Pure data parallelism: dp=DEVICES, no TP, no ZeRO, no accum —
+    the replicate-everything launch the paper's §2 regime starts from."""
+    return candidate_cost(cfg, shape, tp=1, zero=0, accum=1,
+                          precision=precision)
+
+
+def plan_config(name: str, shape=None) -> dict:
+    """Search the full candidate space for one config; returns the plan
+    record (chosen spec + pure-DP baseline + search provenance)."""
+    from repro.launch.specs import SHAPES
+
+    cfg = get_config(name)
+    shape = shape or SHAPES["train_4k"]
+    candidates = []
+    for precision in PRECISIONS:
+        for zero in ZERO_STAGES:
+            for accum in ACCUM_STEPS:
+                for tp in tp_valid_degrees(cfg):
+                    c = candidate_cost(cfg, shape, tp, zero, accum,
+                                       precision)
+                    if c is not None:
+                        candidates.append(c)
+    if not candidates:
+        raise ValueError(f"{name}: no launchable candidate")
+    chosen = min(candidates, key=lambda c: (c["step_s"], c["tp"],
+                                            c["zero_stage"],
+                                            c["accum_steps"]))
+    base = baseline_cost(cfg, shape)
+    return {
+        "config": name,
+        "shape": shape.name,
+        "n_params": int(cfg.param_count()),
+        "n_active_params": int(cfg.active_param_count()),
+        "model_flops_per_device": model_flops_per_device(
+            cfg, shape, DEVICES),
+        "chosen": chosen,
+        "baseline_dp": base,
+        "speedup_vs_dp": base["step_s"] / chosen["step_s"],
+        "candidates_searched": len(candidates),
+    }
+
+
+# ---------------------------------------------------------------------------
+# breakeven advisory from the measured bench tier
+# ---------------------------------------------------------------------------
+def compression_advisory(timing_path: str = "BENCH_timing.json") -> dict:
+    """The measured encode-overhead breakeven (benchmarks/bench_timing.py):
+    a compressed gradient wire pays only below ``breakeven_gbps`` link
+    bandwidth.  The planner compares against the modeled interconnect and
+    records the verdict instead of blindly adding a codec."""
+    link_gbps = ICI_BW / 1e9
+    try:
+        with open(timing_path) as f:
+            rows = json.load(f).get("breakeven", [])
+    except (OSError, json.JSONDecodeError):
+        rows = []
+    best = max((r.get("breakeven_gbps", 0.0) for r in rows), default=0.0)
+    return {
+        "source": os.path.basename(timing_path) if rows else None,
+        "best_breakeven_gbps": best,
+        "link_gbps": link_gbps,
+        "compression_pays": bool(rows) and link_gbps < best,
+    }
+
+
+# ---------------------------------------------------------------------------
+# report + validation
+# ---------------------------------------------------------------------------
+def build_report(names=None, smoke: bool = False,
+                 timing_path: str = "BENCH_timing.json") -> dict:
+    if names is None:
+        names = SMOKE_CONFIGS if smoke else plan_configs()
+    plans = [plan_config(n) for n in names]
+    beat = sum(1 for p in plans if p["speedup_vs_dp"] > 1.0)
+    return {
+        "meta": {
+            "schema": 1,
+            "devices": DEVICES,
+            "hbm_gb": HBM_BYTES / (1 << 30),
+            "peak_flops_bf16": PEAK_FLOPS_BF16,
+            "hbm_gbps": HBM_BW / 1e9,
+            "ici_gbps": ICI_BW / 1e9,
+            "swap_factor": SWAP_FACTOR,
+            "smoke": bool(smoke),
+            "search_space": {
+                "tp_degrees": list(TP_DEGREES),
+                "zero_stages": list(ZERO_STAGES),
+                "accum_steps": list(ACCUM_STEPS),
+                "precisions": list(PRECISIONS),
+            },
+            "compression_advisory": compression_advisory(timing_path),
+        },
+        "plans": plans,
+        "summary": {"configs": len(plans), "beat_pure_dp": beat},
+    }
+
+
+def _schema_helpers():
+    try:
+        from benchmarks import common
+    except ImportError:
+        import pathlib
+        import sys
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[3]))
+        from benchmarks import common
+    return common
+
+
+_CHOSEN_KEYS = ("dp", "tp", "zero_stage", "accum_steps", "precision",
+                "strategy", "step_s", "compute_s", "memory_s",
+                "collective_s", "swap_penalty_s", "state_bytes",
+                "segments")
+
+# modeled margin the memory-bound large configs must clear over pure DP
+LARGE_MARGIN = 1.2
+
+
+def validate(report: dict, path: str = "PLAN.json",
+             lint_report: Optional[dict] = None) -> dict:
+    """Schema + acceptance for the committed planner artifact.
+
+    Acceptance: every plan launchable and re-derivable (CI recomputes the
+    chosen candidate's modeled cost and compares exactly), every chosen
+    plan beats-or-ties pure DP, the named LARGE_CONFIGS beat it by
+    ``LARGE_MARGIN``, and — when the lint report is supplied — every
+    chosen (config, strategy, precision, accum) cell passed the
+    analysis-tier rules."""
+    C = _schema_helpers()
+    C.require_sections(report, ("meta", "plans", "summary"), path)
+    meta = report["meta"]
+    C.check(meta.get("schema") == 1,
+            f"{path}: unsupported schema {meta.get('schema')}")
+    C.require_keys(meta, ("devices", "hbm_gb", "peak_flops_bf16",
+                          "ici_gbps", "smoke", "search_space",
+                          "compression_advisory"), f"{path}: meta")
+    C.check(meta["devices"] == DEVICES,
+            f"{path}: devices {meta['devices']} != {DEVICES}")
+    plans = report["plans"]
+    C.check(plans, f"{path}: empty plan list")
+    names = [p.get("config") for p in plans]
+    C.check(len(set(names)) == len(names), f"{path}: duplicate configs")
+    if not meta.get("smoke"):
+        missing = set(plan_configs()) - set(names)
+        C.check(not missing, f"{path}: configs missing plans: "
+                             f"{sorted(missing)}")
+    lint_cells = {}
+    if lint_report is not None:
+        for cell in lint_report.get("cells", []):
+            key = (cell["config"], cell["strategy"], cell["precision"],
+                   cell["accum"])
+            lint_cells[key] = all(r["status"] != "fail"
+                                  for r in cell["rules"])
+    from repro.launch.specs import SHAPES
+
+    for p in plans:
+        label = f"{path}: plan {p.get('config')}"
+        C.require_keys(p, ("config", "shape", "n_params", "chosen",
+                           "baseline_dp", "speedup_vs_dp",
+                           "candidates_searched"), label)
+        ch = p["chosen"]
+        C.require_keys(ch, _CHOSEN_KEYS, f"{label} chosen")
+        C.require_positive(ch, ("step_s", "compute_s"), f"{label} chosen")
+        C.check(ch["dp"] * ch["tp"] == meta["devices"],
+                f"{label}: dp×tp = {ch['dp']}×{ch['tp']} != devices")
+        C.check(ch["zero_stage"] in ZERO_STAGES,
+                f"{label}: bad zero_stage {ch['zero_stage']}")
+        C.check(ch["precision"] in PRECISIONS,
+                f"{label}: bad precision {ch['precision']!r}")
+        C.check(ZERO_STRATEGY[ch["zero_stage"]] == ch["strategy"],
+                f"{label}: strategy {ch['strategy']!r} does not match "
+                f"zero_stage {ch['zero_stage']}")
+        # feasibility: fits HBM, or the swap penalty is a small fraction
+        # of the modeled step (nothing cheaper exists if chosen)
+        C.check(ch.get("hbm_ok") or
+                ch["swap_penalty_s"] <= 0.25 * ch["step_s"],
+                f"{label}: chosen plan thrashes HBM "
+                f"({ch['state_gb']:.1f} GB state, penalty "
+                f"{ch['swap_penalty_s']:.2f}s)")
+        C.check(p["speedup_vs_dp"] >= 1.0 - 1e-9,
+                f"{label}: chosen plan slower than pure DP "
+                f"({p['speedup_vs_dp']:.3f}x)")
+        # re-derive: the committed numbers must be exactly what the
+        # analytic model produces for the chosen point
+        cfg = get_config(p["config"])
+        re = candidate_cost(cfg, SHAPES[p["shape"]], ch["tp"],
+                            ch["zero_stage"], ch["accum_steps"],
+                            ch["precision"])
+        C.check(re is not None, f"{label}: chosen candidate not launchable")
+        C.check(abs(re["step_s"] - ch["step_s"])
+                <= 1e-9 * max(1.0, abs(re["step_s"])),
+                f"{label}: committed step_s {ch['step_s']} != re-derived "
+                f"{re['step_s']}")
+        if lint_cells:
+            key = (p["config"], ch["strategy"], ch["precision"],
+                   ch["accum_steps"])
+            C.check(lint_cells.get(key, False),
+                    f"{label}: chosen cell {key} has no passing "
+                    f"analysis-tier lint result")
+    by_name = {p["config"]: p for p in plans}
+    if not meta.get("smoke"):
+        for name in LARGE_CONFIGS:
+            p = by_name.get(name)
+            C.check(p is not None, f"{path}: no plan for large config "
+                                   f"{name}")
+            C.check(p["speedup_vs_dp"] >= LARGE_MARGIN,
+                    f"{path}: {name} margin {p['speedup_vs_dp']:.2f}x "
+                    f"< required {LARGE_MARGIN}x over pure DP")
+    summ = report["summary"]
+    C.check(summ.get("configs") == len(plans),
+            f"{path}: summary config count mismatch")
+    return report
+
+
+def validate_file(path: str, lint_path: Optional[str] = None) -> dict:
+    C = _schema_helpers()
+    report = C.load_report(path, "python -m repro.launch.plan --all")
+    lint = None
+    if lint_path is None:
+        lint_path = os.path.join(os.path.dirname(os.path.abspath(path)),
+                                 "LINT.json")
+    if os.path.exists(lint_path):
+        with open(lint_path) as f:
+            lint = json.load(f)
+    return validate(report, path, lint_report=lint)

@@ -197,7 +197,8 @@ def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh,
 # ---------------------------------------------------------------------------
 def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
                      pod_compressor=None, partition_grads: bool = False,
-                     precision=None, accum_steps: int = 1):
+                     precision=None, accum_steps: int = 1,
+                     zero_stage: int = 0):
     """``precision``: None keeps the pre-precision build exactly; a policy
     name (``--precision {f32,bf16,bf16-pure}``) or PrecisionPolicy applies
     its param/compute dtypes to the config and threads wire dtype, master
@@ -206,43 +207,70 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
     ``accum_steps``: microbatched boundary step (DESIGN.md §8) — the batch
     specs gain a leading scan axis and the lowered step fires one exchange
     per boundary.  The state stays donated (``donate_argnums=(0,)``), so
-    params/opt-state/accumulator buffers alias across steps."""
+    params/opt-state/accumulator buffers alias across steps.
+
+    ``zero_stage`` (``--zero-stage``): 1 ≡ ``partition_grads`` (sharded
+    optimizer state over "pod"), 2 additionally reduce-scatters each
+    microbatch's gradients into a 1/W shard accumulator, 3 shards the
+    parameters too — ``state["params"]`` becomes the flat f32 shard
+    buckets of ``zero3_param_template`` (sharded ``P("pod")``, doubling as
+    the precision master) and the full param tree is only a step
+    temporary."""
     policy = None
     if precision is not None:
         policy = get_policy(precision)
         cfg = apply_policy(cfg, policy)
         if policy.is_noop:
             policy = None
+    if partition_grads:
+        zero_stage = max(zero_stage, 1)
+    partition_grads = zero_stage >= 1
     opt = adam(3e-4)
-    step_fn = make_sharded_train_step(cfg, opt, remat=True,
-                                      pod_compressor=pod_compressor,
-                                      partition_grads=partition_grads,
-                                      policy=policy,
-                                      accum_steps=accum_steps)
 
     params_sds = model_sds(cfg)
+    step_fn = make_sharded_train_step(
+        cfg, opt, remat=True,
+        pod_compressor=pod_compressor,
+        partition_grads=partition_grads,
+        policy=policy,
+        accum_steps=accum_steps,
+        zero_stage=zero_stage,
+        param_template=params_sds if zero_stage >= 3 else None)
+
     comm_sds, comm_sh = {}, {}
     if pod_compressor is not None:  # error-feedback residual, param-shaped
         comm_sds = {"residual": jax.tree.map(
             lambda s_: jax.ShapeDtypeStruct(s_.shape, jnp.float32), params_sds)}
         comm_sh = {"residual": param_shardings_sds(
             comm_sds["residual"], mesh, cfg.sharding_mode)}
-    if partition_grads:  # ZeRO-1: flat shard-bucket state over "pod"
+    if partition_grads:  # ZeRO: flat shard-bucket state over "pod"
         from repro.launch.sharding import zero1_state_shardings
         from repro.train.loop import zero1_opt_template
         npods = dict(mesh.shape).get("pod", 1)
-        opt_sds = zero1_opt_template(params_sds, opt, npods, policy=policy)
+        # stage 3: the f32 param shards ARE the master — the opt template
+        # must not wrap a second master copy
+        opt_sds = zero1_opt_template(params_sds, opt, npods,
+                                     policy=None if zero_stage >= 3
+                                     else policy)
         opt_sh = zero1_state_shardings(opt_sds, mesh)
     else:
         opt_sds = state_template(opt, params_sds)
         opt_sh = param_shardings_sds(opt_sds, mesh, cfg.sharding_mode)
+    if zero_stage >= 3:
+        from repro.launch.sharding import zero1_state_shardings
+        from repro.train.loop import zero3_param_template
+        npods = dict(mesh.shape).get("pod", 1)
+        train_params_sds = zero3_param_template(params_sds, npods)
+        psh = zero1_state_shardings(train_params_sds, mesh)
+    else:
+        train_params_sds = params_sds
+        psh = param_shardings_sds(params_sds, mesh, cfg.sharding_mode)
     state_sds = {
-        "params": params_sds,
+        "params": train_params_sds,
         "opt_state": opt_sds,
         "comm_state": comm_sds,
         "step": jax.ShapeDtypeStruct((), jnp.int32),
     }
-    psh = param_shardings_sds(params_sds, mesh, cfg.sharding_mode)
     state_sh = {
         "params": psh,
         "opt_state": opt_sh,
@@ -271,14 +299,15 @@ def build_train_step(cfg: ModelConfig, shape: ShapeSpec, mesh,
 
 def build_step(cfg: ModelConfig, shape_name: str, mesh, pod_compressor=None,
                partition_grads: bool = False, precision=None,
-               accum_steps: int = 1):
+               accum_steps: int = 1, zero_stage: int = 0):
     shape = SHAPES[shape_name]
     if shape.kind == "train":
         return build_train_step(cfg, shape, mesh,
                                 pod_compressor=pod_compressor,
                                 partition_grads=partition_grads,
                                 precision=precision,
-                                accum_steps=accum_steps)
+                                accum_steps=accum_steps,
+                                zero_stage=zero_stage)
     if shape.kind == "prefill":
         return build_prefill_step(cfg, shape, mesh)
     return build_serve_step(cfg, shape, mesh)

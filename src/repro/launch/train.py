@@ -39,6 +39,13 @@ def build_argparser():
     ap.add_argument("--reduced", action="store_true",
                     help="use the smoke-scale variant of the arch")
     ap.add_argument("--strategy", default="sync", choices=sorted(REGISTRY))
+    ap.add_argument("--zero-stage", type=int, default=0,
+                    choices=[0, 1, 2, 3],
+                    help="ZeRO partitioning stage (shorthand for "
+                         "--strategy sync_zero{N}): 1 shards optimizer "
+                         "state, 2 also reduce-scatters per-microbatch "
+                         "gradients into a 1/W accumulator, 3 also shards "
+                         "the parameters (gathered per step)")
     ap.add_argument("--compressor", default="none",
                     choices=["none", "onebit", "int8", "topk"])
     ap.add_argument("--precision", default="f32", choices=sorted(POLICIES),
@@ -101,6 +108,12 @@ def main(argv=None):
         raise SystemExit(2)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.zero_stage:
+        if args.strategy not in ("sync", f"sync_zero{args.zero_stage}"):
+            print(f"--zero-stage {args.zero_stage} conflicts with "
+                  f"--strategy {args.strategy}", file=sys.stderr)
+            raise SystemExit(2)
+        args.strategy = f"sync_zero{args.zero_stage}"
     if cfg.is_encoder_decoder or cfg.modality is not None:
         raise SystemExit("trainer CLI supports decoder-only text archs; "
                          "see examples/ for enc-dec and multimodal")
@@ -165,20 +178,27 @@ def main(argv=None):
                   f" wireB/sample {rec['wire_bytes_per_sample']:.1f}")
 
     if args.ckpt_dir:
-        tree = {"params": comm.replica(state["params"], 0),
+        # ZeRO-3 keeps only shard buckets in the state: gather the full
+        # tree so the checkpoint stays worker-count-portable
+        full_params = strategy.gather_params(state["params"], comm) \
+            if getattr(strategy, "owns_params", False) else state["params"]
+        tree = {"params": comm.replica(full_params, 0),
                 "step": state["step"]}
         kw = {}
         if policy is not None:
             kw["precision"] = policy.spec()
             if "master" in state:  # dense f32 master rides the checkpoint
                 tree["master"] = comm.replica(state["master"], 0)
-        if args.strategy == "sync_zero1":
-            # shard-bucket opt state (incl. any f32 master shards) + the
-            # partition spec, so a restore can re-shard to another W
+        if args.strategy.startswith("sync_zero"):
+            # shard-bucket opt state (incl. any f32 master / ZeRO-3 param
+            # shards) + the partition spec, so a restore can re-shard to
+            # another W
             from repro.core.fabric import Fabric
             tree["opt_state"] = state["opt_state"]
+            if getattr(strategy, "owns_params", False):
+                tree["param_shards"] = state["params"]
             kw["partition"] = Fabric(comm).partitioned_layout(
-                state["params"]).spec()
+                full_params).spec()
         save_checkpoint(args.ckpt_dir, args.steps, tree, **kw)
         print(f"checkpoint saved to {args.ckpt_dir}")
     if args.out:

@@ -30,6 +30,46 @@ def _dtype(cfg: ModelConfig, kind: str):
     return jnp.dtype(cfg.param_dtype if kind == "param" else cfg.compute_dtype)
 
 
+# ---------------------------------------------------------------------------
+# tensor parallelism (DESIGN.md §12, models/tensor_parallel.py)
+#
+# TP blocks the WHOLE sub-layer, not individual contractions: rank i's
+# subgraph is (q/k/v head-slice → sdpa over its heads → out-projection
+# partial) for attention and (gate/up column-slice → act → down-projection
+# partial) for the MLP, combined with ONE all-sum per sub-layer (Megatron's
+# g operator) plus the f operator's cotangent psum at the input.  The
+# unsharded reference with cfg.tp_degree = T > 1 computes the SAME T
+# per-block subgraphs and reduces them with jnp.sum(jnp.stack(...)) — the
+# identical dataflow graph per block and the identical combine, which is
+# what makes a TP run bitwise-equal to its blocked reference in f32
+# (blocking per-contraction instead would re-order the input-cotangent
+# accumulation across q/k/v and gate/up and break bitwise backward).
+# tp_degree == 1 (every config's default) keeps the historical
+# single-einsum paths untouched.
+# ---------------------------------------------------------------------------
+def _current_tp():
+    from repro.models.tensor_parallel import current_tp
+
+    return current_tp()
+
+
+def _attn_slice(p, i: int, t: int):
+    """Head-block i of t of an attention param dict — exactly what
+    ``tp_split_params`` puts on rank i."""
+    h, kv = p["wq"].shape[1], p["wk"].shape[1]
+    hb, kb = h // t, kv // t
+    out = dict(p)
+    out["wq"] = p["wq"][:, i * hb:(i + 1) * hb]
+    out["wk"] = p["wk"][:, i * kb:(i + 1) * kb]
+    out["wv"] = p["wv"][:, i * kb:(i + 1) * kb]
+    out["wo"] = p["wo"][i * hb:(i + 1) * hb]
+    if "bq" in p:
+        out["bq"] = p["bq"][i * hb:(i + 1) * hb]
+        out["bk"] = p["bk"][i * kb:(i + 1) * kb]
+        out["bv"] = p["bv"][i * kb:(i + 1) * kb]
+    return out
+
+
 def dense_init(key, shape, dtype, in_axis=0):
     fan_in = shape[in_axis]
     scale = 1.0 / max(1, fan_in) ** 0.5
@@ -222,35 +262,60 @@ def attention(p, cfg: ModelConfig, x, positions, window, theta,
     Cross-attention: ``memory`` is the encoder output; no cache, no causality.
     """
     xkv = memory if memory is not None else x
-    q, k, v = _qkv(p, cfg, x, xkv)
     b, lq = x.shape[0], x.shape[1]
 
     if memory is not None:  # cross attention: full visibility
+        q, k, v = _qkv(p, cfg, x, xkv)
         lk = memory.shape[1]
         mask = jnp.ones((1, 1, lq, lk), bool)
         out = _sdpa(cfg, q, k, v, mask)
         new_cache = cache
     elif cache is None:  # training / prefill self-attention
-        q = rope(q, positions, theta)
-        k = rope(k, positions, theta)
-        q = shard(q, BATCH, seq_ax(cfg), heads_ax(cfg), None)
-        k = shard(k, BATCH, seq_ax(cfg), heads_ax(cfg), None)
-        if (isinstance(window, int) and window > 0 and causal
-                and lq % window == 0 and lq // window >= 2):
-            # static sliding window ⇒ block-banded attention: each q block
-            # attends only to (prev, self) k blocks — compute ∝ L·window,
-            # the jnp analogue of the Pallas kernel's block skipping.
-            out = _sdpa_banded(cfg, q, k, v, window)
+        def head_block(p_, xx):
+            """One head-block's full attention subgraph: qkv slice → rope
+            → sdpa over its heads → out-projection PARTIAL."""
+            q, k, v = _qkv(p_, cfg, xx, xx)
+            q = rope(q, positions, theta)
+            k = rope(k, positions, theta)
+            q = shard(q, BATCH, seq_ax(cfg), heads_ax(cfg), None)
+            k = shard(k, BATCH, seq_ax(cfg), heads_ax(cfg), None)
+            if (isinstance(window, int) and window > 0 and causal
+                    and lq % window == 0 and lq // window >= 2):
+                # static sliding window ⇒ block-banded attention: each q
+                # block attends only to (prev, self) k blocks — compute
+                # ∝ L·window, the jnp analogue of the Pallas kernel's
+                # block skipping.
+                out = _sdpa_banded(cfg, q, k, v, window)
+            else:
+                i = positions[:, :, None]  # (B, L, 1)
+                j = positions[:, None, :]  # (B, 1, L)
+                mask = (j <= i) if causal else jnp.ones_like(j <= i)
+                w = jnp.where(window == FULL_ATTENTION,
+                              jnp.iinfo(jnp.int32).max, window)
+                mask = mask & (i - j < w)
+                out = _sdpa(cfg, q, k, v, mask[:, None])
+            return jnp.einsum("blhk,hkd->bld", out, p_["wo"]), {"k": k,
+                                                                "v": v}
+        tp = _current_tp()
+        t = cfg.tp_degree
+        if tp is not None:
+            # TP rank: params already hold this rank's head block
+            partial, kv_c = head_block(p, x)
+            proj = tp.all_sum(partial)
+        elif (t > 1 and not collect_cache
+              and p["wq"].shape[1] % t == 0 and p["wk"].shape[1] % t == 0):
+            # blocked reference: T per-block subgraphs + stacked sum
+            parts = [head_block(_attn_slice(p, i, t), x)[0]
+                     for i in range(t)]
+            proj = jnp.sum(jnp.stack(parts), axis=0)
+            kv_c = None
         else:
-            i = positions[:, :, None]  # (B, L, 1)
-            j = positions[:, None, :]  # (B, 1, L)
-            mask = (j <= i) if causal else jnp.ones_like(j <= i)
-            w = jnp.where(window == FULL_ATTENTION,
-                          jnp.iinfo(jnp.int32).max, window)
-            mask = mask & (i - j < w)
-            out = _sdpa(cfg, q, k, v, mask[:, None])
-        new_cache = {"k": k, "v": v} if collect_cache else None
+            proj, kv_c = head_block(p, x)
+        new_cache = kv_c if collect_cache else None
+        out = shard(proj, BATCH, seq_ax(cfg), None)
+        return out, new_cache
     else:  # single-token decode; cache_pos: scalar OR (B,) ragged positions
+        q, k, v = _qkv(p, cfg, x, xkv)
         pos = cache_pos
         ragged = hasattr(pos, "ndim") and pos.ndim == 1
         pos_b = pos[:, None] if ragged else jnp.full((b, lq), pos, jnp.int32)
@@ -421,9 +486,26 @@ def _act(name):
 
 
 def mlp(p, cfg: ModelConfig, x):
-    h = _act(cfg.act)(x @ p["w_gate"]) * (x @ p["w_up"])
-    h = shard(h, BATCH, seq_ax(cfg), heads_ax(cfg))
-    return h @ p["w_down"]
+    def ffn_block(wg, wu, wd, xx):
+        """One d_ff-block's full MLP subgraph: gate/up column slice → act
+        → down-projection PARTIAL."""
+        h = _act(cfg.act)(xx @ wg) * (xx @ wu)
+        h = shard(h, BATCH, seq_ax(cfg), heads_ax(cfg))
+        return h @ wd
+
+    tp = _current_tp()
+    t = cfg.tp_degree
+    if tp is not None:  # TP rank: params already hold this rank's columns
+        return tp.all_sum(ffn_block(p["w_gate"], p["w_up"], p["w_down"], x))
+    f = p["w_down"].shape[0]
+    if t == 1 or f % t:  # shared-expert widths need not divide tp_degree
+        return ffn_block(p["w_gate"], p["w_up"], p["w_down"], x)
+    blk = f // t
+    parts = [ffn_block(p["w_gate"][:, i * blk:(i + 1) * blk],
+                       p["w_up"][:, i * blk:(i + 1) * blk],
+                       p["w_down"][i * blk:(i + 1) * blk], x)
+             for i in range(t)]
+    return jnp.sum(jnp.stack(parts), axis=0)
 
 
 # ---------------------------------------------------------------------------

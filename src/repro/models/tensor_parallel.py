@@ -1,0 +1,228 @@
+"""Explicit tensor parallelism over the Fabric (DESIGN.md §12).
+
+The production mesh already carries a "model" axis and the pjit rules in
+launch/sharding.py let the SPMD partitioner derive TP collectives
+implicitly.  This module is the EXPLICIT counterpart: a Megatron-style
+column/row split of the transformer block whose activation combines are
+issued by the model code itself, routed through ``core.fabric.Fabric`` so
+they get the same bucketing, wire-dtype handling, and
+``collective_contract`` accounting as the gradient exchange — which is
+what lets the analysis tier prove an HLO collective budget for the TP
+axis (``Fabric.collective_contract(..., "tp")``).
+
+Layout (``cfg.tp_degree = T``):
+
+  column-split (output slicing — no communication, bitwise free):
+      wq/wk/wv  (D, H, Dh)  → (D, H/T, Dh)     heads
+      bq/bk/bv  (H, Dh)     → (H/T, Dh)
+      w_gate/w_up  (D, F)   → (D, F/T)         d_ff
+  row-split (contraction slicing — one all-reduce per combine):
+      wo        (H, Dh, D)  → (H/T, Dh, D)
+      w_down    (F, D)      → (F/T, D)
+  everything else (norms, embed, lm_head, router, ssm) replicated.
+
+Exactly two contractions change math: the attention out-projection (summed
+over heads) and the MLP down-projection (summed over d_ff).  Each TP rank
+computes one block of that sum and ``TPContext.all_sum`` combines them.
+The unsharded reference path (``tp_degree > 1`` with no active context,
+models/layers.py) computes the SAME blocked sum —
+``jnp.sum(jnp.stack(partial_blocks), axis=0)`` — so a TP run is
+bitwise-equivalent to its blocked reference in f32: both reduce identical
+block values with the same stacked-sum op (for T=2 a single add, order-
+independent by IEEE commutativity).
+
+Backward contract (f32, verified in tests/test_tp.py): the forward pass,
+the loss, and each isolated sub-layer's backward are BITWISE equal to the
+blocked reference — ``jnp.sum``'s transpose broadcasts the cotangent to
+every block exactly as psum's transpose (psum) delivers it to every rank,
+and no f-operator is needed: under a mapped axis JAX's psum transposes to
+psum, which already completes the split leaves' gradients.  End-to-end
+network gradients agree to ≤1 ulp rather than bitwise: where the residual
+stream's cotangent is REUSED across a layer boundary the reference
+accumulates ``ct_residual + Σ_r block_rᵀ(ct)`` in a different association
+order than the per-rank ``block_rᵀ(ct) + ct_residual/T`` the psum
+transpose sums.  Replicated-leaf gradients are per-rank partials by
+construction (each rank's copy sees only its own blocks' contribution);
+``TPContext.finalize_grads`` all-sums them — Megatron's layernorm-grad
+all-reduce — after which they match the reference to the same ≤1 ulp.
+
+The context is a Python-level trace-time switch (installed around tracing,
+like a mesh context), NOT traced state: model code asks ``current_tp()``
+once per combine while being traced under ``jax.vmap(...,
+axis_name="model")`` (the stacked simulator) or a shard_map over a
+"model" mesh axis (the HLO-proof rig in tests/analysis).
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core.comm import ShardComm
+from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
+
+# leaf name → axis to slice, per parameter-tree key (tensor_parallel
+# applies to attention + dense MLP; MoE keeps its own expert parallelism
+# over "model" and is never tp-split)
+_COLUMN_AXES = {"wq": 1, "wk": 1, "wv": 1, "bq": 0, "bk": 0, "bv": 0,
+                "w_gate": 1, "w_up": 1}
+_ROW_AXES = {"wo": 0, "w_down": 0}
+SPLIT_AXES = {**_COLUMN_AXES, **_ROW_AXES}
+
+
+@dataclass(frozen=True)
+class TPContext:
+    """Active tensor-parallel execution: ``degree`` ranks over mesh/vmap
+    axis ``axis``, combining row-parallel partials through ``fabric``."""
+
+    degree: int
+    axis: str
+    fabric: Fabric
+
+    def all_sum(self, x):
+        """Combine one row-parallel partial (Megatron's *g* operator):
+        one dense all-reduce of the activation — counted by
+        ``collective_contract(..., "tp", events=combines)``."""
+        return self.fabric.all_sum(x)
+
+    def finalize_grads(self, grads, stacked_marker: str = "stack"):
+        """All-sum the REPLICATED leaves' gradients over the TP axis —
+        Megatron's layernorm-grad all-reduce.  Under mapped-axis autodiff
+        (vmap axis_name / shard_map) the cotangent arriving at each
+        rank's copy of a replicated parameter carries only that rank's
+        head/column block's contribution (the psum transpose already
+        completes the SPLIT leaves' grads); summing across ranks
+        completes the replicated ones: sum == the unsharded reference
+        gradient.  One bucketed Fabric all-sum for the whole replicated
+        subtree.  Split leaves pass through untouched."""
+        rep, keep = _partition_replicated(grads, stacked_marker)
+        if rep:
+            rep = self.fabric.all_sum(rep)
+        return _merge_trees(rep, keep)
+
+
+_STACK: list = []
+
+
+def current_tp():
+    """The innermost active ``tp_context``, or None (unsharded paths)."""
+    return _STACK[-1] if _STACK else None
+
+
+@contextmanager
+def tp_context(degree: int, axis: str = "model",
+               bucket_bytes: int = DEFAULT_BUCKET_BYTES, wire_dtype=None):
+    """Install a TP execution context for code traced within.  The body
+    must run under a mapped axis named ``axis`` of size ``degree`` (vmap
+    axis_name or shard_map mesh axis)."""
+    if degree < 2:
+        raise ValueError(f"tp_context needs degree >= 2, got {degree}")
+    fab = Fabric(ShardComm(axis, degree), bucket_bytes,
+                 wire_dtype=wire_dtype)
+    ctx = TPContext(degree, axis, fab)
+    _STACK.append(ctx)
+    try:
+        yield ctx
+    finally:
+        _STACK.pop()
+
+
+def tp_split_params(params, degree: int, stacked_marker: str = "stack"):
+    """Full param tree → per-rank shards STACKED on a new leading axis of
+    size ``degree`` (the layout ``jax.vmap(fn, axis_name="model")`` and
+    the LocalComm-style rigs consume; index ``[r]`` for rank r's tree).
+
+    Splits follow ``SPLIT_AXES`` by leaf name; leaves under an ``moe``
+    subtree and everything unnamed are replicated.  Leaves under the
+    ``stacked_marker`` subtree (the lax.scan layer stacking) carry a
+    leading repeat axis, shifting the split axis by one."""
+
+    # walk with names: dict-only trees (the repo's param convention)
+    def walk(tree, in_stack=False, in_moe=False):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v, in_stack or k == stacked_marker,
+                              in_moe or k == "moe")
+            elif in_moe or SPLIT_AXES.get(k) is None:
+                out[k] = jnp.stack([v] * degree)
+            else:
+                ax = SPLIT_AXES[k] + (1 if in_stack else 0)
+                n = v.shape[ax]
+                if n % degree:
+                    raise ValueError(
+                        f"tp_split_params: {k} axis {ax} ({n}) not "
+                        f"divisible by tp_degree={degree}")
+                out[k] = jnp.stack(jnp.split(v, degree, axis=ax))
+        return out
+
+    if not isinstance(params, dict):
+        raise TypeError("tp_split_params expects the dict param tree")
+    return walk(params)
+
+
+def tp_unsplit_params(shards, stacked_marker: str = "stack"):
+    """Inverse of ``tp_split_params``: per-rank stacked shards → the full
+    tree (replicated leaves take rank 0's copy)."""
+
+    def walk(tree, in_stack=False, in_moe=False):
+        out = {}
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = walk(v, in_stack or k == stacked_marker,
+                              in_moe or k == "moe")
+            elif in_moe or SPLIT_AXES.get(k) is None:
+                out[k] = v[0]
+            else:
+                ax = SPLIT_AXES[k] + (1 if in_stack else 0)
+                out[k] = jnp.concatenate([v[i] for i in range(v.shape[0])],
+                                         axis=ax)
+        return out
+
+    return walk(shards)
+
+
+def _partition_replicated(tree, stacked_marker: str, in_moe: bool = False):
+    """Split a dict tree into (replicated-leaf subtree, split-leaf
+    subtree) by the ``SPLIT_AXES`` naming convention.  Either side omits
+    empty branches so the replicated subtree can be bucketed on its own."""
+    rep, keep = {}, {}
+    for k, v in tree.items():
+        if isinstance(v, dict):
+            r, s = _partition_replicated(v, stacked_marker,
+                                         in_moe or k == "moe")
+            if r:
+                rep[k] = r
+            if s:
+                keep[k] = s
+        elif in_moe or k not in SPLIT_AXES:
+            rep[k] = v
+        else:
+            keep[k] = v
+    return rep, keep
+
+
+def _merge_trees(a, b):
+    """Recombine the two disjoint subtrees from ``_partition_replicated``."""
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = _merge_trees(out[k], v) if isinstance(v, dict) and \
+            isinstance(out.get(k), dict) else v
+    return out
+
+
+def tp_collective_contract(cfg, activation_sds,
+                           bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                           wire_dtype=None) -> dict:
+    """Expected HLO collective budget for ONE training step of a
+    ``tp_degree``-split model: two row-parallel combines per (attn + mlp)
+    layer — out-projection and down-projection — each a Fabric all-sum of
+    the layer activation, counted forward AND backward (the column-split
+    input gradients all-reduce on the transpose)."""
+    n_layers = cfg.num_layers
+    combines = 2 * n_layers * 2  # (wo + w_down) × (fwd + bwd)
+    fab = Fabric(ShardComm("model", cfg.tp_degree), bucket_bytes,
+                 wire_dtype=wire_dtype)
+    return fab.collective_contract(activation_sds, "tp", events=combines)

@@ -162,11 +162,17 @@ def opt_state_bytes(n_params: int, state_floats: int, w: int = 1,
     return total / w if partitioned else total
 
 
-def param_bytes(n_params: int, param_dtype: str = "float32") -> float:
-    """Replicated working-parameter bytes per worker at the policy's
-    ``param_dtype`` — bf16 working params halve this (while the f32
-    master rides the 1/W opt-state shard)."""
-    return dtype_wire_bytes(n_params, param_dtype)
+def param_bytes(n_params: int, param_dtype: str = "float32", w: int = 1,
+                zero_stage: int = 0) -> float:
+    """Working-parameter bytes per worker at the policy's ``param_dtype``
+    — bf16 working params halve this (while the f32 master rides the 1/W
+    opt-state shard).  ZeRO stages 0-2 replicate the full parameters on
+    every worker; stage 3 (``sync_zero3``) shards them too, so each
+    worker holds 1/W of the flat f32 bucket image and all-gathers blocks
+    transiently around the forward/backward (one bucket resident at a
+    time — bounded by the bucket size, not counted here)."""
+    total = dtype_wire_bytes(n_params, param_dtype)
+    return total / w if zero_stage >= 3 else total
 
 
 def wire_bytes_per_sample(flat_bytes: float, w: int,
@@ -183,18 +189,25 @@ def wire_bytes_per_sample(flat_bytes: float, w: int,
         / float(samples_per_microbatch * accum_steps)
 
 
-def accum_state_bytes(n_params: int, accum_steps: int = 1) -> float:
+def accum_state_bytes(n_params: int, accum_steps: int = 1, w: int = 1,
+                      zero_stage: int = 0) -> float:
     """Resident bytes of the microbatch gradient accumulator: the flat f32
     bucket image of the gradients (4·N per worker) lives across the scan
     while ``accum_steps > 1``; the unaccumulated step keeps no
-    accumulator.  (Bucket padding on the partitioned path adds < W
-    elements per bucket — ignored here.)"""
-    return 4.0 * float(n_params) if accum_steps > 1 else 0.0
+    accumulator.  ZeRO stage >= 2 (``sync_zero2``/``sync_zero3``)
+    reduce-scatters every microbatch's gradients straight into a 1/W
+    shard accumulator, shrinking this term by W.  (Bucket padding on the
+    partitioned path adds < W elements per bucket — ignored here.)"""
+    if accum_steps <= 1:
+        return 0.0
+    total = 4.0 * float(n_params)
+    return total / w if zero_stage >= 2 else total
 
 
 def step_state_peak_bytes(param_nbytes: float, opt_nbytes: float,
                           n_params: int, accum_steps: int = 1,
-                          donated: bool = True) -> float:
+                          donated: bool = True, w: int = 1,
+                          zero_stage: int = 0) -> float:
     """Peak per-worker TRAIN-STATE bytes across one step.
 
     With buffer donation (``donate_argnums=(0,)`` on every step jit —
@@ -202,10 +215,39 @@ def step_state_peak_bytes(param_nbytes: float, opt_nbytes: float,
     produced one (the dry-run's ``memory_analysis().alias_size_in_bytes``)
     so old and new params/opt-state are never both resident; without
     donation every state leaf is double-buffered.  Accumulation adds the
-    f32 accumulator buckets on top."""
-    state = float(param_nbytes) + float(opt_nbytes)
+    f32 accumulator buckets on top.
+
+    ``param_nbytes`` / ``opt_nbytes`` are the DENSE per-worker figures
+    (``param_bytes(..., w=1)`` / ``opt_state_bytes(..., w=1)``); the ZeRO
+    stage applies the sharding factors here: stage >= 1 partitions the
+    optimizer state by W, stage >= 2 additionally shards the gradient
+    accumulator, stage >= 3 shards the parameters themselves — the W×
+    parameter-state shrink of ZeRO-3 (Rajbhandari et al.), paid back with
+    one per-bucket all-gather around each forward/backward."""
+    p = float(param_nbytes)
+    o = float(opt_nbytes)
+    if zero_stage >= 3:
+        p /= w
+    if zero_stage >= 1:
+        o /= w
+    state = p + o
     return (state if donated else 2.0 * state) \
-        + accum_state_bytes(n_params, accum_steps)
+        + accum_state_bytes(n_params, accum_steps, w, zero_stage)
+
+
+def tp_wire_bytes(activation_nbytes: float, tp_degree: int,
+                  n_layers: int) -> float:
+    """Ring bytes per device per training step for the explicit TP
+    activation combines: two row-parallel all-reduces per layer (attention
+    out-projection + MLP down-projection), forward and backward — the
+    ``collective_contract(..., "tp")`` budget priced at the all-reduce
+    ring factor 2·(T−1)/T.  ``activation_nbytes`` is one microbatch's
+    (B, L, D) activation at the compute dtype."""
+    if tp_degree <= 1:
+        return 0.0
+    combines = 4.0 * n_layers  # (wo + w_down) x (fwd + bwd)
+    return combines * 2.0 * (tp_degree - 1) / tp_degree \
+        * float(activation_nbytes)
 
 
 def collective_count(hlo_text: str, loop_trip_counts=None) -> int:

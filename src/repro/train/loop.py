@@ -36,6 +36,12 @@ from repro.train.losses import lm_loss
 
 def init_train_state(params, optimizer: Optimizer, strategy: Strategy,
                      comm: Comm, policy: Optional[PrecisionPolicy] = None):
+    # ZeRO-3: the strategy owns the PARAMETER layout too — the dense init
+    # params are sharded into 1/W flat f32 buckets up front (recording the
+    # PartitionedLayout inside the strategy) and everything downstream
+    # (optimizer state, comm state) is built over the shards
+    if getattr(strategy, "owns_params", False):
+        params = strategy.init_params(params, comm)
     # strategies that own the optimizer-state layout (ZeRO-1 shard buckets)
     # build it themselves; everyone else gets the dense param-shaped state
     init_opt = getattr(strategy, "init_opt", None)
@@ -133,26 +139,80 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
             batches)
         return acc, lay, loss_sum
 
+    owns_params = getattr(strategy, "owns_params", False)
+    part_accum = accum_steps > 1 and getattr(strategy, "partitioned_accum",
+                                             False)
+
+    def accum_grads_part(full, batches, vgrad_fn):
+        """ZeRO-2/3 microbatch accumulation (DESIGN.md §12): every
+        microbatch's gradients are reduce-scatter-meaned and ONLY the
+        local 1/W shard accumulates (``Fabric.accumulate_partitioned``) —
+        the full gradient tree is never resident across microbatches.
+        The RS is a cross-worker collective, so it runs on the outer comm
+        (not the HierComm inner tier).  Returns (summed shard buckets,
+        summed per-replica-mean loss, RS wire bytes, RS events); callers
+        divide the shards ONCE at the boundary."""
+        fab = Fabric(comm, bucket_bytes)
+        play = fab.partitioned_layout(full)
+
+        def micro(carry, mb):
+            acc, loss_sum, wire, ev = carry
+            loss, grads = vgrad_fn(full, mb)
+            acc, m = fab.accumulate_partitioned(acc, grads, play)
+            return (acc, loss_sum + jnp.mean(loss), wire + m["wire_bytes"],
+                    ev + m["comm_events"]), None
+
+        (acc, loss_sum, wire, ev), _ = lax.scan(
+            micro, (fab.init_accum_partitioned(play),
+                    jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32),
+                    jnp.zeros((), jnp.float32)), batches)
+        return acc, loss_sum, wire, ev
+
     if policy is None or policy.is_noop:
         grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
 
         def step(state, batches):
+            src = state["params"]
+            # ZeRO-3: params live as 1/W shard buckets — gather the full
+            # tree (per-bucket all-gather) for forward/backward only; it
+            # is a temporary of the step, never part of the train state
+            fwd = strategy.gather_params(src, comm) if owns_params else src
+            boundary_wire = None
             if accum_steps == 1:
-                loss, grads = grad_fn(state["params"], batches)
+                loss, grads = grad_fn(fwd, batches)
                 mean_loss = jnp.mean(loss)
+                params, opt_state, comm_state, metrics = strategy.update(
+                    src, grads, state["opt_state"],
+                    state["comm_state"], state["step"], optimizer, comm)
+            elif part_accum:
+                acc, loss_sum, wire, ev = accum_grads_part(fwd, batches,
+                                                           grad_fn)
+                g_shards = [a / accum_steps for a in acc]
+                mean_loss = loss_sum / accum_steps
+                params, opt_state, comm_state, metrics = \
+                    strategy.update_partitioned(
+                        src, g_shards, state["opt_state"],
+                        state["comm_state"], state["step"], optimizer, comm)
+                boundary_wire = (wire, ev)
             else:
-                acc, lay, loss_sum = accum_grads(state["params"], batches,
-                                                 grad_fn)
+                acc, lay, loss_sum = accum_grads(fwd, batches, grad_fn)
                 grads = lay.debucketize([a / accum_steps for a in acc])
                 mean_loss = loss_sum / accum_steps
-            params, opt_state, comm_state, metrics = strategy.update(
-                state["params"], grads, state["opt_state"],
-                state["comm_state"], state["step"], optimizer, comm)
+                params, opt_state, comm_state, metrics = strategy.update(
+                    src, grads, state["opt_state"],
+                    state["comm_state"], state["step"], optimizer, comm)
             new_state = {"params": params, "opt_state": opt_state,
                          "comm_state": comm_state, "step": state["step"] + 1}
             metrics = dict(metrics)
+            if boundary_wire is not None:  # charge the per-microbatch RS
+                metrics["wire_bytes"] = metrics["wire_bytes"] \
+                    + boundary_wire[0]
+                metrics["comm_events"] = metrics["comm_events"] \
+                    + boundary_wire[1]
             metrics["loss"] = mean_loss
-            metrics["replica_divergence"] = _stack_divergence(params)
+            metrics["replica_divergence"] = _stack_divergence(
+                strategy.gather_params(params, comm) if owns_params
+                else params)
             return new_state, metrics
 
         return _jit(step)
@@ -161,6 +221,7 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
         sstate = state.get("loss_scale")
         scale = sstate["scale"] if sstate is not None else 1.0
         src = state.get("master", state["params"])
+        fwd = strategy.gather_params(src, comm) if owns_params else src
 
         def scaled_loss(p_src, batch):
             # cast-params: forward consumes the param-dtype image of the
@@ -168,12 +229,20 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
             return loss_fn(policy.cast_to_param(p_src), batch) * scale
 
         vgrad = jax.vmap(jax.value_and_grad(scaled_loss), in_axes=(0, 0))
+        boundary_wire = None
         if accum_steps == 1:
-            loss, grads = vgrad(src, batches)
+            loss, grads = vgrad(fwd, batches)
             grads = PR.unscale_grads(grads, scale)
             mean_loss = jnp.mean(loss)
+        elif part_accum:
+            acc, loss_sum, wire, ev = accum_grads_part(fwd, batches, vgrad)
+            # shard-space boundary: one division for microbatch mean AND
+            # unscale, then straight into the partitioned update
+            grads = [a / (accum_steps * scale) for a in acc]
+            mean_loss = loss_sum / accum_steps
+            boundary_wire = (wire, ev)
         else:
-            acc, lay, loss_sum = accum_grads(src, batches, vgrad)
+            acc, lay, loss_sum = accum_grads(fwd, batches, vgrad)
             # one division at the boundary: microbatch mean AND unscale
             # (the accumulator keeps f32 — cast=False — so the boundary
             # gradients are at least as wide as the legacy per-step path)
@@ -182,9 +251,19 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
             mean_loss = loss_sum / accum_steps
         finite = PR.tree_finite(grads) if sstate is not None \
             else jnp.asarray(True)
-        new_src, opt_state, comm_state, metrics = strategy.update(
-            src, grads, state["opt_state"], state["comm_state"],
-            state["step"], optimizer, comm)
+        if boundary_wire is not None:
+            new_src, opt_state, comm_state, metrics = \
+                strategy.update_partitioned(
+                    src, grads, state["opt_state"], state["comm_state"],
+                    state["step"], optimizer, comm)
+            metrics = dict(metrics)
+            metrics["wire_bytes"] = metrics["wire_bytes"] + boundary_wire[0]
+            metrics["comm_events"] = metrics["comm_events"] \
+                + boundary_wire[1]
+        else:
+            new_src, opt_state, comm_state, metrics = strategy.update(
+                src, grads, state["opt_state"], state["comm_state"],
+                state["step"], optimizer, comm)
         if sstate is not None:  # skip-or-apply
             new_src = PR.select_tree(finite, new_src, src)
             opt_state = PR.select_tree(finite, opt_state,
@@ -201,7 +280,8 @@ def make_replica_train_step(loss_fn, optimizer: Optimizer, strategy: Strategy,
         metrics = dict(metrics)
         metrics["loss"] = mean_loss / scale
         metrics["replica_divergence"] = _stack_divergence(
-            new_state["params"])
+            strategy.gather_params(new_state["params"], comm) if owns_params
+            else new_state["params"])
         if sstate is not None:
             new_state["loss_scale"] = PR.next_scale_state(policy, sstate,
                                                           finite)
@@ -298,6 +378,25 @@ def zero1_master_buckets(params, n_parts: int,
             for b, p in zip(buckets, play.padded_sizes)]
 
 
+def zero3_param_template(params, n_parts: int,
+                         bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """GLOBAL parameter state for the ZeRO-3 production path: one padded
+    flat f32 bucket per param bucket, to be sharded ``P("pod")`` over the
+    data-parallel axis — per-device footprint 1/W of the f32 model, and
+    the ONLY param-shaped thing in the train state (the full tree exists
+    only as a step temporary after the per-bucket all-gather).  The f32
+    buckets double as the precision master under a master-keeping policy.
+    Accepts arrays or ShapeDtypeStructs; returns the same flavour (arrays
+    are filled FROM the params — zeros would reset the model)."""
+    play = PartitionedLayout.build(
+        BucketLayout.build(params, bucket_bytes, lead_axes=0), n_parts)
+    if all(isinstance(x, jax.ShapeDtypeStruct)
+           for x in jax.tree.leaves(params)):
+        return [jax.ShapeDtypeStruct((p,), jnp.float32)
+                for p in play.padded_sizes]
+    return zero1_master_buckets(params, n_parts, bucket_bytes)
+
+
 def make_sharded_train_step(cfg, optimizer: Optimizer,
                             strategy: Optional[Strategy] = None,
                             comm: Optional[Comm] = None,
@@ -306,7 +405,9 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                             partition_grads: bool = False,
                             bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                             policy: Optional[PrecisionPolicy] = None,
-                            accum_steps: int = 1):
+                            accum_steps: int = 1,
+                            zero_stage: int = 0,
+                            param_template=None):
     """Global-model train step.  With ``strategy=None`` this is pure
     synchronous data parallelism (gradients all-reduced by XLA across the
     batch sharding) — the paper's spectrum point 1 and the dry-run target.
@@ -331,6 +432,15 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
     bytes as the all-reduce, O(W) less optimizer-state memory per device.
     Mutually exclusive with ``pod_compressor`` and ``strategy``.
 
+    ``zero_stage`` generalizes it (``partition_grads=True`` ≡ stage 1):
+    stage 2 reduce-scatters every MICROBATCH's gradients into a 1/W
+    shard-bucket accumulator (the full gradient never materializes across
+    microbatches); stage 3 additionally shards the PARAMETERS —
+    ``state["params"]`` must be the flat f32 shard buckets from
+    ``zero3_param_template`` (sharded ``P("pod")``), ``param_template``
+    must carry the full model's arrays/ShapeDtypeStructs, and each step
+    all-gathers the wire-dtype param image as a boundary temporary.
+
     ``accum_steps > 1`` (DESIGN.md §8): the batch carries a leading
     ``accum_steps`` axis and the step becomes a microbatched BOUNDARY
     step.  On the restructured paths (plain sync, ZeRO-1, pod compressor)
@@ -345,10 +455,18 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
     accumulation (strategy semantics preserved; no HLO fusion claim)."""
 
     loss_fn = make_loss_fn(cfg, remat=remat)
-    if partition_grads and (pod_compressor is not None
-                            or strategy is not None):
+    if partition_grads:  # legacy spelling of the first ZeRO stage
+        zero_stage = max(zero_stage, 1)
+    if zero_stage not in (0, 1, 2, 3):
+        raise ValueError(f"zero_stage must be 0..3, got {zero_stage}")
+    if zero_stage and (pod_compressor is not None or strategy is not None):
         raise ValueError("partition_grads composes with the plain sync "
                          "path only (no pod_compressor / strategy)")
+    if zero_stage >= 3 and param_template is None:
+        raise ValueError("zero_stage=3 needs param_template (the FULL "
+                         "model's arrays or ShapeDtypeStructs) to rebuild "
+                         "the shard-bucket layout inside the step")
+    partition_grads = zero_stage >= 1
     if accum_steps < 1:
         raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
     if policy is not None and policy.is_noop:
@@ -494,7 +612,13 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
         the wire-dtype image of the updated master.  With ``accum_steps >
         1`` the scan accumulates straight into the PADDED shard-bucket
         layout, so the boundary reduce-scatter consumes the accumulator
-        with no re-pad — still one RS + one AG per bucket per boundary."""
+        with no re-pad — still one RS + one AG per bucket per boundary.
+
+        ``zero_stage=2`` changes ONLY the accumulation: each microbatch's
+        gradients are reduce-scattered as they arrive and the accumulator
+        holds 1/W shard buckets (the full gradient is never resident),
+        trading accum_steps× the RS traffic for a W× smaller accumulator
+        — the wire-vs-memory axis the launch planner searches."""
         from jax.sharding import PartitionSpec as P
 
         mesh = compat.get_abstract_mesh()
@@ -509,6 +633,19 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
                 if scaling:
                     grads = PR.unscale_grads(grads, scale)
                 g_shards, _ = fab.exchange_partitioned(grads, play)
+            elif zero_stage >= 2:
+                def micro(carry, mb):
+                    acc, loss_sum = carry
+                    loss, grads = value_and_grad(params, mb, scale)
+                    acc, _ = fab.accumulate_partitioned(acc, grads, play)
+                    return (acc, loss_sum + loss), None
+
+                (acc, loss_sum), _ = lax.scan(
+                    micro, (fab.init_accum_partitioned(play),
+                            jnp.zeros((), jnp.float32)), batch)
+                denom = accum_steps * (scale if scaling else 1.0)
+                g_shards = [a / denom for a in acc]
+                loss = loss_sum / accum_steps
             else:
                 acc, loss = accum_buckets(params, batch, scale, fab,
                                           play.layout, play=play)
@@ -538,11 +675,71 @@ def make_sharded_train_step(cfg, optimizer: Optimizer,
             out_specs=(P(), rep, shard_specs, P()), check_vma=False,
         )(params, batch, opt_state, t, scale)
 
+    def zero3_step_body(p_shards, batch, opt_state, t, scale):
+        """ZeRO-3 shard_map body over "pod": the train state holds ONLY
+        flat f32 param shard buckets (``zero3_param_template``, sharded
+        ``P("pod")`` — 1/W of the f32 model per device, doubling as the
+        precision master) plus the matching shard-bucket optimizer state.
+        Each boundary: per-bucket all-gather of the wire-dtype param image
+        (``unpartition``) → forward/backward on the full model →
+        reduce-scatter of the gradients → elementwise shard update.  The
+        full parameter tree is a TEMPORARY of the step, never part of the
+        state, so ``step_state_peak_bytes`` sheds the dense param term —
+        the W× shrink the roofline's ``opt_state_bytes(partitioned=True)``
+        already models for optimizer state, now applied to params too."""
+        from jax.sharding import PartitionSpec as P
+
+        mesh = compat.get_abstract_mesh()
+        npods = dict(mesh.shape).get("pod", 1)
+        play = PartitionedLayout.build(
+            BucketLayout.build(param_template, bucket_bytes, lead_axes=0),
+            npods)
+
+        def per_pod(p_shards, batch, opt_state, t, scale):
+            fab = Fabric(ShardComm("pod", npods), bucket_bytes,
+                         wire_dtype=wire)
+            params = fab.unpartition(p_shards, play)
+            if accum_steps == 1:
+                loss, grads = value_and_grad(params, batch, scale)
+                if scaling:
+                    grads = PR.unscale_grads(grads, scale)
+                g_shards, _ = fab.exchange_partitioned(grads, play)
+            else:
+                def micro(carry, mb):
+                    acc, loss_sum = carry
+                    loss, grads = value_and_grad(params, mb, scale)
+                    acc, _ = fab.accumulate_partitioned(acc, grads, play)
+                    return (acc, loss_sum + loss), None
+
+                (acc, loss_sum), _ = lax.scan(
+                    micro, (fab.init_accum_partitioned(play),
+                            jnp.zeros((), jnp.float32)), batch)
+                denom = accum_steps * (scale if scaling else 1.0)
+                g_shards = [a / denom for a in acc]
+                loss = loss_sum / accum_steps
+            ok = PR.tree_finite(g_shards).astype(jnp.float32) if scaling \
+                else jnp.ones((), jnp.float32)
+            ok = jax.lax.pmin(ok, "pod") if scaling else ok
+            new_shards, new_opt = optimizer.update(g_shards, opt_state,
+                                                   p_shards, t)
+            return (jax.lax.pmean(loss, "pod"), new_shards, new_opt, ok)
+
+        bspec = P("pod") if accum_steps == 1 else P(None, "pod")
+        batch_specs = jax.tree.map(lambda _: bspec, batch)
+        p_specs = jax.tree.map(lambda _: P("pod"), p_shards)
+        o_specs = jax.tree.map(lambda _: P("pod"), opt_state)
+        return compat.shard_map(
+            per_pod, mesh=mesh, axis_names={"pod"},
+            in_specs=(p_specs, batch_specs, o_specs, P(), P()),
+            out_specs=(P(), p_specs, o_specs, P()), check_vma=False,
+        )(p_shards, batch, opt_state, t, scale)
+
     def step(state, batch):
         sstate = state.get("loss_scale")
         scale = sstate["scale"] if scaling else jnp.ones((), jnp.float32)
         if partition_grads:
-            loss, params, opt_state, ok = zero1_step_body(
+            body = zero3_step_body if zero_stage >= 3 else zero1_step_body
+            loss, params, opt_state, ok = body(
                 state["params"], batch, state["opt_state"], state["step"],
                 scale)
             finite = ok > 0.5

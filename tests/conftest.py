@@ -28,6 +28,13 @@ def pytest_configure(config):
         "§11) — rule positives/negatives, report-schema validation and "
         "the LINT.json artifact check; CI runs `pytest -m lint` as its "
         "own matrix entry, and the marks also run in plain tier-1")
+    config.addinivalue_line(
+        "markers",
+        "tp: tensor-parallelism tier (models/tensor_parallel.py, "
+        "DESIGN.md §12) — split/unsplit round-trip, bitwise forward and "
+        "sub-layer backward vs the blocked reference, the \"tp\" "
+        "collective contract and its HLO budget; CI runs `pytest -m tp` "
+        "as its own matrix entry, and the marks also run in plain tier-1")
 
 
 @pytest.fixture(scope="session")

@@ -308,7 +308,7 @@ def test_result_constructor_guards():
 
 
 @pytest.mark.parametrize("tamper,msg", [
-    (lambda r: r.pop("summary"), "missing top-level"),
+    (lambda r: r.pop("summary"), "missing section"),
     (lambda r: r["meta"].pop("workers"), "meta missing"),
     (lambda r: r["meta"].update(schema=2), "unsupported schema"),
     (lambda r: r.update(cells=[]), "empty cell list"),

@@ -1,0 +1,107 @@
+"""Coverage for launch/mesh.py and launch/diagnose.py.
+
+The production mesh is a FUNCTION parameterised by ``tp_degree`` so the
+planner can trade DP against TP at a fixed device count; the diagnose
+tool accepts an injected small mesh so its HLO collective accounting
+runs on a CPU container.  Plus the unknown-config contract: every
+launch CLI exits 2 listing the valid names.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+def test_production_mesh_rejects_bad_tp_degree():
+    # validation fires before any device is touched
+    for bad in (0, -1, 3, 5, 512):
+        with pytest.raises(ValueError, match="divide 256"):
+            make_production_mesh(tp_degree=bad)
+
+
+def test_roofline_constants_are_v5e():
+    assert PEAK_FLOPS_BF16 == 197e12
+    assert HBM_BW == 819e9
+    assert ICI_BW == 50e9
+
+
+def test_production_mesh_tp_degree_trades_axes():
+    out = _run("""
+        from repro.launch.mesh import make_mesh, make_production_mesh
+        for tp, dp in ((16, 16), (4, 64), (1, 256)):
+            m = make_production_mesh(tp_degree=tp)
+            assert dict(m.shape) == {"data": dp, "model": tp}, m.shape
+        m = make_production_mesh(multi_pod=True, tp_degree=8)
+        assert dict(m.shape) == {"pod": 2, "data": 32, "model": 8}
+        # the test/example passthrough keeps arbitrary axes
+        assert dict(make_mesh((4,), ("data",)).shape) == {"data": 4}
+        print("MESH_OK")
+    """, devices=512)
+    assert "MESH_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# diagnose with an injected small mesh
+# ---------------------------------------------------------------------------
+def test_top_collectives_on_injected_mesh():
+    """``mesh=`` bypasses the 512-device production env: the collective
+    accounting runs on a (2, 2) data×model mesh, and raising the ZeRO
+    stage surfaces the reduce-scatter wire in the ranking."""
+    out = _run("""
+        from repro.launch.diagnose import top_collectives
+        from repro.core.jax_compat import make_mesh
+
+        mesh = make_mesh((2, 2), ("data", "model"))
+        rows = top_collectives("gemma3-1b", "train_4k", mesh=mesh)
+        assert rows, "no collectives found in the lowered step"
+        types = {base for _, base, _ in rows}
+        assert types & {"all-reduce", "all-gather", "reduce-scatter"}, types
+        # ZeRO-3's sharded step partitions over the "pod" axis
+        mesh3 = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        rows3 = top_collectives("gemma3-1b", "train_4k", mesh=mesh3,
+                                zero_stage=3)
+        types3 = {base for _, base, _ in rows3}
+        assert "reduce-scatter" in types3, types3
+        print("DIAG_OK", sorted(types), sorted(types3))
+    """, devices=8)
+    assert "DIAG_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# unknown-config contract across the launch CLIs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("module", ["repro.launch.dryrun",
+                                    "repro.launch.lint",
+                                    "repro.launch.plan"])
+def test_unknown_config_exits_2_listing_names(module):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", module, "--arch", "no-such-model"],
+        capture_output=True, text=True, env=env, timeout=300)
+    assert out.returncode == 2, (out.returncode, out.stderr[-500:])
+    assert "valid names" in out.stderr
+    assert "qwen2-1.5b" in out.stderr

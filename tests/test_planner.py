@@ -1,0 +1,188 @@
+"""Auto-parallelism planner tests (launch/planner.py, DESIGN.md §12).
+
+Covers the candidate model (valid TP degrees, launchability, baseline
+membership), the committed ``PLAN.json`` artifact (schema, exact
+re-derivation, large-config margins, LINT cross-check), tamper
+detection, and the CLI exit codes.
+"""
+
+import copy
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs.base import get_config
+from repro.launch import planner as PL
+from repro.launch.specs import SHAPES
+
+pytestmark = pytest.mark.tp
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PLAN = os.path.join(ROOT, "PLAN.json")
+SHAPE = SHAPES["train_4k"]
+
+
+def _cli(*args):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.plan", *args],
+        capture_output=True, text=True, env=env, timeout=300)
+
+
+# ---------------------------------------------------------------------------
+# candidate space
+# ---------------------------------------------------------------------------
+def test_tp_valid_degrees_divide_all_split_axes():
+    cfg = get_config("deepseek-67b")
+    degs = PL.tp_valid_degrees(cfg)
+    assert degs[0] == 1 and len(degs) > 1
+    for t in degs[1:]:
+        assert cfg.num_heads % t == 0
+        assert cfg.num_kv_heads % t == 0
+        assert cfg.d_ff % t == 0
+
+
+def test_tp_valid_degrees_edge_cases():
+    # gemma3-1b has a single KV head: nothing above 1 divides it
+    assert PL.tp_valid_degrees(get_config("gemma3-1b")) == (1,)
+    # SSM stacks have no row-parallel contraction to split
+    ssm = [n for n in PL.plan_configs()
+           if get_config(n).family == "ssm"]
+    for n in ssm:
+        assert PL.tp_valid_degrees(get_config(n)) == (1,)
+
+
+def test_candidate_cost_rejects_unlaunchable():
+    cfg = get_config("gemma3-1b")
+    # tp=2 is not a valid degree for kv=1
+    assert PL.candidate_cost(cfg, SHAPE, 2, 0, 1, "bf16") is None
+    # batch indivisible by dp*accum
+    cfg2 = get_config("qwen2-1.5b")
+    bad = SHAPES["train_4k"].__class__("odd", 128, 257, "train")
+    assert PL.candidate_cost(cfg2, bad, 1, 0, 4, "bf16") is None
+
+
+def test_candidate_cost_fields_and_monotone_state():
+    cfg = get_config("deepseek-67b")
+    by_stage = {z: PL.candidate_cost(cfg, SHAPE, 1, z, 1, "bf16")
+                for z in PL.ZERO_STAGES}
+    for z, c in by_stage.items():
+        assert c is not None
+        assert c["strategy"] == PL.ZERO_STRATEGY[z]
+        assert c["step_s"] > 0 and c["dp"] == PL.DEVICES
+    # each ZeRO stage strictly shrinks resident train state
+    states = [by_stage[z]["state_bytes"] for z in (0, 1, 3)]
+    assert states[0] > states[1] > states[2]
+    # and stage 3's parameter shrink is the W× roofline claim
+    assert by_stage[3]["state_bytes"] < by_stage[0]["state_bytes"] / 10
+
+
+def test_plan_is_deterministic_and_beats_baseline():
+    a = PL.plan_config("qwen2-moe-a2.7b")
+    b = PL.plan_config("qwen2-moe-a2.7b")
+    assert a == b
+    # baseline is IN the candidate set, so chosen can never lose to it
+    assert a["speedup_vs_dp"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# committed artifact
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def committed():
+    with open(PLAN) as f:
+        return json.load(f)
+
+
+def test_committed_plan_validates_with_lint_crosscheck(committed):
+    assert os.path.exists(os.path.join(ROOT, "LINT.json"))
+    rep = PL.validate_file(PLAN)  # auto-loads LINT.json alongside
+    assert rep["summary"]["configs"] == len(PL.plan_configs())
+    assert not rep["meta"]["smoke"]
+
+
+def test_committed_large_configs_clear_margin(committed):
+    by_name = {p["config"]: p for p in committed["plans"]}
+    for name in PL.LARGE_CONFIGS:
+        assert by_name[name]["speedup_vs_dp"] >= PL.LARGE_MARGIN, name
+
+
+def test_validate_rejects_tampered_cost(committed):
+    rep = copy.deepcopy(committed)
+    rep["plans"][0]["chosen"]["step_s"] *= 0.5
+    with pytest.raises(ValueError, match="re-derived"):
+        PL.validate(rep, "PLAN.json")
+
+
+def test_validate_rejects_bad_strategy_mapping(committed):
+    rep = copy.deepcopy(committed)
+    rep["plans"][0]["chosen"]["strategy"] = "gossip"
+    with pytest.raises(ValueError, match="strategy"):
+        PL.validate(rep, "PLAN.json")
+
+
+def test_validate_rejects_missing_config(committed):
+    rep = copy.deepcopy(committed)
+    dropped = rep["plans"].pop()
+    rep["summary"]["configs"] -= 1
+    with pytest.raises(ValueError, match="missing"):
+        PL.validate(rep, "PLAN.json")
+    assert dropped["config"]  # sanity: we really removed a plan
+
+
+def test_validate_rejects_failing_lint_cell(committed):
+    p0 = committed["plans"][0]
+    key = (p0["config"], p0["chosen"]["strategy"],
+           p0["chosen"]["precision"], p0["chosen"]["accum_steps"])
+    lint = {"cells": [{"config": key[0], "strategy": key[1],
+                       "precision": key[2], "accum": key[3],
+                       "rules": [{"status": "fail"}]}]}
+    with pytest.raises(ValueError, match="lint"):
+        PL.validate(copy.deepcopy(committed), "PLAN.json",
+                    lint_report=lint)
+
+
+def test_smoke_report_builds_and_validates(tmp_path):
+    rep = PL.build_report(smoke=True,
+                          timing_path=os.path.join(ROOT,
+                                                   "BENCH_timing.json"))
+    assert [p["config"] for p in rep["plans"]] == list(PL.SMOKE_CONFIGS)
+    PL.validate(rep, "PLAN.json")  # smoke skips the full-roster checks
+
+
+def test_compression_advisory_from_measured_bench():
+    adv = PL.compression_advisory(os.path.join(ROOT, "BENCH_timing.json"))
+    assert adv["source"] == "BENCH_timing.json"
+    # measured encode overhead puts breakeven far below the modeled ICI
+    # link, so the planner refuses to add a codec
+    assert 0 < adv["best_breakeven_gbps"] < adv["link_gbps"]
+    assert adv["compression_pays"] is False
+    # missing file degrades to "no evidence, no codec"
+    none = PL.compression_advisory("/nonexistent/timing.json")
+    assert none["source"] is None and none["compression_pays"] is False
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes
+# ---------------------------------------------------------------------------
+def test_cli_unknown_config_exits_2():
+    out = _cli("--arch", "nope-7b")
+    assert out.returncode == 2
+    assert "valid names" in out.stderr
+    assert "deepseek-67b" in out.stderr
+
+
+def test_cli_validate_committed_artifact():
+    out = _cli("--validate")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "OK" in out.stdout
+
+
+def test_cli_single_arch_plans():
+    out = _cli("--arch", "gemma3-1b")
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "gemma3-1b:" in out.stdout
