@@ -1,0 +1,368 @@
+"""Elastic fleet benchmark tier (ROADMAP item 4, DESIGN.md §13).
+
+Three measured claims behind the elastic layer, committed to
+``BENCH_elastic.json`` at the repo root:
+
+  * **resize** — the in-memory W → W′ ZeRO re-partition
+    (``launch/elastic.py::resize_state``) vs the checkpoint
+    save → ``restore(repartition=True)`` baseline, per ZeRO stage ×
+    optimizer × direction (4→2, 2→4).  Every row also re-proves the
+    bitwise contract (live result == checkpoint round-trip) and records
+    the roofline accounting: ``resize_moved_bytes`` (only owner-changed
+    spans move) vs ``checkpoint_roundtrip_bytes`` (every element is
+    written AND read).
+  * **recovery** — a W=4 fleet with a seeded mid-run kill: training must
+    continue on the survivors within the SAME boundary (state commits
+    only on success), and we record how many boundaries the surviving
+    fleet needs to reconverge to the pre-kill loss.
+  * **chaos_loss** — a full chaos schedule (slowdown → straggler
+    demotion → flake → kill → rejoin → restore → re-promotion) vs a
+    clean run of the same length: final-loss delta bounds the cost of
+    surviving the chaos.
+
+Smoke mode (``BENCH_ELASTIC_SMOKE=1`` or ``--smoke``) shrinks the
+problem and the horizons so CI can regenerate and re-validate the file
+in minutes; ``--validate`` checks the committed file against the schema
+(including the bitwise flags) and exits non-zero on violations.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:  # script invocation: benchmarks/ is sys.path[0]
+    sys.path.insert(0, ROOT)
+
+from benchmarks.common import emit, time_stats  # noqa: E402
+OUT = os.path.join(ROOT, "BENCH_elastic.json")
+
+STAGES = (1, 2, 3)
+OPTS = ("sgd", "adam")
+DIRECTIONS = ((4, 2), (2, 4))
+
+
+def _problem(smoke: bool):
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    d, h = (8, 12) if smoke else (32, 48)
+    params = {"w1": jnp.asarray(rng.standard_normal((d, h)), jnp.float32) * 0.2,
+              "b1": jnp.zeros((h,), jnp.float32),
+              "w2": jnp.asarray(rng.standard_normal((h, 1)), jnp.float32) * 0.2}
+    X = rng.standard_normal((8, 6, d)).astype(np.float32)
+    tw = rng.standard_normal((d, 1)).astype(np.float32)
+    Y = np.tanh(X @ tw)[..., 0].astype(np.float32)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        pred = (jnp.tanh(x @ p["w1"] + p["b1"]) @ p["w2"])[..., 0]
+        return jnp.mean((pred - y) ** 2)
+
+    def batch_fn(view, t):
+        idx = np.array([w % len(X) for w in view.members])
+        return (jnp.asarray(X[idx]), jnp.asarray(Y[idx]))
+
+    return params, loss_fn, batch_fn
+
+
+def _make_opt(name):
+    from repro.optim import adam, sgd
+    return sgd(0.05) if name == "sgd" else adam(1e-2)
+
+
+# ---------------------------------------------------------------------------
+# resize: in-memory vs checkpoint round-trip
+# ---------------------------------------------------------------------------
+def bench_resize(smoke: bool, iters: int, warmup: int):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.checkpoint import restore_checkpoint, save_checkpoint
+    from repro.core.comm import LocalComm
+    from repro.core.fabric import Fabric
+    from repro.core.strategies import get_strategy
+    from repro.launch.elastic import FleetView, resize_state
+    from repro.roofline.analysis import (checkpoint_roundtrip_bytes,
+                                         resize_moved_bytes)
+    from repro.train.loop import init_train_state, make_replica_train_step
+
+    bb = 4 * 64
+    params0, loss_fn, batch_fn = _problem(smoke)
+    rows = []
+    for stage in STAGES:
+        for oname in OPTS:
+            for (wf, wt) in DIRECTIONS:
+                opt = _make_opt(oname)
+                comm = LocalComm(wf)
+                strat = get_strategy(f"sync_zero{stage}", bucket_bytes=bb)
+                state = init_train_state(comm.replicate(params0), opt,
+                                         strat, comm)
+                step = make_replica_train_step(loss_fn, opt, strat, comm,
+                                               donate=False, bucket_bytes=bb)
+                vf = FleetView(0, tuple(range(wf)))
+                for _ in range(2):  # non-trivial optimizer state
+                    state, _ = step(state, batch_fn(vf, 0))
+                vt = FleetView(1, tuple(range(wt)))
+                owns = bool(getattr(strat, "owns_params", False))
+                full = (strat.gather_params(state["params"], comm)
+                        if owns else state["params"])
+                play = Fabric(comm, bb).partitioned_layout(full)
+
+                def prime_old():
+                    # ZeRO-3 records ONE layout; re-prime the old width so
+                    # each timed resize starts from the pre-resize state
+                    jax.eval_shape(
+                        lambda p: strat.init_params(p, comm), full)
+
+                def live_resize():
+                    if owns:
+                        prime_old()
+                    return resize_state(state, vf, vt, strategy=strat,
+                                        bucket_bytes=bb)
+
+                live = live_resize()
+                med, _, _ = time_stats(live_resize, iters=iters,
+                                       warmup=warmup)
+
+                # checkpoint-restore baseline over the same state
+                tree = {"opt_state": state["opt_state"]}
+                if owns:
+                    tree["param_shards"] = state["params"]
+                comm2 = LocalComm(wt)
+                strat2 = get_strategy(f"sync_zero{stage}", bucket_bytes=bb)
+                t2 = init_train_state(comm2.replicate(params0), opt,
+                                      strat2, comm2)
+                template = {"opt_state": jax.tree.map(jnp.zeros_like,
+                                                      t2["opt_state"])}
+                if owns:
+                    template["param_shards"] = jax.tree.map(
+                        jnp.zeros_like, t2["params"])
+                tmpdir = tempfile.mkdtemp(prefix="bench_elastic_")
+
+                def ckpt_roundtrip():
+                    save_checkpoint(tmpdir, 0, tree, partition=play.spec())
+                    return restore_checkpoint(tmpdir, 0, template,
+                                              repartition=True)
+
+                restored = ckpt_roundtrip()
+                cmed, _, _ = time_stats(ckpt_roundtrip, iters=iters,
+                                        warmup=warmup)
+
+                bitwise = all(
+                    np.array_equal(np.asarray(a), np.asarray(b))
+                    for a, b in zip(jax.tree.leaves(live["opt_state"]),
+                                    jax.tree.leaves(restored["opt_state"])))
+                if owns:
+                    bitwise = bitwise and all(
+                        np.array_equal(np.asarray(a), np.asarray(b))
+                        for a, b in zip(
+                            jax.tree.leaves(live["params"]),
+                            jax.tree.leaves(restored["param_shards"])))
+
+                sf = {"sgd": 0, "adam": 2}[oname] + (1 if owns else 0)
+                sizes = play.layout.bucket_sizes
+                rows.append({
+                    "zero_stage": stage, "optimizer": oname,
+                    "w_from": wf, "w_to": wt,
+                    "resize_ms": med / 1e3, "ckpt_ms": cmed / 1e3,
+                    "speedup": cmed / max(med, 1e-9),
+                    "bitwise": bool(bitwise),
+                    "moved_bytes": resize_moved_bytes(
+                        sizes, wf, wt, state_floats=max(sf, 1)),
+                    "ckpt_bytes": checkpoint_roundtrip_bytes(
+                        sizes, state_floats=max(sf, 1)),
+                })
+                emit(f"elastic/resize/z{stage}/{oname}/{wf}to{wt}",
+                     med, f"ckpt_us={cmed:.0f};bitwise={bitwise}")
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# recovery: seeded kill mid-run
+# ---------------------------------------------------------------------------
+def bench_recovery(smoke: bool):
+    from repro.core.chaos import ChaosEvent, ChaosSchedule
+    from repro.launch.elastic import ElasticFleet
+
+    params0, loss_fn, batch_fn = _problem(smoke)
+    horizon = 12 if smoke else 30
+    kill_t = 5
+    sched = ChaosSchedule((ChaosEvent(kill_t, "kill", 2),))
+    fleet = ElasticFleet(params0, loss_fn, _make_opt("adam"), workers=4,
+                         chaos=sched, backoff_s=0.0, retries=2)
+    logs = fleet.run(horizon, batch_fn)
+    loss_pre = logs[kill_t - 1]["loss"]
+    reconverge = next((lg["t"] - kill_t for lg in logs[kill_t:]
+                       if lg["loss"] <= loss_pre), None)
+    kill_log = logs[kill_t]
+    row = {
+        "workers": 4, "kill_step": kill_t, "horizon": horizon,
+        "continued": len(logs) == horizon and kill_log["size_after"] == 3,
+        "recovered_within_boundary": kill_log["size_after"] == 3
+            and kill_log["attempts"] > 0,
+        "boundaries_to_reconverge": reconverge,
+        "loss_pre_kill": loss_pre, "loss_final": logs[-1]["loss"],
+        "epoch_final": fleet.view.epoch,
+    }
+    emit("elastic/recovery/kill", 0.0,
+         f"reconverge={reconverge};final={row['loss_final']:.4f}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# chaos vs clean loss
+# ---------------------------------------------------------------------------
+def bench_chaos_loss(smoke: bool):
+    from repro.core.chaos import ChaosEvent, ChaosSchedule, FleetClock
+    from repro.core.staleness import StragglerPolicy
+    from repro.launch.elastic import ElasticFleet
+
+    params0, loss_fn, batch_fn = _problem(smoke)
+    horizon = 14 if smoke else 40
+    sched = ChaosSchedule((
+        ChaosEvent(2, "slowdown", 1, 4.0),
+        ChaosEvent(4, "flake", 0),
+        ChaosEvent(6, "kill", 3),
+        ChaosEvent(10, "restore", 1),
+        ChaosEvent(12, "rejoin", 3),
+    ))
+    policy = StragglerPolicy(patience=2, recovery=3)
+
+    def run(chaos):
+        fleet = ElasticFleet(
+            params0, loss_fn, _make_opt("adam"), workers=4,
+            straggler_policy=policy, resync_every=4,
+            chaos=chaos, clock=FleetClock(4, seed=7),
+            backoff_s=0.0, retries=2)
+        return fleet.run(horizon, batch_fn), fleet
+
+    clean_logs, _ = run(None)
+    chaos_logs, fleet = run(sched)
+    demoted = sum(len(lg.get("demoted", ())) for lg in chaos_logs)
+    promoted = sum(len(lg.get("promoted", ())) for lg in chaos_logs)
+    clean, chaos = clean_logs[-1]["loss"], chaos_logs[-1]["loss"]
+    initial = clean_logs[0]["loss"]
+    row = {
+        "horizon": horizon, "workers": 4,
+        "loss_initial": initial,
+        "clean_final_loss": clean, "chaos_final_loss": chaos,
+        "delta": chaos - clean,
+        # delta as a fraction of the loss the clean run burned down —
+        # well-conditioned even when both runs converge to ~0 (where a
+        # raw final-loss ratio blows up)
+        "delta_norm": (chaos - clean) / max(initial - clean, 1e-12),
+        "ratio": chaos / max(clean, 1e-12),
+        "demoted_events": demoted, "promoted_events": promoted,
+        "epoch_final": fleet.view.epoch,
+        "schedule": sched.spec(),
+    }
+    emit("elastic/chaos_loss", 0.0,
+         f"delta_norm={row['delta_norm']:.4f};demoted={demoted}")
+    return row
+
+
+def run(smoke=None):
+    import jax
+
+    if smoke is None:
+        smoke = os.environ.get("BENCH_ELASTIC_SMOKE", "") not in ("", "0")
+    iters, warmup = (3, 1) if smoke else (10, 2)
+    report = {
+        "meta": {
+            "schema": 1,
+            "backend": jax.default_backend(),
+            "device": str(jax.devices()[0].device_kind),
+            "jax": jax.__version__,
+            "smoke": bool(smoke),
+            "iters": iters,
+            "warmup": warmup,
+            "note": ("chaos/recovery runs are fully seeded (replayable); "
+                     "resize timings are host+device wall clock on the "
+                     "stacked simulator"),
+        },
+        "resize": bench_resize(smoke, iters, warmup),
+        "recovery": bench_recovery(smoke),
+        "chaos_loss": bench_chaos_loss(smoke),
+    }
+    with open(OUT, "w") as f:
+        json.dump(report, f, indent=1)
+    emit("elastic/report", 0.0, f"out={os.path.basename(OUT)};smoke={smoke}")
+    return report
+
+
+def validate(path=OUT):
+    """Schema + contract check for BENCH_elastic.json; raises ValueError on
+    violation (CI runs this against the committed and regenerated file)."""
+    from benchmarks.common import (check, load_report, require_keys,
+                                   require_positive, require_sections)
+    label = "BENCH_elastic.json"
+    report = load_report(path, "python benchmarks/run.py elastic")
+    require_sections(report, ("meta", "resize", "recovery", "chaos_loss"),
+                     label)
+    require_keys(report["meta"], ("backend", "smoke"), "meta")
+    covered = set()
+    for row in report["resize"]:
+        require_keys(row, ("zero_stage", "optimizer", "w_from", "w_to",
+                           "resize_ms", "ckpt_ms", "bitwise",
+                           "moved_bytes", "ckpt_bytes"), "resize row")
+        require_positive(row, ("resize_ms", "ckpt_ms"), "resize row")
+        check(row["bitwise"] is True,
+              f"resize row z{row['zero_stage']}/{row['optimizer']}/"
+              f"{row['w_from']}to{row['w_to']}: live resize is NOT bitwise "
+              "equal to the checkpoint round-trip")
+        check(row["moved_bytes"] <= row["ckpt_bytes"],
+              "in-memory resize moves more bytes than the checkpoint "
+              "round-trip baseline — accounting is broken")
+        covered.add((row["zero_stage"], row["optimizer"],
+                     (row["w_from"], row["w_to"])))
+    want = {(s, o, d) for s in STAGES for o in OPTS for d in DIRECTIONS}
+    missing = want - covered
+    check(not missing, f"resize coverage incomplete: missing {sorted(missing)}")
+    rec = report["recovery"]
+    require_keys(rec, ("continued", "recovered_within_boundary",
+                       "boundaries_to_reconverge", "loss_final"), "recovery")
+    check(rec["continued"] is True,
+          "recovery: training did not continue on the surviving fleet")
+    check(rec["recovered_within_boundary"] is True,
+          "recovery: the kill boundary did not complete on the survivors")
+    check(rec["boundaries_to_reconverge"] is not None
+          and 0 <= rec["boundaries_to_reconverge"] <= 8,
+          f"recovery: reconvergence took "
+          f"{rec['boundaries_to_reconverge']!r} boundaries (want <= 8)")
+    cl = report["chaos_loss"]
+    require_keys(cl, ("loss_initial", "clean_final_loss",
+                      "chaos_final_loss", "delta_norm",
+                      "demoted_events"), "chaos_loss")
+    require_positive(cl, ("loss_initial", "clean_final_loss",
+                          "chaos_final_loss"), "chaos_loss")
+    check(cl["delta_norm"] <= 0.25,
+          f"chaos_loss: chaos run gave back {cl['delta_norm']:.2f} of the "
+          "clean run's loss reduction (want <= 0.25)")
+    check(cl["demoted_events"] >= 1,
+          "chaos_loss: the slowdown never triggered a straggler demotion")
+    return report
+
+
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--validate", action="store_true",
+                    help="check the committed artifact and exit")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args(argv)
+    if args.validate:
+        validate()
+        meta = json.load(open(OUT))["meta"]
+        print(f"{os.path.basename(OUT)}: OK — smoke={meta['smoke']}")
+        return
+    run(smoke=args.smoke or None)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_roofline     — dry-run roofline table (deliverable g)
   bench_timing       — measured wall-clock tier (DESIGN.md §9)
   bench_serving      — paged-KV serving load benchmark (DESIGN.md §10)
+  bench_elastic      — elastic resize / chaos recovery tier (DESIGN.md §13)
 """
 
 from __future__ import annotations
@@ -27,7 +28,8 @@ if _ROOT not in sys.path:
 
 # run order; each entry is benchmarks/bench_<name>.py
 MODULES = ("strategies", "compression", "consistency", "staleness",
-           "scaling", "ablation", "roofline", "timing", "serving")
+           "scaling", "ablation", "roofline", "timing", "serving",
+           "elastic")
 
 
 def main() -> None:

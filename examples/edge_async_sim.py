@@ -1,7 +1,14 @@
 """The paper's edge scenario (§1, §3): loosely-coupled heterogeneous
-workers where communication is costly — hierarchical strategy with
-complete synchronization inside each "site" and partial (gossip)
-communication across sites, plus 1-bit compression on the slow tier.
+workers where communication is costly — in two acts.
+
+Act 1: hierarchical strategy with complete synchronization inside each
+"site" and partial (gossip) communication across sites.
+
+Act 2 (DESIGN.md §13): the same edge fleet under CHAOS — a seeded
+fault schedule (slowdown → straggler demotion → kill → graceful
+degradation → rejoin) driven through the elastic controller, printing
+the per-boundary event log.  Edge workers don't just communicate
+loosely; they disappear.
 
     PYTHONPATH=src python examples/edge_async_sim.py
 """
@@ -10,7 +17,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config
 from repro.core import strategies as ST
@@ -65,3 +71,53 @@ for t in range(STEPS):
 print("\nintra-site replicas consistent (complete sync tier); "
       "cross-site divergence bounded by gossip mixing — the paper's edge "
       "deployment story.")
+
+# ---------------------------------------------------------------------------
+# Act 2: the chaos rig — the fleet survives the schedule, not just the math
+# ---------------------------------------------------------------------------
+from repro.core.chaos import ChaosEvent, ChaosSchedule, FleetClock  # noqa: E402
+from repro.core.staleness import StragglerPolicy  # noqa: E402
+from repro.launch.elastic import ElasticFleet  # noqa: E402
+
+print("\n--- chaos rig: elastic fleet under a seeded fault schedule ---")
+CHAOS_STEPS, W = 24, 4
+schedule = ChaosSchedule((
+    ChaosEvent(3, "slowdown", 1, 5.0),   # worker 1 turns straggler
+    ChaosEvent(7, "flake", 0),           # one transient exchange failure
+    ChaosEvent(10, "kill", 3),           # worker 3 dies mid-boundary
+    ChaosEvent(14, "restore", 1),        # worker 1 recovers speed
+    ChaosEvent(18, "rejoin", 3),         # worker 3 comes back
+))
+
+
+def chaos_batch_fn(view, t):
+    # batches keyed by STABLE worker id: a resize regenerates the rows
+    # for exactly the members present this boundary
+    toks = jnp.stack([sample_batch(dcfg, w, t) for w in view.members])
+    return toks
+
+
+fleet = ElasticFleet(base, loss_fn, adam(3e-3), workers=W,
+                     straggler_policy=StragglerPolicy(patience=2,
+                                                      recovery=2),
+                     resync_every=4, chaos=schedule,
+                     clock=FleetClock(W, jitter=0.0, seed=0),
+                     retries=2, backoff_s=1e-4)
+for _ in range(CHAOS_STEPS):
+    lg = fleet.run_boundary(chaos_batch_fn)
+    note = "; ".join(
+        [f"{e['kind']}(w{e['worker']})" for e in lg["events"]]
+        + ([f"demoted {lg['demoted']}"] if "demoted" in lg else [])
+        + ([f"promoted {lg['promoted']}"] if "promoted" in lg else [])
+        + ([f"DROPPED {lg['dropped']} after {lg['attempts']} attempts"]
+           if "dropped" in lg else [])
+        + ([f"retried x{lg['attempts']}"]
+           if lg["attempts"] and "dropped" not in lg else []))
+    print(f"boundary {lg['t']:2d} epoch {lg['epoch_after']} "
+          f"W={lg['size_after']} loss {lg['loss']:.4f}"
+          + (f"  [{note}]" if note else ""))
+
+print(f"\nfleet finished all {CHAOS_STEPS} boundaries: membership epoch "
+      f"{fleet.view.epoch}, final W={fleet.view.size}, demoted="
+      f"{list(fleet.view.demoted)} — every fault in the schedule was "
+      "absorbed at an optimizer boundary (DESIGN.md §13).")

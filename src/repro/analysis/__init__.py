@@ -11,6 +11,7 @@ validates like the bench tiers.
 """
 
 from repro.analysis.report import (  # noqa: F401
+    CELL_RULES,
     RULES,
     Cell,
     RuleResult,
@@ -24,6 +25,7 @@ from repro.analysis.rules import (  # noqa: F401
     collective_budget,
     cond_gating,
     donation_aliasing,
+    elastic_demotion_gated,
     fused_dispatch,
     gating_ratio,
     iter_jaxpr_collectives,

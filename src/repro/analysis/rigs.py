@@ -359,3 +359,33 @@ def fused_artifacts(params, precision: str, workers: int = WORKERS,
 
     jaxpr = jax.make_jaxpr(ex)(stacked, dgc)
     return {"jaxpr_text": str(jaxpr), "codec_calls": calls["n"]}
+
+
+# ---------------------------------------------------------------------------
+# elastic rig: the demoted-tier resync path (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+def elastic_artifacts(workers: int = WORKERS, resync_every: int = 4) -> dict:
+    """Trace ONLY the demoted-tier resync of ``launch/elastic.py`` over a
+    ShardComm with a TRACED boundary counter and participation mask — the
+    jaxpr the ``elastic-demotion-gated`` rule walks.
+
+    The masked boundary exchange itself is intentionally UNGATED (it
+    fires every boundary); the contract is that the resync's consensus
+    pull — the only collective a demoted worker's recovery adds — sits
+    under ``lax.cond``.  ``make_jaxpr(axis_env=...)`` keeps the rig
+    device-free: the rule is jaxpr-level, no mesh compile needed."""
+    from repro.launch.elastic import demoted_resync
+
+    comm = ShardComm("pod", workers)
+    fab = Fabric(comm, 4 * 64)
+    params = {"w": jax.ShapeDtypeStruct((8, 16), jnp.float32),
+              "b": jax.ShapeDtypeStruct((16,), jnp.float32)}
+
+    def body(p, mask, t):
+        out, _ = demoted_resync(fab, p, mask, t, resync_every)
+        return out
+
+    jaxpr = jax.make_jaxpr(body, axis_env=[("pod", workers)])(
+        params, jax.ShapeDtypeStruct((workers,), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32))
+    return {"jaxpr": jaxpr, "resync_every": resync_every}

@@ -204,6 +204,25 @@ def cond_gating(jaxpr, gated: bool) -> RuleResult:
                    "under_cond": sum(1 for _, u in hits if u)})
 
 
+def elastic_demotion_gated(jaxpr) -> RuleResult:
+    """The straggler-demotion resync (launch/elastic.py::demoted_resync)
+    traced with a *traced* boundary counter must keep its consensus
+    collective inside a ``lax.cond`` branch.  Demotion exists to REDUCE a
+    straggler's wire cost — a ``jnp.where``-style resync would ship the
+    pull every boundary and silently restore the full sync traffic for
+    the whole fleet.  Runs on ``rigs.elastic_artifacts`` (the ShardComm
+    trace of the resync path alone), not the per-cell sweep matrix."""
+    hits = list(iter_jaxpr_collectives(jaxpr))
+    findings = [f"collective {name!r} outside any lax.cond branch"
+                for name, under in hits if not under]
+    if not hits:
+        findings.append("no collective found at all — the gated resync "
+                        "was traced away")
+    return result("elastic-demotion-gated", findings,
+                  {"collectives": len(hits),
+                   "under_cond": sum(1 for _, u in hits if u)})
+
+
 def gating_ratio(bytes_ungated: float, bytes_gated: float,
                  sync_every: int, slack: float = 0.75) -> RuleResult:
     """Wire-byte side of the gating contract: summed over sync_every

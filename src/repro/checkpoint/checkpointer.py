@@ -6,7 +6,13 @@ caller-provided sharding template, so a restore can re-shard onto a
 different mesh — the "redistribute training" requirement of the paper's
 enterprise story (§1).
 
-Two guarantees added for the production path:
+Guarantees for the production path:
+
+  * **Integrity** — every save records a per-leaf crc32 in meta.json;
+    ``restore_checkpoint``/``verify_checkpoint`` check it and name the
+    corrupt leaf, and ``latest_valid_step`` resumes past corrupt or
+    partial steps (the ``--resume auto`` primitive).  Stray ``*.tmp``
+    files from killed mid-save writers are ignored but reported.
 
   * **Atomic writes** — the ``.npz`` and ``meta.json`` are written to a
     temp name and ``os.replace``d into place, so a crash mid-save can
@@ -40,9 +46,16 @@ from __future__ import annotations
 import json
 import os
 import re
+import warnings
+import zlib
 
 import jax
 import numpy as np
+
+# ONE proven re-shard implementation serves both the checkpoint restore
+# below and the live elastic resize (launch/elastic.py) — see
+# core/resharding.py; re-exported here for the original public API.
+from repro.core.resharding import reshard_bucket  # noqa: F401
 
 
 def _prod(shape):
@@ -97,8 +110,11 @@ def save_checkpoint(ckpt_dir: str, step: int, tree,
     widened to f32 on disk regardless (see module docstring)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     arrays = {}
+    checksums = {}
     for path, leaf in _flatten(tree):
-        arrays[path] = _widen_for_disk(np.asarray(jax.device_get(leaf)))
+        arr = _widen_for_disk(np.asarray(jax.device_get(leaf)))
+        arrays[path] = arr
+        checksums[path] = zlib.crc32(np.ascontiguousarray(arr).tobytes())
     fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
     tmp = fname + ".tmp"
     with open(tmp, "wb") as f:  # file handle: savez won't append a suffix
@@ -109,6 +125,9 @@ def save_checkpoint(ckpt_dir: str, step: int, tree,
     # partitioned checkpoint
     meta = read_meta(ckpt_dir)
     meta["latest"] = step
+    # per-leaf crc32 over the on-disk (widened) bytes: restore verifies
+    # and names the corrupt leaf instead of silently loading garbage
+    meta.setdefault("checksums", {})[str(step)] = checksums
     if partition is not None:
         meta.setdefault("partitions", {})[str(step)] = partition
     if precision is not None:
@@ -133,10 +152,30 @@ def read_precision(ckpt_dir: str, step: int) -> dict | None:
     return read_meta(ckpt_dir).get("precision", {}).get(str(step))
 
 
+def stray_tmp_files(ckpt_dir: str) -> list:
+    """Leftover ``*.tmp`` files from a writer killed mid-save.
+
+    The atomic protocol (write tmp → ``os.replace``) guarantees these are
+    never the "latest" checkpoint — they are garbage to ignore, but worth
+    REPORTING: a recurring stray means writers are dying mid-save."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(f for f in os.listdir(ckpt_dir) if f.endswith(".tmp"))
+
+
+def _warn_stray_tmp(ckpt_dir: str):
+    stray = stray_tmp_files(ckpt_dir)
+    if stray:
+        warnings.warn(
+            f"{ckpt_dir}: ignoring {len(stray)} stray tmp file(s) left by a "
+            f"killed mid-save writer: {', '.join(stray)}", stacklevel=3)
+
+
 def latest_step(ckpt_dir: str):
     steps = []
     if not os.path.isdir(ckpt_dir):
         return None
+    _warn_stray_tmp(ckpt_dir)
     for f in os.listdir(ckpt_dir):
         m = re.match(r"ckpt_(\d+)\.npz$", f)
         if m:
@@ -144,18 +183,56 @@ def latest_step(ckpt_dir: str):
     return max(steps) if steps else None
 
 
-def reshard_bucket(arr: np.ndarray, true_size: int, target_shape) -> np.ndarray:
-    """Re-shard one saved ZeRO-1 bucket to a new partition.
+def verify_checkpoint(ckpt_dir: str, step: int):
+    """Integrity-check one step; returns None if clean, else a reason str.
 
-    Works for both layouts because shard chunks are stored in rank order:
-    a stacked simulator leaf (W, C) and a global flat leaf (padded,) both
-    flatten to chunk_0‖chunk_1‖…‖old_padding.  Drop the old padding
-    (``true_size`` live elements), zero-pad for the new worker count, and
-    reshape to the template."""
-    flat = np.asarray(arr).reshape(-1)[:true_size]
-    out = np.zeros((_prod(target_shape),), flat.dtype)
-    out[:true_size] = flat
-    return out.reshape(target_shape)
+    Checks every ``.npz`` member decompresses AND matches the per-leaf
+    crc32 recorded in meta at save time (older checkpoints without a
+    checksum record only get the decompression check)."""
+    fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    if not os.path.exists(fname):
+        return f"ckpt_{step:08d}.npz missing"
+    cks = read_meta(ckpt_dir).get("checksums", {}).get(str(step))
+    try:
+        with np.load(fname) as data:
+            for k in data.files:
+                try:
+                    arr = data[k]
+                except Exception as e:
+                    return f"leaf {k!r} unreadable ({e})"
+                if cks is not None and k in cks:
+                    got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+                    if got != cks[k]:
+                        return (f"leaf {k!r} corrupt (crc32 {got:#010x} != "
+                                f"recorded {cks[k]:#010x})")
+            if cks is not None:
+                missing = sorted(set(cks) - set(data.files))
+                if missing:
+                    return f"leaves missing from archive: {missing}"
+    except Exception as e:
+        return f"archive unreadable ({e})"
+    return None
+
+
+def latest_valid_step(ckpt_dir: str):
+    """Newest step that passes :func:`verify_checkpoint` (None if none).
+
+    Corrupt/partial steps are skipped with a warning naming the reason —
+    the ``--resume auto`` primitive: a run killed mid-save or a bit-rotted
+    latest step falls back to the newest intact one."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    _warn_stray_tmp(ckpt_dir)
+    steps = sorted((int(m.group(1)) for m in
+                    (re.match(r"ckpt_(\d+)\.npz$", f)
+                     for f in os.listdir(ckpt_dir)) if m), reverse=True)
+    for step in steps:
+        reason = verify_checkpoint(ckpt_dir, step)
+        if reason is None:
+            return step
+        warnings.warn(f"{ckpt_dir}: skipping step {step}: {reason}",
+                      stacklevel=2)
+    return None
 
 
 def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None,
@@ -172,8 +249,22 @@ def restore_checkpoint(ckpt_dir: str, step: int, template, shardings=None,
     the save; a mismatched bucket count is rejected rather than silently
     zero-filling state."""
     fname = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    _warn_stray_tmp(ckpt_dir)
     data = np.load(fname)
-    flat = {k: data[k] for k in data.files}
+    cks = read_meta(ckpt_dir).get("checksums", {}).get(str(step))
+    flat = {}
+    for k in data.files:
+        try:
+            flat[k] = data[k]
+        except Exception as e:
+            raise ValueError(
+                f"{fname}: leaf {k!r} is corrupt — unreadable ({e})") from e
+        if cks is not None and k in cks:
+            got = zlib.crc32(np.ascontiguousarray(flat[k]).tobytes())
+            if got != cks[k]:
+                raise ValueError(
+                    f"{fname}: leaf {k!r} is corrupt — crc32 {got:#010x} "
+                    f"does not match the recorded {cks[k]:#010x}")
     if repartition:
         part = read_meta(ckpt_dir).get("partitions", {}).get(str(step))
         if part is None:

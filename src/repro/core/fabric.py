@@ -176,6 +176,13 @@ class PartitionedLayout:
         return {"n_parts": self.n_parts,
                 "bucket_sizes": list(self.layout.bucket_sizes)}
 
+    def with_parts(self, n_parts: int) -> "PartitionedLayout":
+        """Re-pad the SAME bucket layout for a different worker count —
+        the elastic-resize primitive (launch/elastic.py): bucket contents
+        (``layout.bucket_sizes``) are invariant across a W → W′
+        transition, only the per-bucket padding and chunk width change."""
+        return PartitionedLayout.build(self.layout, n_parts)
+
 
 # ---------------------------------------------------------------------------
 # wire accounting (codec itself lives in core/compression.py)

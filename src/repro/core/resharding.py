@@ -1,0 +1,94 @@
+"""Worker-count re-partitioning for ZeRO shard-bucket state.
+
+ONE implementation serves both resize paths (DESIGN.md §13):
+
+  * the **checkpoint path** — ``restore_checkpoint(repartition=True)``
+    re-shards saved bucket leaves against a template built at a
+    different worker count, and
+  * the **live path** — ``launch/elastic.py::resize_state`` re-partitions
+    the in-memory optimizer/parameter shards when the fleet resizes at
+    an optimizer boundary, with no disk round-trip.
+
+Both call :func:`reshard_bucket` (lifted out of
+``checkpoint/checkpointer.py``, which re-exports it), so the online
+resize is bitwise-equal to a save → restore round-trip by construction.
+
+Shard chunks are stored in rank order: a stacked simulator leaf (W, C)
+and a global flat leaf (padded,) both flatten to
+chunk_0 ‖ chunk_1 ‖ … ‖ old_padding, so "drop the old padding, zero-pad
+for the new worker count, reshape" is the whole transition.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _prod(shape):
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def reshard_bucket(arr: np.ndarray, true_size: int, target_shape) -> np.ndarray:
+    """Re-shard one saved ZeRO bucket to a new partition.
+
+    Works for both layouts because shard chunks are stored in rank order:
+    a stacked simulator leaf (W, C) and a global flat leaf (padded,) both
+    flatten to chunk_0‖chunk_1‖…‖old_padding.  Drop the old padding
+    (``true_size`` live elements), zero-pad for the new worker count, and
+    reshape to the template."""
+    flat = np.asarray(arr).reshape(-1)[:true_size]
+    out = np.zeros((_prod(target_shape),), flat.dtype)
+    out[:true_size] = flat
+    return out.reshape(target_shape)
+
+
+def _is_bucket_list(node, n_buckets: int) -> bool:
+    return (n_buckets > 0 and isinstance(node, (list, tuple))
+            and len(node) == n_buckets
+            and all(getattr(x, "ndim", 0) in (1, 2)
+                    and hasattr(x, "dtype") for x in node))
+
+
+def _reshard_one(x, true_size: int, n_new: int):
+    padded = -(-true_size // n_new) * n_new
+    # stacked simulator shard (W, C) keeps its 2-d layout at the new
+    # width; a global flat shard (padded,) stays flat
+    target = (n_new, padded // n_new) if x.ndim == 2 else (padded,)
+    out = reshard_bucket(np.asarray(x), true_size, target)
+    return jnp.asarray(out) if isinstance(x, jax.Array) else out
+
+
+def repartition_tree(tree, bucket_sizes, n_new: int):
+    """Re-partition every shard-bucket list in a ZeRO state tree W → W′.
+
+    A *shard-bucket list* is a list/tuple whose length equals
+    ``len(bucket_sizes)`` and whose elements are all 1-d (flat) or 2-d
+    (stacked ``(W, C)``) arrays — exactly the layout ``Fabric.shard_params``
+    and the ZeRO ``init_opt`` hooks produce.  Each bucket ``i`` carries
+    ``bucket_sizes[i]`` live elements (the ``PartitionedLayout.spec()``
+    record); the rest is padding and is dropped/regrown per worker count.
+
+    Only apply to ZeRO shard-state trees (opt_state of ``sync_zero*``,
+    ZeRO-3 parameter shards): any other list that happens to match the
+    bucket count would be resharded too.  Non-list leaves (scalars,
+    dense arrays outside a bucket list) pass through untouched — dense
+    replica-stacked state is resized by row instead
+    (``launch/elastic.py::resize_dense_tree``)."""
+    nb = len(bucket_sizes)
+
+    def go(node):
+        if isinstance(node, dict):
+            return {k: go(v) for k, v in node.items()}
+        if _is_bucket_list(node, nb):
+            return type(node)(_reshard_one(x, n, n_new)
+                              for x, n in zip(node, bucket_sizes))
+        if isinstance(node, (list, tuple)):
+            return type(node)(go(v) for v in node)
+        return node
+
+    return go(tree)

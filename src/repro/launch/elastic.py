@@ -1,0 +1,460 @@
+"""Elastic fault-tolerant fleet training (DESIGN.md §13).
+
+The launch layer's answer to preemptible fleets: worker failure,
+preemption, slowness, and (re)join are first-class *boundary events*
+instead of run-killers.  Four pieces:
+
+  * :class:`FleetView` — epoch-numbered membership.  Workers keep stable
+    global ids; ranks are their index in the sorted member tuple, so
+    rank reassignment after any transition is deterministic and needs no
+    coordinator state.  Every transition bumps ``epoch``; membership only
+    changes AT optimizer boundaries (between exchanges), never inside one.
+  * :func:`resize_state` — the in-memory, online W → W′ re-partition.
+    ZeRO shard-bucket state goes through ``core/resharding.py`` — the
+    SAME ``reshard_bucket`` the checkpoint restore uses, so the live
+    resize is bitwise-equal to a ``save → restore(repartition=True)``
+    round-trip with no disk round-trip.  Dense replica-stacked state is
+    row-gathered (survivors keep their row, joiners copy the sync
+    consensus row).
+  * :func:`make_elastic_replica_step` — a dense-sync boundary step that
+    takes the fleet's participation mask as a TRACED input: straggler
+    demotion/promotion flips mask entries, never retraces.  Demoted
+    workers keep taking LOCAL optimizer steps (the paper's loose-coupling
+    tier) and are pulled back to the sync consensus by a ``lax.cond``-
+    gated resync the static-analysis tier verifies
+    (``elastic-demotion-gated`` rule).
+  * :class:`ElasticFleet` — the boundary-driven controller wiring it all
+    to the chaos harness (``core/chaos.py``) and the straggler detector
+    (``core/staleness.py``): graceful preempt/rejoin resizes, bounded
+    retry + exponential backoff on exchange failure, and graceful
+    degradation — workers still failing after the retries are dropped
+    from the next epoch and the surviving fleet re-runs the boundary
+    from the last consistent state (state commits only on success).
+
+Scope: the stacked-replica simulator (plain ``LocalComm``, lead axis 0).
+Delivery-buffer strategies (ssp/downpour ring buffers keyed by schedule
+slot, not worker) are not elastically resizable and fail loudly in
+``resize_dense_tree``.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chaos import ChaosSchedule, ExchangeFailure, FleetClock
+from repro.core.comm import LocalComm, ShardComm
+from repro.core.fabric import DEFAULT_BUCKET_BYTES, Fabric
+from repro.core.resharding import repartition_tree
+from repro.core.staleness import StragglerDetector, StragglerPolicy
+from repro.core.strategies import _gate
+
+
+# ---------------------------------------------------------------------------
+# membership
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FleetView:
+    """One epoch of fleet membership.
+
+    ``members`` are stable global worker ids (sorted); a worker's rank is
+    its index in the tuple — deterministic across every controller that
+    sees the same view, with no extra coordination.  ``demoted`` members
+    still hold a rank and a replica row but sit in the local-step tier
+    (mask 0).  Transitions return a NEW view with ``epoch + 1``."""
+
+    epoch: int
+    members: tuple
+    demoted: tuple = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "members", tuple(sorted(set(self.members))))
+        object.__setattr__(
+            self, "demoted",
+            tuple(sorted(set(self.demoted) & set(self.members))))
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+    def rank_of(self, worker) -> int:
+        return self.members.index(worker)
+
+    def mask(self) -> np.ndarray:
+        """(W,) f32 participation mask: 1 = sync tier, 0 = demoted."""
+        return np.array([0.0 if w in self.demoted else 1.0
+                         for w in self.members], np.float32)
+
+    def without(self, *workers) -> "FleetView":
+        return FleetView(self.epoch + 1,
+                         tuple(w for w in self.members if w not in workers),
+                         self.demoted)
+
+    def with_joined(self, *workers) -> "FleetView":
+        return FleetView(self.epoch + 1, self.members + tuple(workers),
+                         self.demoted)
+
+    def with_demoted(self, demoted) -> "FleetView":
+        return FleetView(self.epoch + 1, self.members, tuple(demoted))
+
+
+# ---------------------------------------------------------------------------
+# in-memory resize
+# ---------------------------------------------------------------------------
+def _row_index(old_view: FleetView, new_view: FleetView) -> np.ndarray:
+    """Old-row index for each new member: survivors keep their own row,
+    joiners copy the consensus row (the first surviving sync-tier member
+    — sync training keeps those rows identical, so the choice is exact,
+    not approximate)."""
+    common = [w for w in new_view.members if w in old_view.members]
+    if not common:
+        raise ValueError("resize with no surviving member — nothing to "
+                         "carry the fleet state across the transition")
+    sync_common = [w for w in common if w not in old_view.demoted]
+    consensus = old_view.rank_of((sync_common or common)[0])
+    return np.array([old_view.rank_of(w) if w in old_view.members
+                     else consensus for w in new_view.members])
+
+
+def resize_dense_tree(tree, old_view: FleetView, new_view: FleetView):
+    """Row-gather every stacked (W, …) leaf from the old view's rows to
+    the new view's.  Leaves without a leading worker axis are rejected —
+    that is what makes ssp/downpour delivery buffers fail loudly instead
+    of being silently corrupted."""
+    idx = jnp.asarray(_row_index(old_view, new_view))
+    w = old_view.size
+
+    def one(x):
+        if getattr(x, "ndim", 0) == 0 or x.shape[0] != w:
+            raise ValueError(
+                f"leaf with shape {getattr(x, 'shape', ())} has no leading "
+                f"worker axis of size {w} — not elastically resizable "
+                "(stacked replica-first layout required)")
+        return jnp.asarray(x)[idx]
+
+    return jax.tree.map(one, tree)
+
+
+def resize_state(state, old_view: FleetView, new_view: FleetView, *,
+                 strategy=None, bucket_bytes: int = DEFAULT_BUCKET_BYTES):
+    """Re-partition a train state in memory for a fleet transition.
+
+    ZeRO shard-bucket state (``sync_zero1/2`` opt shards, ``sync_zero3``
+    parameter shards) is re-sharded with ``core/resharding`` — bitwise
+    what a checkpoint save → ``restore(repartition=True)`` round-trip
+    produces, without touching disk.  Dense replica-stacked state is
+    row-gathered per :func:`resize_dense_tree`.  ``bucket_bytes`` must
+    match the strategy's own bucket layout (it is re-derived from the
+    full parameter tree, exactly like the save path derives its
+    ``partition=`` spec).
+
+    For ZeRO-3 the strategy's recorded :class:`PartitionedLayout` is
+    re-primed for the new worker count via an allocation-free
+    ``eval_shape`` of ``init_params`` — ``gather_params`` keeps working
+    after the resize."""
+    if old_view.members == new_view.members:
+        return dict(state)
+    comm_old = LocalComm(old_view.size)
+    comm_new = LocalComm(new_view.size)
+    owns_params = bool(strategy is not None
+                       and getattr(strategy, "owns_params", False))
+    sharded_opt = bool(strategy is not None
+                       and getattr(strategy, "init_opt", None) is not None)
+
+    new_state = {"step": state["step"]}
+    sizes = None
+    if sharded_opt or owns_params:
+        full_old = (strategy.gather_params(state["params"], comm_old)
+                    if owns_params else state["params"])
+        play = Fabric(comm_old, bucket_bytes).partitioned_layout(full_old)
+        sizes = play.layout.bucket_sizes
+
+    if owns_params:
+        new_state["params"] = repartition_tree(state["params"], sizes,
+                                               new_view.size)
+        # re-prime the strategy's recorded layout for the new width so
+        # gather_params works post-resize; eval_shape allocates nothing
+        full_new = resize_dense_tree(full_old, old_view, new_view)
+        jax.eval_shape(lambda p: strategy.init_params(p, comm_new), full_new)
+    else:
+        new_state["params"] = resize_dense_tree(state["params"], old_view,
+                                                new_view)
+
+    new_state["opt_state"] = (
+        repartition_tree(state["opt_state"], sizes, new_view.size)
+        if sharded_opt
+        else resize_dense_tree(state["opt_state"], old_view, new_view))
+    new_state["comm_state"] = resize_dense_tree(state["comm_state"],
+                                                old_view, new_view)
+    if "master" in state:
+        new_state["master"] = resize_dense_tree(state["master"], old_view,
+                                                new_view)
+    if "loss_scale" in state:
+        new_state["loss_scale"] = state["loss_scale"]
+    return new_state
+
+
+# ---------------------------------------------------------------------------
+# masked boundary step (straggler tiers)
+# ---------------------------------------------------------------------------
+def _member_scalar(comm, mask):
+    """This worker's mask entry: the replicated (W,) vector itself on the
+    stacked simulator (it aligns with the lead axis), the rank's scalar
+    under shard_map."""
+    if isinstance(comm, ShardComm):
+        return jnp.take(mask, comm.worker_index())
+    return mask
+
+
+def _bcast(m, x, comm):
+    if isinstance(comm, ShardComm):
+        return m
+    return m.reshape(m.shape + (1,) * (x.ndim - 1))
+
+
+def masked_exchange(fab: Fabric, grads, mask):
+    """Sync-tier mean with local-tier passthrough.
+
+    Sync members (mask 1) receive sum(mask·g)/n_sync — with an all-ones
+    mask this is bitwise the dense all-mean at power-of-two W.  Demoted
+    members (mask 0) keep their LOCAL gradient: they still take optimizer
+    steps, just without waiting on (or slowing down) the collective."""
+    comm = fab.comm
+    m = _member_scalar(comm, mask)
+    nsync = jnp.maximum(jnp.sum(mask), 1.0)
+    weighted = jax.tree.map(
+        lambda g: g.astype(jnp.float32) * _bcast(m, g, comm), grads)
+    summed = fab.all_sum(weighted)
+
+    def blend(s, g):
+        gb = _bcast(m, g, comm)
+        return gb * (s / nsync) + (1.0 - gb) * g.astype(jnp.float32)
+
+    g_eff = jax.tree.map(blend, summed, grads)
+    return g_eff, fab.metrics(fab.flat_bytes(grads))
+
+
+def demoted_resync(fab: Fabric, params, mask, t, resync_every: int):
+    """Cond-gated recovery pull for the local tier.
+
+    Every ``resync_every`` boundaries the demoted rows are reset to the
+    sync-tier consensus, so a re-promoted worker rejoins from fleet state
+    rather than its drifted local weights.  The consensus collective sits
+    UNDER ``lax.cond`` — on non-resync boundaries no bytes move, which is
+    exactly what the ``elastic-demotion-gated`` lint rule proves on this
+    function's jaxpr (demotion must REDUCE a straggler's wire cost, not
+    smuggle it back in every boundary)."""
+    comm = fab.comm
+
+    def pull(p):
+        m = _member_scalar(comm, mask)
+        nsync = jnp.maximum(jnp.sum(mask), 1.0)
+        weighted = jax.tree.map(
+            lambda x: x.astype(jnp.float32) * _bcast(m, x, comm), p)
+        consensus = jax.tree.map(lambda s: s / nsync, fab.all_sum(weighted))
+        return jax.tree.map(
+            lambda x, c: (_bcast(m, x, comm) * x.astype(jnp.float32)
+                          + (1.0 - _bcast(m, x, comm)) * c).astype(x.dtype),
+            p, consensus)
+
+    do = (t + 1) % resync_every == 0
+    return _gate(do, pull, params), do
+
+
+def _masked_divergence(params, mask):
+    """Max |x − sync_mean| over sync rows — 0 when the sync tier agrees."""
+    n = jnp.maximum(jnp.sum(mask), 1.0)
+
+    def one(x):
+        x = x.astype(jnp.float32)
+        mb = mask.reshape((mask.shape[0],) + (1,) * (x.ndim - 1))
+        mean = jnp.sum(x * mb, axis=0, keepdims=True) / n
+        return jnp.max(jnp.abs((x - mean) * mb))
+
+    leaves = [one(x) for x in jax.tree.leaves(params)]
+    return jnp.max(jnp.stack(leaves)) if leaves else jnp.zeros(())
+
+
+def make_elastic_replica_step(loss_fn, optimizer, comm: LocalComm, *,
+                              resync_every: int = 8,
+                              bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                              jit: bool = True, donate: bool = True):
+    """Dense-sync boundary step with a traced participation mask.
+
+    ``step(state, batches, mask) -> (state, metrics)``: ``mask`` is a
+    (W,) f32 input, so demotion/promotion changes VALUES only — the per-
+    width compilation is reused across every tier change (retrace only on
+    an actual resize, where W changes)."""
+    fab = Fabric(comm, bucket_bytes)
+    grad_fn = jax.vmap(jax.value_and_grad(loss_fn))
+
+    def step(state, batches, mask):
+        loss, grads = grad_fn(state["params"], batches)
+        g_eff, m = masked_exchange(fab, grads, mask)
+        params, opt_state = optimizer.update(g_eff, state["opt_state"],
+                                             state["params"], state["step"])
+        params, did_resync = demoted_resync(fab, params, mask, state["step"],
+                                            resync_every)
+        new_state = {"params": params, "opt_state": opt_state,
+                     "comm_state": state["comm_state"],
+                     "step": state["step"] + 1}
+        metrics = dict(m)
+        metrics["loss"] = jnp.mean(loss)
+        metrics["resync"] = did_resync
+        metrics["sync_divergence"] = _masked_divergence(params, mask)
+        return new_state, metrics
+
+    return jax.jit(step, donate_argnums=(0,)) if (jit and donate) else (
+        jax.jit(step) if jit else step)
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+class ElasticFleet:
+    """Boundary-driven elastic controller over the stacked simulator.
+
+    Owns the :class:`FleetView`, the train state, and one compiled step
+    per fleet width.  ``run_boundary(batch_fn)`` executes one optimizer
+    boundary end-to-end: graceful membership events → straggler
+    demotion/promotion → the exchange attempt loop (bounded retry with
+    exponential backoff; persistent failures degrade to the survivors) →
+    the committed step.  ``batch_fn(view, t)`` must return stacked
+    (W, …) batches for the CURRENT view, so a mid-boundary resize
+    regenerates correct-width data.
+
+    State is committed only when the step succeeds: a boundary that loses
+    workers re-runs on the surviving fleet from the last consistent
+    state, so recovery completes within that same boundary."""
+
+    def __init__(self, params, loss_fn, optimizer, *, workers: int = 4,
+                 straggler_policy: StragglerPolicy | None = None,
+                 resync_every: int = 8,
+                 bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                 chaos: ChaosSchedule | None = None,
+                 clock: FleetClock | None = None,
+                 retries: int = 2, backoff_s: float = 0.01):
+        self.view = FleetView(0, tuple(range(workers)))
+        self.loss_fn, self.optimizer = loss_fn, optimizer
+        self.resync_every = resync_every
+        self.bucket_bytes = bucket_bytes
+        self.chaos = chaos
+        self.clock = clock or (FleetClock(workers) if straggler_policy
+                               else None)
+        self.retries, self.backoff_s = retries, backoff_s
+        self.detector = (StragglerDetector(range(workers), straggler_policy)
+                         if straggler_policy else None)
+        comm = LocalComm(workers)
+        stacked = comm.replicate(params)
+        self.state = {"params": stacked, "opt_state": optimizer.init(stacked),
+                      "comm_state": {}, "step": jnp.zeros((), jnp.int32)}
+        self._steps = {}
+        self.history = []
+
+    def _step_for(self, width: int):
+        if width not in self._steps:
+            self._steps[width] = make_elastic_replica_step(
+                self.loss_fn, self.optimizer, LocalComm(width),
+                resync_every=self.resync_every,
+                bucket_bytes=self.bucket_bytes)
+        return self._steps[width]
+
+    def resize(self, new_view: FleetView) -> None:
+        """Commit a membership transition at the current boundary."""
+        old = self.view
+        if new_view.members != old.members:
+            self.state = resize_state(self.state, old, new_view,
+                                      bucket_bytes=self.bucket_bytes)
+        if self.detector is not None:
+            for w in set(old.members) - set(new_view.members):
+                self.detector.drop(w)
+            for w in set(new_view.members) - set(old.members):
+                self.detector.add(w)
+        self.view = new_view
+
+    def _straggler_pass(self, events, log) -> None:
+        if self.clock is None:
+            return
+        self.clock.apply(events)
+        times = self.clock.boundary_times(self.view.members)
+        log["boundary_times"] = times
+        if self.detector is None:
+            return
+        self.detector.observe(times)
+        demote, promote = self.detector.to_demote(), self.detector.to_promote()
+        for w in demote:
+            self.detector.demote(w)
+        for w in promote:
+            self.detector.promote(w)
+        if demote or promote:
+            log["demoted"], log["promoted"] = demote, promote
+            self.resize(self.view.with_demoted(self.detector.demoted))
+
+    def _attempt_exchange(self, t: int, attempt: int, kills, flakes) -> None:
+        failed = set(kills) | (set(flakes) if attempt == 0 else set())
+        if failed:
+            raise ExchangeFailure(
+                f"boundary {t}: collective failed at attempt {attempt} "
+                f"for workers {sorted(failed)}",
+                workers=failed, transient=not kills)
+
+    def run_boundary(self, batch_fn) -> dict:
+        t = int(self.state["step"])
+        events = self.chaos.at(t) if self.chaos else []
+        log = {"t": t, "epoch": self.view.epoch, "size": self.view.size,
+               "events": [e.spec() for e in events], "attempts": 0,
+               "backoffs": []}
+        # announced transitions first: rejoin/preempt resize gracefully
+        joins = [e.worker for e in events
+                 if e.kind == "rejoin" and e.worker not in self.view.members]
+        if joins:
+            self.resize(self.view.with_joined(*joins))
+        pre = [e.worker for e in events
+               if e.kind == "preempt" and e.worker in self.view.members]
+        if pre:
+            self.resize(self.view.without(*pre))
+        self._straggler_pass(events, log)
+        # the exchange attempt loop: flakes clear on retry, kills exhaust
+        # the retries and degrade the fleet to the survivors
+        kills = {e.worker for e in events
+                 if e.kind == "kill" and e.worker in self.view.members}
+        flakes = {e.worker for e in events
+                  if e.kind == "flake" and e.worker in self.view.members}
+        attempt, backoff = 0, self.backoff_s
+        while True:
+            try:
+                self._attempt_exchange(t, attempt, kills, flakes)
+                break
+            except ExchangeFailure as e:
+                log["attempts"] += 1
+                if attempt >= self.retries:
+                    if not e.transient:
+                        # graceful degradation: drop the dead workers from
+                        # the next epoch and re-run on the survivors
+                        log["dropped"] = sorted(kills)
+                        self.resize(self.view.without(*kills))
+                        kills, flakes = set(), set()
+                        attempt, backoff = 0, self.backoff_s
+                        continue
+                    raise
+                log["backoffs"].append(backoff)
+                time.sleep(backoff)
+                backoff *= 2
+                attempt += 1
+        # the committed step, on whatever fleet survived
+        batches = batch_fn(self.view, t)
+        mask = jnp.asarray(self.view.mask())
+        self.state, metrics = self._step_for(self.view.size)(
+            self.state, batches, mask)
+        log["epoch_after"] = self.view.epoch
+        log["size_after"] = self.view.size
+        log["loss"] = float(metrics["loss"])
+        self.history.append(log)
+        return log
+
+    def run(self, n_boundaries: int, batch_fn) -> list:
+        return [self.run_boundary(batch_fn) for _ in range(n_boundaries)]

@@ -197,6 +197,19 @@ def zero1_state_shardings(opt_state_template, mesh, axis: str = "pod"):
     return jax.tree.map(to_sh, opt_state_template)
 
 
+def elastic_state_shardings(state_template, mesh, axis: str = "pod"):
+    """NamedShardings for a RESIZED ZeRO shard-state tree.
+
+    ``launch/elastic.py::resize_state`` re-pads every shard bucket for
+    the new worker count (``PartitionedLayout.with_parts``), so the
+    resized template keeps the zero1 invariant — flat f32 buckets whose
+    length is a multiple of the new ``axis`` size — and the same
+    partition rule applies verbatim.  Exists as its own entry point so
+    the production placement of a post-resize fleet is one call, not a
+    re-derivation of the zero1 rule at the call site."""
+    return zero1_state_shardings(state_template, mesh, axis)
+
+
 def param_shardings(params, mesh):
     names = set(mesh.axis_names)
 

@@ -143,6 +143,28 @@ def model_sds(cfg: ModelConfig):
     return jax.eval_shape(lambda: T.init_model(jax.random.PRNGKey(0), cfg))
 
 
+def elastic_partition_spec(cfg: ModelConfig, workers: int,
+                           bucket_bytes: int) -> dict:
+    """The ZeRO partition spec ({"n_parts", "bucket_sizes"}) of a config's
+    parameter tree at ``workers``, derived allocation-free via eval_shape.
+
+    This is THE identity an elastic transition preserves: ``bucket_sizes``
+    are invariant across a W → W′ resize (only ``n_parts`` and padding
+    change — ``PartitionedLayout.with_parts``), so the launch layer can
+    pre-compute resize cost (``roofline.resize_moved_bytes``) and the
+    post-resize placement (``sharding.elastic_state_shardings``) for any
+    candidate fleet size without touching device memory."""
+    from repro.core.comm import LocalComm
+    from repro.core.fabric import Fabric
+
+    sds = model_sds(cfg)
+    # partitioned_layout wants the replica-stacked view (lead axis = W)
+    stacked = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((workers,) + x.shape, x.dtype), sds)
+    fab = Fabric(LocalComm(workers), bucket_bytes)
+    return fab.partitioned_layout(stacked).spec()
+
+
 def param_shardings_sds(params_sds, mesh, mode: str = "tp"):
     from repro.launch.sharding import param_specs
 

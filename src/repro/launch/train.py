@@ -74,6 +74,12 @@ def build_argparser():
                          "with the ZeRO-1 shard-bucket update boundary)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", default=None, choices=["auto"],
+                    help="auto: resume from the latest VALID checkpoint in "
+                         "--ckpt-dir (corrupt/partial steps are verified "
+                         "against the per-leaf checksums and skipped); "
+                         "exit 2 with a one-line message when the dir has "
+                         "no valid step")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None, help="JSON metrics file")
     return ap
@@ -96,6 +102,53 @@ def strategy_from_args(args, policy=None):
     if policy is not None:
         kw["policy"] = policy
     return get_strategy(args.strategy, **kw)
+
+
+def resume_auto(ckpt_dir, state, strategy, comm, policy, strategy_name):
+    """Restore the newest valid checkpoint into ``state`` (in place).
+
+    Builds the restore template as a mirror of the save tree below (replica-0
+    params [+ master], shard-bucket opt state / ZeRO-3 param shards for the
+    sync_zero* strategies) and re-shards across worker counts when the save
+    recorded a partition spec.  Returns the restored step; exits 2 when the
+    dir holds no valid step or the checkpoint doesn't fit this run."""
+    import jax.numpy as jnp
+
+    from repro.checkpoint import (latest_valid_step, read_meta,
+                                  restore_checkpoint)
+    step0 = latest_valid_step(ckpt_dir)
+    if step0 is None:
+        print(f"--resume auto: no valid checkpoint step in {ckpt_dir!r}",
+              file=sys.stderr)
+        raise SystemExit(2)
+    owns = getattr(strategy, "owns_params", False)
+    full = strategy.gather_params(state["params"], comm) if owns \
+        else state["params"]
+    template = {"params": comm.replica(full, 0), "step": state["step"]}
+    if policy is not None and "master" in state:
+        template["master"] = comm.replica(state["master"], 0)
+    if strategy_name.startswith("sync_zero"):
+        template["opt_state"] = state["opt_state"]
+        if owns:
+            template["param_shards"] = state["params"]
+    has_part = str(step0) in read_meta(ckpt_dir).get("partitions", {})
+    try:
+        restored = restore_checkpoint(ckpt_dir, step0, template,
+                                      repartition=has_part)
+    except (KeyError, ValueError) as e:
+        print(f"--resume auto: checkpoint step {step0} does not match this "
+              f"run's strategy/layout ({e})", file=sys.stderr)
+        raise SystemExit(2)
+    if owns:
+        state["params"] = jax.tree.map(jnp.asarray, restored["param_shards"])
+    else:
+        state["params"] = comm.replicate(restored["params"])
+    if "master" in template:
+        state["master"] = comm.replicate(restored["master"])
+    if "opt_state" in template:
+        state["opt_state"] = jax.tree.map(jnp.asarray, restored["opt_state"])
+    state["step"] = jnp.asarray(restored["step"], jnp.int32)
+    return int(restored["step"])
 
 
 def main(argv=None):
@@ -157,11 +210,24 @@ def main(argv=None):
           f"prefetch_depth={args.prefetch_depth} "
           f"entropy_floor={bayes_entropy(dcfg):.3f}")
 
+    start_step = 0
+    if args.resume:
+        if not args.ckpt_dir:
+            print("--resume auto requires --ckpt-dir", file=sys.stderr)
+            raise SystemExit(2)
+        start_step = resume_auto(args.ckpt_dir, state, strategy, comm,
+                                 policy, args.strategy)
+        print(f"resumed from step {start_step} ({args.ckpt_dir})")
+
     history = []
     t0 = time.time()
     for t, batches in prefetch_batches(dcfg, args.workers, args.steps,
                                        accum_steps=args.accum_steps,
                                        depth=args.prefetch_depth):
+        if t < start_step:
+            # identical data stream to an uninterrupted run: boundaries
+            # before the restored step are consumed, not trained on
+            continue
         state, m = step_fn(state, batches)
         if t % args.log_every == 0 or t == args.steps - 1:
             rec = {"step": t, "loss": float(m["loss"]),

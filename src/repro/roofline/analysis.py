@@ -162,6 +162,48 @@ def opt_state_bytes(n_params: int, state_floats: int, w: int = 1,
     return total / w if partitioned else total
 
 
+def resize_moved_bytes(bucket_sizes, w_old: int, w_new: int,
+                       state_floats: int = 1, itemsize: int = 4) -> float:
+    """Exact bytes that change OWNER RANK in an in-memory W → W′ ZeRO
+    re-partition (launch/elastic.py::resize_state, DESIGN.md §13).
+
+    Shard chunks are rank-ordered: element ``i`` of a bucket with ``n``
+    live elements is owned by rank ``i // ceil(n/W)``.  It moves in the
+    resize iff its old and new owner ranks differ, so the cost is a
+    breakpoint walk over the two chunk grids — O(W + W′) per bucket, not
+    O(n).  ``state_floats`` counts the f32 state copies re-sharded (e.g.
+    2 for adam m+v, +1 if ZeRO-3 parameter shards ride along).
+
+    Contrast with :func:`checkpoint_roundtrip_bytes`: the checkpoint-
+    restore baseline always touches EVERY element twice (write + read),
+    while the in-memory path only moves the owner-changed span — for
+    W=4 → 2 that is at most half the elements, and a W → W no-op moves
+    zero."""
+    moved = 0
+    for n in bucket_sizes:
+        c_old = -(-n // w_old)
+        c_new = -(-n // w_new)
+        i = 0
+        while i < n:
+            ro, rn = i // c_old, i // c_new
+            nxt = min((ro + 1) * c_old, (rn + 1) * c_new, n)
+            if ro != rn:
+                moved += nxt - i
+            i = nxt
+    return float(moved * itemsize * state_floats)
+
+
+def checkpoint_roundtrip_bytes(bucket_sizes, state_floats: int = 1,
+                               itemsize: int = 4) -> float:
+    """Disk traffic of the resize-via-checkpoint baseline: every state
+    element is serialized once and parsed once (2×) regardless of how
+    few elements actually change owner — the overhead the online resize
+    (``resize_moved_bytes``) avoids, before even counting compression
+    CPU and the filesystem round-trip."""
+    n = sum(bucket_sizes)
+    return float(2 * n * itemsize * state_floats)
+
+
 def param_bytes(n_params: int, param_dtype: str = "float32", w: int = 1,
                 zero_stage: int = 0) -> float:
     """Working-parameter bytes per worker at the policy's ``param_dtype``

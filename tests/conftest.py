@@ -35,6 +35,14 @@ def pytest_configure(config):
         "sub-layer backward vs the blocked reference, the \"tp\" "
         "collective contract and its HLO budget; CI runs `pytest -m tp` "
         "as its own matrix entry, and the marks also run in plain tier-1")
+    config.addinivalue_line(
+        "markers",
+        "chaos: elastic fault-tolerance tier (launch/elastic.py, "
+        "core/chaos.py, DESIGN.md §13) — fleet-view membership, bitwise "
+        "in-memory ZeRO re-partitioning vs the checkpoint round-trip, "
+        "straggler demotion/promotion, and the seeded chaos controller "
+        "runs; CI runs `pytest -m chaos` as its own matrix entry, and "
+        "the marks also run in plain tier-1")
 
 
 @pytest.fixture(scope="session")

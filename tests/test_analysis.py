@@ -28,7 +28,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.analysis import (RULES, Cell, build_report, collective_budget,
+from repro.analysis import (CELL_RULES, RULES, Cell, build_report,
+                            collective_budget,
                             cond_gating, donation_aliasing, fused_dispatch,
                             gating_ratio, promotion_proof, result, retrace,
                             state_aliasing, tree_snapshot, validate,
@@ -284,7 +285,7 @@ def test_state_aliasing_flags_inplace_mutation():
 # ---------------------------------------------------------------------------
 def _mini_report():
     cells = [Cell("gemma3-1b", "sync", "f32", 1,
-                  [result(r, []) for r in RULES])]
+                  [result(r, []) for r in CELL_RULES])]
     return build_report(cells, {"backend": "cpu", "jax": jax.__version__,
                                 "smoke": True, "workers": 4})
 
@@ -294,7 +295,7 @@ def test_report_roundtrip_validates(tmp_path):
     validate(rep)
     p = tmp_path / "LINT.json"
     p.write_text(json.dumps(rep))
-    assert validate_file(str(p))["summary"]["pass"] == len(RULES)
+    assert validate_file(str(p))["summary"]["pass"] == len(CELL_RULES)
 
 
 def test_result_constructor_guards():

@@ -1,0 +1,563 @@
+"""Elastic fault-tolerance tier (DESIGN.md §13): fleet-view membership,
+bitwise in-memory ZeRO re-partitioning vs the checkpoint round-trip,
+straggler demotion, the chaos controller, and the `--resume auto` CLI."""
+
+import io
+import os
+import sys
+import warnings
+import zipfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (latest_step, latest_valid_step,
+                              restore_checkpoint, save_checkpoint,
+                              stray_tmp_files, verify_checkpoint)
+from repro.core.chaos import (ChaosEvent, ChaosSchedule, ExchangeFailure,
+                              FleetClock)
+from repro.core.comm import LocalComm, LocalHierComm
+from repro.core.fabric import Fabric
+from repro.core.staleness import StragglerDetector, StragglerPolicy
+from repro.core.strategies import get_strategy, hierarchical
+from repro.launch.elastic import (ElasticFleet, FleetView,
+                                  demoted_resync, make_elastic_replica_step,
+                                  masked_exchange, resize_dense_tree,
+                                  resize_state)
+from repro.optim import adam, sgd
+from repro.train.loop import (init_train_state, jit_cache_size,
+                              make_replica_train_step)
+
+pytestmark = pytest.mark.chaos
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if ROOT not in sys.path:
+    sys.path.insert(0, ROOT)  # the benchmarks/ package lives at repo root
+
+BB = 4 * 40  # small buckets → several unevenly padded buckets per tree
+
+
+def tiny_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.standard_normal((7, 9)), jnp.float32),
+            "b": jnp.zeros((9,), jnp.float32),
+            "v": jnp.asarray(rng.standard_normal((13,)), jnp.float32)}
+
+
+def tiny_loss(p, batch):
+    x, y = batch
+    h = jnp.tanh(x @ p["w"] + p["b"])
+    return jnp.mean((h @ p["v"][:9] - y) ** 2)
+
+
+def tiny_batches(w, t, seed=0):
+    rng = np.random.default_rng(seed * 1000 + t)
+    x = rng.standard_normal((w, 4, 7)).astype(np.float32)
+    y = rng.standard_normal((w, 4)).astype(np.float32)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+def batch_fn(view, t):
+    # keyed by stable worker id, so a resize regenerates the right rows
+    rng = np.random.default_rng(t)
+    x = rng.standard_normal((8, 4, 7)).astype(np.float32)
+    y = rng.standard_normal((8, 4)).astype(np.float32)
+    idx = np.array(view.members)
+    return jnp.asarray(x[idx]), jnp.asarray(y[idx])
+
+
+def assert_trees_bitwise(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# FleetView
+# ---------------------------------------------------------------------------
+def test_fleet_view_ranks_are_deterministic():
+    v = FleetView(0, (3, 1, 7, 1))
+    assert v.members == (1, 3, 7) and v.size == 3
+    assert [v.rank_of(w) for w in v.members] == [0, 1, 2]
+    # two controllers building the same view agree without coordination
+    assert FleetView(0, (7, 3, 1)).members == v.members
+
+
+def test_fleet_view_transitions_bump_epoch():
+    v = FleetView(0, (0, 1, 2, 3))
+    v2 = v.without(2)
+    assert v2.epoch == 1 and v2.members == (0, 1, 3)
+    v3 = v2.with_joined(5)
+    assert v3.epoch == 2 and v3.members == (0, 1, 3, 5)
+    v4 = v3.with_demoted((1,))
+    assert v4.epoch == 3 and v4.demoted == (1,)
+    np.testing.assert_array_equal(v4.mask(), [1.0, 0.0, 1.0, 1.0])
+    # demoted members that leave the fleet drop out of the demoted set
+    assert v4.without(1).demoted == ()
+
+
+def test_resize_with_no_survivor_raises():
+    with pytest.raises(ValueError, match="no surviving member"):
+        resize_dense_tree({"x": jnp.zeros((2, 3))},
+                          FleetView(0, (0, 1)), FleetView(1, (5, 6)))
+
+
+# ---------------------------------------------------------------------------
+# re-partition plumbing
+# ---------------------------------------------------------------------------
+def test_with_parts_keeps_bucket_sizes():
+    comm = LocalComm(4)
+    play = Fabric(comm, BB).partitioned_layout(comm.replicate(tiny_params()))
+    play2 = play.with_parts(2)
+    assert play.spec()["bucket_sizes"] == play2.spec()["bucket_sizes"]
+    assert play2.spec()["n_parts"] == 2
+
+
+def test_reshard_bucket_is_the_shared_implementation():
+    from repro.checkpoint import reshard_bucket as ckpt_impl
+    from repro.core.resharding import reshard_bucket as core_impl
+    assert ckpt_impl is core_impl
+
+
+@pytest.mark.parametrize("direction", [(4, 2), (2, 4)],
+                         ids=["shrink", "grow"])
+@pytest.mark.parametrize("opt_name", ["sgd", "adam"])
+@pytest.mark.parametrize("stage", [1, 2, 3])
+def test_resize_bitwise_vs_checkpoint_roundtrip(tmp_path, stage, opt_name,
+                                                direction):
+    """The tentpole contract: the in-memory resize IS the checkpoint
+    save → restore(repartition=True) round-trip, bitwise, with no disk."""
+    wf, wt = direction
+    opt = sgd(0.05) if opt_name == "sgd" else adam(1e-2)
+    comm = LocalComm(wf)
+    strat = get_strategy(f"sync_zero{stage}", bucket_bytes=BB)
+    state = init_train_state(comm.replicate(tiny_params()), opt, strat, comm)
+    step = make_replica_train_step(tiny_loss, opt, strat, comm,
+                                   donate=False, bucket_bytes=BB)
+    for t in range(2):  # make the optimizer state non-trivial
+        state, _ = step(state, tiny_batches(wf, t))
+
+    owns = bool(getattr(strat, "owns_params", False))
+    # checkpoint path FIRST: resize_state re-primes the ZeRO-3 layout to
+    # the new width, after which gather_params at the old width is gone
+    full = strat.gather_params(state["params"], comm) if owns \
+        else state["params"]
+    play = Fabric(comm, BB).partitioned_layout(full)
+    tree = {"opt_state": state["opt_state"]}
+    if owns:
+        tree["param_shards"] = state["params"]
+    save_checkpoint(str(tmp_path), 0, tree, partition=play.spec())
+
+    vf, vt = FleetView(0, tuple(range(wf))), FleetView(1, tuple(range(wt)))
+    live = resize_state(state, vf, vt, strategy=strat, bucket_bytes=BB)
+
+    comm2 = LocalComm(wt)
+    fresh = init_train_state(comm2.replicate(tiny_params()), opt,
+                             get_strategy(f"sync_zero{stage}",
+                                          bucket_bytes=BB), comm2)
+    template = {"opt_state": jax.tree.map(jnp.zeros_like,
+                                          fresh["opt_state"])}
+    if owns:
+        template["param_shards"] = jax.tree.map(jnp.zeros_like,
+                                                fresh["params"])
+    restored = restore_checkpoint(str(tmp_path), 0, template,
+                                  repartition=True)
+    assert_trees_bitwise(live["opt_state"], restored["opt_state"])
+    if owns:
+        assert_trees_bitwise(live["params"], restored["param_shards"])
+        # the re-primed layout must keep gather_params working at W'
+        regathered = strat.gather_params(live["params"], comm2)
+        assert_trees_bitwise(comm2.replica(regathered, 0),
+                             comm.replica(full, 0))
+
+
+def test_resize_roundtrip_is_identity():
+    opt = adam(1e-2)
+    comm = LocalComm(4)
+    strat = get_strategy("sync_zero2", bucket_bytes=BB)
+    state = init_train_state(comm.replicate(tiny_params()), opt, strat, comm)
+    step = make_replica_train_step(tiny_loss, opt, strat, comm,
+                                   donate=False, bucket_bytes=BB)
+    state, _ = step(state, tiny_batches(4, 0))
+    v4, v2 = FleetView(0, (0, 1, 2, 3)), FleetView(1, (0, 1))
+    down = resize_state(state, v4, v2, strategy=strat, bucket_bytes=BB)
+    back = resize_state(down, v2, FleetView(2, (0, 1, 2, 3)),
+                        strategy=strat, bucket_bytes=BB)
+    assert_trees_bitwise(back["opt_state"], state["opt_state"])
+    # dense params: survivors keep their rows, joiners copy consensus —
+    # under sync training every row is identical, so this is the original
+    assert_trees_bitwise(back["params"], state["params"])
+
+
+def test_ssp_delivery_buffers_fail_loudly():
+    opt = sgd(0.05)
+    comm = LocalComm(3)
+    strat = get_strategy("ssp", staleness=5)
+    state = init_train_state(comm.replicate(tiny_params()), opt, strat, comm)
+    with pytest.raises(ValueError, match="not elastically resizable"):
+        resize_state(state, FleetView(0, (0, 1, 2)), FleetView(1, (0, 1)),
+                     strategy=strat, bucket_bytes=BB)
+
+
+# ---------------------------------------------------------------------------
+# masked boundary step
+# ---------------------------------------------------------------------------
+def test_all_ones_mask_is_bitwise_sync():
+    """Masked elastic stepping with everyone in the sync tier is BITWISE
+    the plain sync strategy (power-of-two W), across a resync boundary."""
+    opt = adam(1e-2)
+    comm = LocalComm(4)
+    strat = get_strategy("sync")
+    ref = init_train_state(comm.replicate(tiny_params()), opt, strat, comm)
+    ref_step = make_replica_train_step(tiny_loss, opt, strat, comm,
+                                       donate=False, bucket_bytes=BB)
+    ela = {"params": comm.replicate(tiny_params()),
+           "opt_state": opt.init(comm.replicate(tiny_params())),
+           "comm_state": {}, "step": jnp.zeros((), jnp.int32)}
+    ela_step = make_elastic_replica_step(tiny_loss, opt, comm,
+                                         resync_every=2, bucket_bytes=BB,
+                                         donate=False)
+    mask = jnp.ones((4,), jnp.float32)
+    resyncs = 0
+    for t in range(4):
+        b = tiny_batches(4, t)
+        ref, _ = ref_step(ref, b)
+        ela, m = ela_step(ela, b, mask)
+        resyncs += int(m["resync"])
+    assert resyncs == 2  # the gated pull DID fire and stayed bitwise
+    assert_trees_bitwise(ela["params"], ref["params"])
+    assert_trees_bitwise(ela["opt_state"], ref["opt_state"])
+
+
+def test_masked_exchange_keeps_local_gradients_for_demoted():
+    comm = LocalComm(4)
+    fab = Fabric(comm, BB)
+    rng = np.random.default_rng(3)
+    grads = {"g": jnp.asarray(rng.standard_normal((4, 5)), jnp.float32)}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    g_eff, m = masked_exchange(fab, grads, mask)
+    g = np.asarray(grads["g"])
+    want_sync = (g[0] + g[2] + g[3]) / 3.0
+    out = np.asarray(g_eff["g"])
+    np.testing.assert_allclose(out[0], want_sync, rtol=1e-6)
+    np.testing.assert_array_equal(out[1], g[1])  # local tier: untouched
+    np.testing.assert_allclose(out[3], want_sync, rtol=1e-6)
+    assert m["wire_bytes"] > 0
+
+
+def test_demoted_resync_pulls_to_consensus_only_at_boundary():
+    comm = LocalComm(4)
+    fab = Fabric(comm, BB)
+    params = {"p": jnp.asarray([[1.0], [9.0], [1.0], [1.0]], jnp.float32)}
+    mask = jnp.asarray([1.0, 0.0, 1.0, 1.0])
+    out, did = demoted_resync(fab, params, mask,
+                              jnp.asarray(2, jnp.int32), 4)
+    assert not bool(did)
+    np.testing.assert_array_equal(np.asarray(out["p"]),
+                                  np.asarray(params["p"]))
+    out, did = demoted_resync(fab, params, mask,
+                              jnp.asarray(3, jnp.int32), 4)
+    assert bool(did)
+    got = np.asarray(out["p"])
+    np.testing.assert_allclose(got[1], [1.0], rtol=1e-6)  # pulled back
+    np.testing.assert_array_equal(got[0], [1.0])  # sync rows untouched
+
+
+def test_elastic_demotion_gated_rule():
+    from repro.analysis import elastic_demotion_gated
+    from repro.analysis.rigs import elastic_artifacts
+    res = elastic_demotion_gated(elastic_artifacts()["jaxpr"])
+    assert res.status == "pass", res.findings
+    assert res.details["under_cond"] == res.details["collectives"] > 0
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+def test_straggler_detector_hysteresis():
+    det = StragglerDetector(range(4), StragglerPolicy(patience=2,
+                                                      recovery=2))
+    slow = {0: 1.0, 1: 4.0, 2: 1.0, 3: 1.0}
+    det.observe(slow)
+    assert det.to_demote() == []  # patience not yet reached
+    det.observe(slow)
+    assert det.to_demote() == [1]
+    det.demote(1)
+    fast = {0: 1.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    # EWMA + recovery hysteresis: re-promotion takes several clean rounds
+    for _ in range(6):
+        det.observe(fast)
+        for w in det.to_promote():
+            det.promote(w)
+    assert det.demoted == set()
+
+
+def test_fleet_clock_slowdown_and_restore():
+    clock = FleetClock(4, base_s=1.0, jitter=0.0, seed=0)
+    clock.apply([ChaosEvent(0, "slowdown", 2, 3.0)])
+    times = clock.boundary_times((0, 1, 2, 3))
+    assert times[2] == pytest.approx(3.0) and times[0] == pytest.approx(1.0)
+    clock.apply([ChaosEvent(1, "restore", 2)])
+    assert clock.boundary_times((2,))[2] == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------------
+# chaos schedule
+# ---------------------------------------------------------------------------
+def test_chaos_schedule_is_seeded_and_validated():
+    a = ChaosSchedule.from_seed(7, horizon=50, n_workers=4)
+    b = ChaosSchedule.from_seed(7, horizon=50, n_workers=4)
+    assert a.spec() == b.spec()
+    assert a.spec() != ChaosSchedule.from_seed(8, 50, 4).spec()
+    with pytest.raises(ValueError, match="kind"):
+        ChaosEvent(0, "meteor", 1)
+
+
+# ---------------------------------------------------------------------------
+# the controller
+# ---------------------------------------------------------------------------
+def test_fleet_survives_kill_within_one_boundary():
+    sched = ChaosSchedule((ChaosEvent(5, "kill", 2),))
+    fleet = ElasticFleet(tiny_params(), tiny_loss, adam(1e-2), workers=4,
+                         chaos=sched, retries=2, backoff_s=0.0,
+                         bucket_bytes=BB)
+    logs = fleet.run(8, batch_fn)
+    assert len(logs) == 8  # every boundary committed
+    k = logs[5]
+    assert k["size"] == 4 and k["size_after"] == 3  # degraded IN-boundary
+    assert k["attempts"] == 3 and k["dropped"] == [2]
+    assert fleet.view.members == (0, 1, 3)
+    assert fleet.view.epoch == 1
+    assert all(lg["size_after"] == 3 for lg in logs[5:])
+
+
+def test_flake_is_retried_without_resize():
+    sched = ChaosSchedule((ChaosEvent(3, "flake", 1),))
+    fleet = ElasticFleet(tiny_params(), tiny_loss, sgd(0.05), workers=4,
+                         chaos=sched, retries=2, backoff_s=1e-4,
+                         bucket_bytes=BB)
+    logs = fleet.run(5, batch_fn)
+    f = logs[3]
+    assert f["attempts"] == 1 and len(f["backoffs"]) == 1
+    assert f["size_after"] == 4 and fleet.view.epoch == 0  # no transition
+
+
+def test_transient_failure_exhausting_retries_is_surfaced():
+    # with ZERO retries a flake exhausts the budget on its first attempt;
+    # transient failures are surfaced (no resize), not silently degraded
+    sched = ChaosSchedule((ChaosEvent(0, "flake", 1),))
+    fleet = ElasticFleet(tiny_params(), tiny_loss, sgd(0.05), workers=2,
+                         chaos=sched, retries=0, backoff_s=0.0,
+                         bucket_bytes=BB)
+    with pytest.raises(ExchangeFailure) as e:
+        fleet.run_boundary(batch_fn)
+    assert e.value.transient and e.value.workers == frozenset({1})
+    assert fleet.view.size == 2  # nobody was dropped for a transient fault
+
+
+def test_preempt_and_rejoin_roundtrip():
+    sched = ChaosSchedule((ChaosEvent(2, "preempt", 1),
+                           ChaosEvent(5, "rejoin", 1)))
+    fleet = ElasticFleet(tiny_params(), tiny_loss, adam(1e-2), workers=4,
+                         chaos=sched, backoff_s=0.0, bucket_bytes=BB)
+    logs = fleet.run(7, batch_fn)
+    assert logs[2]["size_after"] == 3 and logs[5]["size_after"] == 4
+    assert fleet.view.epoch == 2
+    # the joiner copied the sync consensus row: all rows identical again
+    p = np.asarray(fleet.state["params"]["w"])
+    np.testing.assert_array_equal(p[1], p[0])
+
+
+def test_straggler_demotion_promotes_back_and_never_retraces():
+    sched = ChaosSchedule((ChaosEvent(1, "slowdown", 3, 6.0),
+                           ChaosEvent(6, "restore", 3)))
+    fleet = ElasticFleet(tiny_params(), tiny_loss, adam(1e-2), workers=4,
+                         straggler_policy=StragglerPolicy(patience=2,
+                                                          recovery=2),
+                         resync_every=4, chaos=sched,
+                         clock=FleetClock(4, jitter=0.0, seed=1),
+                         backoff_s=0.0, bucket_bytes=BB)
+    logs = fleet.run(16, batch_fn)
+    demoted = [lg["t"] for lg in logs if 3 in lg.get("demoted", ())]
+    promoted = [lg["t"] for lg in logs if 3 in lg.get("promoted", ())]
+    assert demoted and promoted and demoted[0] < promoted[0]
+    assert fleet.view.demoted == ()  # recovered by the end
+    # tier flips are mask VALUES: one compile for the whole 16-boundary
+    # run (membership never changed, so one width)
+    assert list(fleet._steps) == [4]
+    assert jit_cache_size(fleet._steps[4]) in (1, -1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity (satellites 1–2)
+# ---------------------------------------------------------------------------
+def _flip_member(npz_path, member):
+    """Bit-flip one array member inside the .npz zip (re-zips, so the
+    container stays readable and only the leaf payload is corrupt)."""
+    with zipfile.ZipFile(npz_path) as z:
+        blobs = {n: z.read(n) for n in z.namelist()}
+    raw = bytearray(blobs[member])
+    raw[-1] ^= 0xFF  # flip data bytes at the tail, not the npy header
+    blobs[member] = bytes(raw)
+    buf = io.BytesIO()
+    with zipfile.ZipFile(buf, "w", zipfile.ZIP_STORED) as z:
+        for n, b in blobs.items():
+            z.writestr(n, b)
+    with open(npz_path, "wb") as f:
+        f.write(buf.getvalue())
+
+
+def test_checksum_catches_bitflip_and_names_the_leaf(tmp_path):
+    tree = {"a": jnp.arange(6.0), "b": {"c": jnp.ones((3, 3))}}
+    save_checkpoint(str(tmp_path), 0, tree)
+    assert verify_checkpoint(str(tmp_path), 0) is None
+    _flip_member(str(tmp_path / "ckpt_00000000.npz"), "b.c.npy")
+    reason = verify_checkpoint(str(tmp_path), 0)
+    assert reason is not None and "b.c" in reason and "crc32" in reason
+    with pytest.raises(ValueError, match=r"leaf 'b\.c' is corrupt"):
+        restore_checkpoint(str(tmp_path), 0,
+                           jax.tree.map(jnp.zeros_like, tree))
+
+
+def test_latest_valid_step_skips_corrupt_steps(tmp_path):
+    tree = {"a": jnp.arange(6.0)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    save_checkpoint(str(tmp_path), 2, tree)
+    _flip_member(str(tmp_path / "ckpt_00000002.npz"), "a.npy")
+    assert latest_step(str(tmp_path)) == 2  # newest on disk...
+    with pytest.warns(UserWarning, match="skipping step 2"):
+        assert latest_valid_step(str(tmp_path)) == 1  # ...newest VALID
+    _flip_member(str(tmp_path / "ckpt_00000001.npz"), "a.npy")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert latest_valid_step(str(tmp_path)) is None
+
+
+def test_stray_tmp_files_are_ignored_and_reported(tmp_path):
+    save_checkpoint(str(tmp_path), 3, {"a": jnp.arange(4.0)})
+    (tmp_path / "ckpt_00000009.npz.tmp").write_bytes(b"partial write")
+    assert stray_tmp_files(str(tmp_path)) == ["ckpt_00000009.npz.tmp"]
+    with pytest.warns(UserWarning, match="stray tmp file"):
+        assert latest_step(str(tmp_path)) == 3  # tmp never counts
+    with pytest.warns(UserWarning, match="stray tmp file"):
+        restore_checkpoint(str(tmp_path), 3, {"a": jnp.zeros((4,))})
+
+
+# ---------------------------------------------------------------------------
+# --resume auto CLI (satellite 3)
+# ---------------------------------------------------------------------------
+def _cli(tmp_path, steps, extra=()):
+    from repro.launch import train
+    return train.main([
+        "--arch", "qwen2-1.5b", "--reduced", "--workers", "2",
+        "--zero-stage", "1", "--steps", str(steps), "--seq-len", "16",
+        "--batch-per-worker", "2", "--log-every", "1",
+        "--ckpt-dir", str(tmp_path / "ck"), *extra])
+
+
+def test_resume_auto_continues_from_latest_valid(tmp_path, capsys):
+    h1 = _cli(tmp_path, 2)
+    h2 = _cli(tmp_path, 4, extra=("--resume", "auto"))
+    out = capsys.readouterr().out
+    assert "resumed from step 2" in out
+    assert [r["step"] for r in h2] == [2, 3]  # restored steps skipped
+    assert h1[-1]["step"] == 1
+
+
+def test_resume_auto_exits_2_when_no_valid_step(tmp_path, capsys):
+    (tmp_path / "empty").mkdir()
+    from repro.launch import train
+    with pytest.raises(SystemExit) as e:
+        train.main(["--arch", "qwen2-1.5b", "--reduced", "--workers", "2",
+                    "--steps", "2", "--seq-len", "16",
+                    "--batch-per-worker", "2",
+                    "--ckpt-dir", str(tmp_path / "empty"),
+                    "--resume", "auto"])
+    assert e.value.code == 2
+    assert "no valid checkpoint step" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# hierarchical determinism (satellite 4)
+# ---------------------------------------------------------------------------
+def test_hierarchical_runs_are_bitwise_deterministic():
+    def one_run():
+        comm = LocalHierComm(2, 2)
+        strat = hierarchical(get_strategy("sync"),
+                             get_strategy("gossip", mix_every=2))
+        opt = adam(1e-2)
+        base = tiny_params(seed=5)
+        params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (2, 2) + x.shape).copy(), base)
+        state = {"params": params, "opt_state": opt.init(params),
+                 "comm_state": strat.init(params, comm),
+                 "step": jnp.zeros((), jnp.int32)}
+
+        @jax.jit
+        def step(state, batches):
+            _, grads = jax.vmap(jax.vmap(jax.value_and_grad(tiny_loss)))(
+                state["params"], batches)
+            p, o, c, _ = strat.update(state["params"], grads,
+                                      state["opt_state"],
+                                      state["comm_state"], state["step"],
+                                      opt, comm)
+            return {"params": p, "opt_state": o, "comm_state": c,
+                    "step": state["step"] + 1}
+
+        for t in range(6):
+            x, y = tiny_batches(4, t, seed=9)
+            state = step(state, (x.reshape(2, 2, 4, 7),
+                                 y.reshape(2, 2, 4)))
+        return state
+
+    a, b = one_run(), one_run()
+    assert_trees_bitwise(a["params"], b["params"])
+    assert_trees_bitwise(a["opt_state"], b["opt_state"])
+
+
+# ---------------------------------------------------------------------------
+# roofline + launch accounting
+# ---------------------------------------------------------------------------
+def test_resize_moved_bytes_matches_bruteforce():
+    from repro.roofline.analysis import (checkpoint_roundtrip_bytes,
+                                         resize_moved_bytes)
+    for n, wo, wn in [(100, 4, 2), (100, 2, 4), (97, 4, 3), (5, 4, 2),
+                      (64, 8, 8)]:
+        c_old, c_new = -(-n // wo), -(-n // wn)
+        brute = sum(1 for i in range(n) if i // c_old != i // c_new)
+        got = resize_moved_bytes([n], wo, wn, state_floats=1, itemsize=1)
+        assert got == brute, (n, wo, wn)
+    assert resize_moved_bytes([10], 4, 4) == 0  # same width: nothing moves
+    assert checkpoint_roundtrip_bytes([10, 7], state_floats=2,
+                                      itemsize=4) == 2 * 17 * 4 * 2
+
+
+def test_elastic_partition_spec_is_width_invariant():
+    from repro.configs import get_config
+    from repro.launch.specs import elastic_partition_spec
+    cfg = get_config("qwen2-1.5b").reduced()
+    s4 = elastic_partition_spec(cfg, 4, BB)
+    s2 = elastic_partition_spec(cfg, 2, BB)
+    assert s4["n_parts"] == 4 and s2["n_parts"] == 2
+    assert s4["bucket_sizes"] == s2["bucket_sizes"]  # THE invariant
+
+
+def test_elastic_state_shardings_partition_buckets():
+    from jax.sharding import Mesh, PartitionSpec as P
+    from repro.launch.sharding import elastic_state_shardings
+    mesh = Mesh(np.array(jax.devices()[:1]), ("pod",))
+    template = {"m": [jnp.zeros((8,)), jnp.zeros((12,))],
+                "t": jnp.zeros(())}
+    sh = elastic_state_shardings(template, mesh)
+    assert sh["m"][0].spec == P("pod")
+    assert sh["t"].spec == P()
+
+
+def test_bench_elastic_artifact_is_committed_and_valid():
+    import benchmarks.bench_elastic as be
+    report = be.validate()
+    assert report["meta"]["smoke"] is False  # commit the FULL artifact
+    assert len(report["resize"]) == 12
